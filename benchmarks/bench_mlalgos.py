@@ -1,0 +1,76 @@
+"""Paper Table: per-algorithm training throughput on the PIM grid vs the
+processor-centric ("CPU direct") formulation, all numeric variants.
+
+CSV columns: name, us_per_iteration, derived (rows/s | accuracy note).
+"""
+
+import jax
+import jax.numpy as jnp
+
+from benchmarks.common import time_fn, emit
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import (train_linreg, train_logreg, train_kmeans,
+                                train_dtree)
+from repro.configs.pim_ml import CONFIG as C
+
+
+def _one_step_timer(build_step, *args):
+    """Time one jitted PIM iteration."""
+    step, state, data = build_step(*args)
+    return time_fn(lambda: step(state, data)[0])
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    grid = make_cpu_grid(C.n_vdpus)
+    rows = min(C.reg_rows, 32768)            # CPU-container scale
+    X, y, _ = datasets.regression(key, rows, C.reg_features)
+
+    # --- linear regression: PIM grid (fp32/int16/int8) vs direct jnp ---
+    for prec in ("fp32", "int16", "int8"):
+        def once(prec=prec):
+            return train_linreg(grid, X, y, lr=0.05, steps=1,
+                                precision=prec)
+        us = time_fn(once, warmup=1, iters=3)
+        emit(f"linreg_pim_{prec}_iter", us, f"{rows * 1e6 / us:.0f} rows/s")
+
+    Xd, yd = jnp.asarray(X), jnp.asarray(y)
+
+    @jax.jit
+    def direct_step(w):
+        return w - 0.05 * Xd.T @ (Xd @ w - yd) / rows
+
+    emit("linreg_cpu_direct_iter",
+         time_fn(direct_step, jnp.zeros((C.reg_features,))), "baseline")
+
+    # --- logistic regression: sigmoid variants ---
+    Xc, yc, _ = datasets.binary_classification(key, rows, C.reg_features)
+    for sig in ("exact", "lut", "taylor"):
+        def once(sig=sig):
+            return train_logreg(grid, Xc, yc, lr=0.5, steps=1, sigmoid=sig)
+        emit(f"logreg_pim_{sig}_iter", time_fn(once, warmup=1, iters=3),
+             "")
+
+    # --- K-means ---
+    Xk, _, _ = datasets.blobs(key, min(C.km_rows, 32768), C.km_features,
+                              C.km_clusters)
+    for prec in ("fp32", "int16"):
+        def once(prec=prec):
+            return train_kmeans(grid, Xk, C.km_clusters, iters=1,
+                                precision=prec)
+        emit(f"kmeans_pim_{prec}_iter", time_fn(once, warmup=1, iters=3),
+             f"k={C.km_clusters}")
+
+    # --- decision tree (full build; levels are the unit of work) ---
+    Xt, yt = datasets.mixture_classification(
+        key, min(C.dt_rows, 16384), C.dt_features, C.dt_classes)
+
+    def tree_once():
+        return train_dtree(grid, Xt, yt, max_depth=C.dt_depth,
+                           n_bins=C.dt_bins, n_classes=C.dt_classes)
+    emit("dtree_pim_full_build", time_fn(tree_once, warmup=1, iters=2),
+         f"depth={C.dt_depth}")
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,46 @@
+"""Paper Figure: strong/weak scaling with the number of (virtual) DPUs.
+
+The paper scales 256 -> 2,524 physical DPUs; we sweep the vDPU grid on
+the CPU container.  Strong scaling: fixed dataset, more vDPUs (per-vDPU
+rows shrink).  Weak scaling: rows per vDPU fixed.  The merge cost is the
+paper's host-communication term.
+
+CSV: name, us_per_iter, derived = rows | rows/vdpu.
+"""
+
+import jax
+
+from benchmarks.common import time_fn, emit
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import train_linreg
+
+VDPUS = (8, 32, 128, 512)
+
+
+def run():
+    key = jax.random.PRNGKey(0)
+    d = 32
+
+    # strong scaling: 65k rows total
+    X, y, _ = datasets.regression(key, 65536, d)
+    for v in VDPUS:
+        grid = make_cpu_grid(v)
+
+        def once(grid=grid):
+            return train_linreg(grid, X, y, lr=0.05, steps=1)
+        us = time_fn(once, warmup=1, iters=3)
+        emit(f"linreg_strong_v{v}", us, "rows=65536")
+
+    # weak scaling: 512 rows per vDPU
+    for v in VDPUS:
+        Xw, yw, _ = datasets.regression(key, 512 * v, d)
+        grid = make_cpu_grid(v)
+
+        def once(grid=grid, Xw=Xw, yw=yw):
+            return train_linreg(grid, Xw, yw, lr=0.05, steps=1)
+        us = time_fn(once, warmup=1, iters=3)
+        emit(f"linreg_weak_v{v}", us, f"rows={512 * v}")
+
+
+if __name__ == "__main__":
+    run()

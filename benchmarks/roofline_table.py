@@ -1,0 +1,65 @@
+"""Render EXPERIMENTS.md tables from the dry-run artifacts.
+
+  PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod16x16]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+ART = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                   "dryrun")
+
+
+def fmt_s(x):
+    if x is None:
+        return "-"
+    if x >= 1:
+        return f"{x:.2f}s"
+    return f"{x*1e3:.1f}ms"
+
+
+def load(mesh_tag):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(ART, f"*_{mesh_tag}.json"))):
+        r = json.load(open(f))
+        if "shape" in r:               # skip pim-ml / free-form artifacts
+            rows.append(r)
+    return rows
+
+
+def render(mesh_tag="pod16x16", md=True):
+    rows = load(mesh_tag)
+    shapes = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+    rows.sort(key=lambda r: (r["arch"], shapes.index(r["shape"])
+                             if r["shape"] in shapes else 9))
+    out = []
+    hdr = ("| arch | shape | status | mem/dev | compute | memory | "
+           "collective | bound | MODEL/HLO | step bound |")
+    out.append(hdr)
+    out.append("|" + "---|" * 10)
+    for r in rows:
+        if r["status"] != "OK":
+            reason = r.get("skip_reason", r.get("error", ""))[:60]
+            out.append(f"| {r['arch']} | {r['shape']} | {r['status']} | "
+                       f"{reason} | | | | | | |")
+            continue
+        rf = r["roofline"]
+        mf = r["model_flops"]
+        ratio = mf["model_flops"] / max(rf["hlo_flops_global"], 1)
+        out.append(
+            f"| {r['arch']} | {r['shape']} | OK "
+            f"| {r['memory']['peak_per_device_gb']:.1f}GB "
+            f"| {fmt_s(rf['compute_s'])} | {fmt_s(rf['memory_s'])} "
+            f"| {fmt_s(rf['collective_s'])} "
+            f"| {rf['bottleneck'].replace('_s','')} "
+            f"| {ratio:.2f} | {fmt_s(rf['step_time_bound_s'])} |")
+    return "\n".join(out)
+
+
+if __name__ == "__main__":
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod16x16")
+    args = ap.parse_args()
+    print(render(args.mesh))

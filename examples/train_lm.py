@@ -1,0 +1,86 @@
+"""End-to-end LM training driver on the fault-tolerant runtime.
+
+Trains a small decoder-only LM on the synthetic bigram token stream with
+the full production substrate: AdamW (f32 master), deterministic
+resumable data, async checkpointing, NaN-failure replay, straggler
+accounting.  Loss drops well below the unigram entropy within a few
+hundred steps.
+
+  PYTHONPATH=src python examples/train_lm.py                 # ~2 min CPU demo
+  PYTHONPATH=src python examples/train_lm.py --preset 100m --steps 300
+"""
+
+import argparse
+import dataclasses
+
+import jax
+
+from repro.models.common import ModelConfig, ATTN
+from repro.models import build
+from repro.optim import adamw
+from repro.data import TokenStream
+from repro.runtime import Trainer, TrainerConfig
+
+PRESETS = {
+    # ~1.6M params: CPU-demo scale
+    "tiny": dict(n_layers=4, d_model=128, n_heads=4, n_kv_heads=2,
+                 d_ff=512, vocab_size=2048, seq=128, batch=8),
+    # ~25M params
+    "25m": dict(n_layers=8, d_model=384, n_heads=6, n_kv_heads=2,
+                d_ff=1536, vocab_size=8192, seq=256, batch=8),
+    # ~110M params: the assignment's "~100M model" target
+    "100m": dict(n_layers=12, d_model=768, n_heads=12, n_kv_heads=4,
+                 d_ff=3072, vocab_size=16384, seq=512, batch=8),
+}
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--preset", default="tiny", choices=list(PRESETS))
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default="/tmp/repro_lm_ckpt")
+    args = ap.parse_args()
+
+    p = PRESETS[args.preset]
+    cfg = ModelConfig(
+        name=f"lm-{args.preset}", n_layers=p["n_layers"],
+        d_model=p["d_model"], n_heads=p["n_heads"],
+        n_kv_heads=p["n_kv_heads"], d_ff=p["d_ff"],
+        vocab_size=p["vocab_size"],
+        block_pattern=(ATTN,) * p["n_layers"], dtype="float32")
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(0))
+    n_params = model.param_count(params)
+    print(f"model: {cfg.name}  params={n_params/1e6:.1f}M  "
+          f"seq={p['seq']} batch={p['batch']}")
+
+    opt = adamw(args.lr)
+    stream = TokenStream(cfg.vocab_size, p["batch"], p["seq"], seed=0)
+
+    @jax.jit
+    def step_fn(state, batch):
+        def lfn(pp):
+            return model.loss(pp, batch)
+        (loss, met), grads = jax.value_and_grad(lfn, has_aux=True)(
+            state["params"])
+        new_p, new_o = opt.update(grads, state["opt"], state["params"])
+        return {"params": new_p, "opt": new_o}, {"loss": loss, **met}
+
+    trainer = Trainer(
+        step_fn, {"params": params, "opt": opt.init(params)},
+        batch_fn=stream.batch_at,
+        config=TrainerConfig(ckpt_dir=args.ckpt_dir, ckpt_every=100,
+                             log_every=20))
+    out = trainer.run(args.steps, callback=lambda s, m: print(
+        f"  step {s:4d}  loss={float(m['loss']):.4f}  "
+        f"wall={m['wall_time']*1e3:.0f}ms"))
+
+    losses = [h["loss"] for h in out["history"]]
+    print(f"\nloss: {losses[0]:.4f} -> {losses[-1]:.4f}  "
+          f"(restarts={out['restarts']}, stragglers={out['stragglers']})")
+    assert losses[-1] < losses[0], "training must make progress"
+
+
+if __name__ == "__main__":
+    main()

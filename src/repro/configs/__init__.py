@@ -1,0 +1,49 @@
+"""Architecture registry: ``get_config(name)`` / ``--arch <id>``.
+
+Each module defines ``CONFIG`` (the exact published full-size config) and
+``smoke_config()`` (a reduced same-family config for CPU tests).
+"""
+
+from __future__ import annotations
+
+import importlib
+from typing import Dict, List
+
+from repro.models.common import ModelConfig
+
+_ARCHS: Dict[str, str] = {
+    "whisper-tiny": "whisper_tiny",
+    "qwen3-moe-235b-a22b": "qwen3_moe_235b",
+    "phi3.5-moe-42b-a6.6b": "phi35_moe",
+    "mamba2-370m": "mamba2_370m",
+    "phi4-mini-3.8b": "phi4_mini",
+    "minitron-8b": "minitron_8b",
+    "qwen2-0.5b": "qwen2_0_5b",
+    "qwen1.5-110b": "qwen15_110b",
+    "llava-next-mistral-7b": "llava_next_mistral_7b",
+    "recurrentgemma-2b": "recurrentgemma_2b",
+    # the paper's own workloads (classical ML on the PIM grid)
+    "pim-ml": "pim_ml",
+}
+
+
+def list_archs() -> List[str]:
+    return [a for a in _ARCHS if a != "pim-ml"]
+
+
+def _module(name: str):
+    if name not in _ARCHS:
+        raise KeyError(f"unknown arch {name!r}; available: {list(_ARCHS)}")
+    return importlib.import_module(f"repro.configs.{_ARCHS[name]}")
+
+
+def get_config(name: str, **overrides) -> ModelConfig:
+    cfg = _module(name).CONFIG
+    if overrides:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, **overrides)
+    return cfg
+
+
+def get_smoke_config(name: str) -> ModelConfig:
+    return _module(name).smoke_config()

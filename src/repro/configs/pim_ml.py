@@ -1,0 +1,38 @@
+"""The paper's own workloads: classical ML training on the PIM grid.
+
+Not an LM architecture — this config parameterizes the four PIM training
+benchmarks (dataset sizes follow the paper's strong-scaling setup, scaled
+to the CPU container; the benchmark harness sweeps n_vdpus).
+"""
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class PimMLConfig:
+    n_vdpus: int = 256
+    # linear / logistic regression
+    reg_rows: int = 65536
+    reg_features: int = 64
+    reg_steps: int = 50
+    # K-means
+    km_rows: int = 65536
+    km_features: int = 16
+    km_clusters: int = 8
+    km_iters: int = 10
+    # decision tree
+    dt_rows: int = 32768
+    dt_features: int = 16
+    dt_classes: int = 4
+    dt_depth: int = 6
+    dt_bins: int = 32
+
+
+CONFIG = PimMLConfig()
+
+
+def smoke_config() -> PimMLConfig:
+    return PimMLConfig(n_vdpus=8, reg_rows=2048, reg_features=16,
+                       reg_steps=10, km_rows=2048, km_features=8,
+                       km_clusters=4, km_iters=5, dt_rows=2048,
+                       dt_features=8, dt_classes=2, dt_depth=4)

@@ -1,0 +1,12 @@
+"""The paper's primary contribution — PIM-style data-centric ML training.
+
+Layers:
+  * ``pim``       — PimGrid virtual-DPU execution model (shard_map engine)
+  * ``quantize``  — fixed-point / hybrid-precision arithmetic (insight I1)
+  * ``lut``       — lookup-table activations (insight I2)
+  * ``datasets``  — synthetic training sets matching the paper's evaluation
+  * ``mlalgos``   — linreg / logreg / dtree / kmeans on the grid
+"""
+
+from repro.core.pim import PimGrid, make_cpu_grid  # noqa: F401
+from repro.core import quantize, lut, datasets  # noqa: F401

@@ -1,0 +1,67 @@
+"""Synthetic training-set generators matching the paper's evaluation setup.
+
+The paper trains on dense synthetic datasets sized to fill the PIM banks
+(strong/weak scaling sweeps).  We generate the same four kinds:
+
+  * regression   — X ~ N(0,1), y = Xw* + noise        (linear regression)
+  * binary class — y ~ Bernoulli(sigmoid(Xw*))         (logistic regression)
+  * blobs        — K gaussian clusters                 (K-means)
+  * mixture      — labeled gaussian mixture            (decision tree)
+
+All generators return float32 (the fixed-point paths quantize afterwards,
+exactly like the paper quantizes the in-bank copy of the dataset).
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def regression(key: jax.Array, n: int, d: int, noise: float = 0.1,
+               w_scale: float = 1.0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (X, y, w_true)."""
+    kx, kw, kn = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d), jnp.float32)
+    w = jax.random.normal(kw, (d,), jnp.float32) * w_scale
+    y = X @ w + noise * jax.random.normal(kn, (n,), jnp.float32)
+    return X, y, w
+
+
+def binary_classification(key: jax.Array, n: int, d: int,
+                          w_scale: float = 2.0
+                          ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (X, y∈{0,1}, w_true); labels drawn from the logistic model."""
+    kx, kw, kb = jax.random.split(key, 3)
+    X = jax.random.normal(kx, (n, d), jnp.float32)
+    w = jax.random.normal(kw, (d,), jnp.float32) * w_scale / jnp.sqrt(d)
+    p = jax.nn.sigmoid(X @ w)
+    y = (jax.random.uniform(kb, (n,)) < p).astype(jnp.float32)
+    return X, y, w
+
+
+def blobs(key: jax.Array, n: int, d: int, k: int, spread: float = 0.3,
+          box: float = 2.0) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Returns (X, assignment, centers): K gaussian blobs in [-box, box]^d."""
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.uniform(kc, (k, d), jnp.float32, -box, box)
+    assign = jax.random.randint(ka, (n,), 0, k)
+    X = centers[assign] + spread * jax.random.normal(kn, (n, d), jnp.float32)
+    return X, assign, centers
+
+
+def mixture_classification(key: jax.Array, n: int, d: int, n_classes: int,
+                           clusters_per_class: int = 2, spread: float = 0.5
+                           ) -> Tuple[jax.Array, jax.Array]:
+    """Labeled gaussian mixture — axis-aligned structure so a depth-limited
+    CART tree can fit it (mirrors the paper's tree-friendly criteo-like
+    tabular data)."""
+    k = n_classes * clusters_per_class
+    kc, ka, kn = jax.random.split(key, 3)
+    centers = jax.random.uniform(kc, (k, d), jnp.float32, -2.0, 2.0)
+    comp = jax.random.randint(ka, (n,), 0, k)
+    X = centers[comp] + spread * jax.random.normal(kn, (n, d), jnp.float32)
+    y = (comp % n_classes).astype(jnp.int32)
+    return X, y

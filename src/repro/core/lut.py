@@ -1,0 +1,146 @@
+"""Lookup-table activation functions — the paper's insight I2.
+
+UPMEM DPUs have no transcendental units; the paper shows that a WRAM-resident
+lookup table beats Taylor-series approximation for sigmoid by a wide margin
+with no training-accuracy loss.  The TPU-native rethink (DESIGN.md §2): the
+table lives in VMEM and is evaluated either by a vectorized ``take`` or — on
+the systolic path — as a one-hot(uint8 index) x table matmul, which is how
+``kernels/lut_activation.py`` lowers it.
+
+This module is the framework-level API: build tables for arbitrary scalar
+functions, evaluate with nearest or linear-interpolated lookup, and bound the
+approximation error (tests assert the paper's "no accuracy loss" claim).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class LutTable:
+    """Uniform-grid lookup table for a scalar function on [x_min, x_max].
+
+    ``table[i] = fn(x_min + i * step)``, ``step = (x_max-x_min)/(n-1)``.
+    Out-of-range inputs clamp to the endpoints (correct for saturating
+    activations like sigmoid/tanh, which is the paper's use case).
+    """
+
+    table: jax.Array          # (n_entries,) float
+    x_min: float
+    x_max: float
+
+    @property
+    def n_entries(self) -> int:
+        return self.table.shape[0]
+
+    @property
+    def step(self) -> float:
+        return (self.x_max - self.x_min) / (self.n_entries - 1)
+
+
+jax.tree_util.register_pytree_node(
+    LutTable,
+    lambda t: ((t.table,), (t.x_min, t.x_max)),
+    lambda aux, c: LutTable(c[0], aux[0], aux[1]),
+)
+
+
+def build_lut(fn: Callable[[np.ndarray], np.ndarray], x_min: float,
+              x_max: float, n_entries: int = 1024,
+              dtype=jnp.float32) -> LutTable:
+    """Tabulate ``fn`` on a uniform grid (host-side, once, like the paper's
+    table build at kernel-load time)."""
+    xs = np.linspace(x_min, x_max, n_entries, dtype=np.float64)
+    vals = np.asarray(fn(xs), dtype=np.float64)
+    return LutTable(jnp.asarray(vals, dtype), float(x_min), float(x_max))
+
+
+def lut_lookup(lut: LutTable, x: jax.Array) -> jax.Array:
+    """Nearest-entry lookup (the paper's DPU variant)."""
+    idx = _index(lut, x)
+    return jnp.take(lut.table, idx, axis=0).astype(x.dtype)
+
+
+def lut_lookup_interp(lut: LutTable, x: jax.Array) -> jax.Array:
+    """Linear-interpolated lookup: error O(step^2) instead of O(step)."""
+    xf = jnp.asarray(x, jnp.float32)
+    pos = (xf - lut.x_min) / lut.step
+    pos = jnp.clip(pos, 0.0, lut.n_entries - 1.0)
+    lo = jnp.floor(pos).astype(jnp.int32)
+    hi = jnp.minimum(lo + 1, lut.n_entries - 1)
+    w = pos - lo.astype(jnp.float32)
+    tlo = jnp.take(lut.table, lo, axis=0)
+    thi = jnp.take(lut.table, hi, axis=0)
+    return ((1.0 - w) * tlo + w * thi).astype(x.dtype)
+
+
+def _index(lut: LutTable, x: jax.Array) -> jax.Array:
+    xf = jnp.asarray(x, jnp.float32)
+    pos = jnp.round((xf - lut.x_min) / lut.step)
+    return jnp.clip(pos, 0, lut.n_entries - 1).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# Stock tables (paper: sigmoid; we add the LM-stack activations so the same
+# machinery is reusable for the assigned architectures)
+# ---------------------------------------------------------------------------
+
+def _np_sigmoid(x):
+    return 1.0 / (1.0 + np.exp(-x))
+
+
+def _np_gelu(x):
+    return 0.5 * x * (1.0 + np.tanh(np.sqrt(2.0 / np.pi)
+                                    * (x + 0.044715 * x ** 3)))
+
+
+def _np_silu(x):
+    return x * _np_sigmoid(x)
+
+
+def sigmoid_lut(n_entries: int = 1024, bound: float = 8.0) -> LutTable:
+    """The paper's sigmoid table: beyond |x|>8, sigmoid saturates to within
+    3.4e-4 of {0,1}, so endpoint clamping is exact enough for training."""
+    return build_lut(_np_sigmoid, -bound, bound, n_entries)
+
+
+def gelu_lut(n_entries: int = 2048, bound: float = 8.0) -> LutTable:
+    return build_lut(_np_gelu, -bound, bound, n_entries)
+
+
+def silu_lut(n_entries: int = 2048, bound: float = 8.0) -> LutTable:
+    return build_lut(_np_silu, -bound, bound, n_entries)
+
+
+def tanh_lut(n_entries: int = 1024, bound: float = 6.0) -> LutTable:
+    return build_lut(np.tanh, -bound, bound, n_entries)
+
+
+def taylor_sigmoid(x: jax.Array, order: int = 7) -> jax.Array:
+    """The baseline the paper compares LUTs against: odd Taylor/Padé-style
+    polynomial of tanh(x/2)/2 + 1/2 around 0 (diverges for |x| >~ 3, which
+    is exactly the paper's point)."""
+    # sigmoid(x) = 1/2 + x/4 - x^3/48 + x^5/480 - 17x^7/80640 ...
+    coeffs = [0.5, 0.25, 0.0, -1.0 / 48, 0.0, 1.0 / 480, 0.0, -17.0 / 80640]
+    xf = jnp.asarray(x, jnp.float32)
+    acc = jnp.zeros_like(xf)
+    for c in reversed(coeffs[: order + 1]):
+        acc = acc * xf + c
+    return acc.astype(x.dtype)
+
+
+def lut_max_error(lut: LutTable, fn: Callable, n_probe: int = 100_000,
+                  interp: bool = False) -> float:
+    """Max abs error of the table vs the exact function on its domain
+    (host-side; used by tests and the LUT benchmark)."""
+    xs = np.linspace(lut.x_min, lut.x_max, n_probe, dtype=np.float32)
+    exact = np.asarray(fn(xs.astype(np.float64)))
+    ev = lut_lookup_interp if interp else lut_lookup
+    approx = np.asarray(ev(lut, jnp.asarray(xs)), dtype=np.float64)
+    return float(np.max(np.abs(exact - approx)))

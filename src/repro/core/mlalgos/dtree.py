@@ -1,0 +1,255 @@
+"""CART decision-tree training on the PIM grid.
+
+Paper workload #3.  The paper's PIM decision tree works level-by-level:
+each DPU scans its resident rows and builds *split statistics* for every
+tree node under construction; the host merges the statistics, commits the
+best split per node, and broadcasts the updated tree so DPUs can re-route
+their rows.  Only histograms cross the host boundary — never rows (I4).
+
+Concretely (histogram/bin CART, LightGBM-style — also what makes the
+workload PIM/TPU friendly):
+
+  * features are pre-quantized to ``n_bins`` integer bins (insight I1 —
+    the resident dataset is uint8),
+  * per level, each vDPU accumulates H[node, feature, bin, class] counts
+    over its rows (`kernels/split_hist.py` is the TPU hotspot; here the
+    reference expresses it as a scatter-add),
+  * the merged histogram gives every candidate split's Gini impurity via
+    cumulative sums; the host picks argmax gain per node,
+  * rows re-route with one gather (node -> chosen feature/threshold).
+
+The tree is stored level-wise in fixed-size arrays (node i's children are
+2i/2i+1), so every step is jittable with static shapes.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.pim import PimGrid
+
+
+@dataclasses.dataclass
+class DTree:
+    """Dense complete-binary-tree storage (depth D => 2^D - 1 internal
+    slots, 2^D leaf slots; unused slots are leaves with gain 0)."""
+    feature: jax.Array        # (n_internal,) int32, -1 = leaf/unused
+    threshold: jax.Array      # (n_internal,) int32 bin threshold (go left if bin <= thr)
+    leaf_value: jax.Array     # (n_nodes_total,) int32 class prediction per node
+    bin_edges: jax.Array      # (n_features, n_bins-1) float edges used to bin
+    max_depth: int
+    n_classes: int
+
+
+@dataclasses.dataclass
+class DTreeResult:
+    tree: DTree
+    history: list
+
+
+def quantize_features(X: jax.Array, n_bins: int = 32
+                      ) -> Tuple[jax.Array, jax.Array]:
+    """Quantile-bin features to uint8 (the paper's fixed-point dataset).
+
+    Returns (binned (n,d) int32 in [0, n_bins), edges (d, n_bins-1))."""
+    Xn = np.asarray(X)
+    qs = np.linspace(0, 100, n_bins + 1)[1:-1]
+    edges = np.percentile(Xn, qs, axis=0).T.astype(np.float32)  # (d, B-1)
+    # make edges strictly non-decreasing (duplicate quantiles are fine for
+    # searchsorted but keep dtype tidy)
+    binned = np.empty(Xn.shape, np.int32)
+    for j in range(Xn.shape[1]):
+        binned[:, j] = np.searchsorted(edges[j], Xn[:, j], side="right")
+    return jnp.asarray(binned), jnp.asarray(edges)
+
+
+def _level_histogram(node_idx, Xbin, y, wmask, n_nodes, n_feat, n_bins,
+                     n_classes):
+    """H[node, feature, bin, class] counts for one vDPU slice.
+
+    Expressed as a flat scatter-add; `kernels/split_hist.py` implements the
+    TPU version (one-hot matmul accumulation in VMEM)."""
+    R = Xbin.shape[0]
+    f_idx = jnp.arange(n_feat, dtype=jnp.int32)
+    # flat index per (row, feature)
+    flat = ((node_idx[:, None] * n_feat + f_idx[None, :]) * n_bins
+            + Xbin) * n_classes + y[:, None]
+    H = jnp.zeros((n_nodes * n_feat * n_bins * n_classes,), jnp.float32)
+    H = H.at[flat.reshape(-1)].add(
+        jnp.broadcast_to(wmask[:, None], (R, n_feat)).reshape(-1))
+    return H.reshape(n_nodes, n_feat, n_bins, n_classes)
+
+
+def _best_splits(H):
+    """Given merged H (nodes, F, B, C): per-node best (feature, threshold,
+    gain, left/right class counts) via Gini.  Pure host-side math.
+
+    Gini gain of split s at node m:
+      G(m) - (nL/n) G(L) - (nR/n) G(R),  G = 1 - Σ_c p_c².
+    """
+    nodes, F, B, C = H.shape
+    cum = jnp.cumsum(H, axis=2)                       # (nodes,F,B,C) left counts for thr=b
+    total = cum[:, :, -1:, :]                         # (nodes,F,1,C)
+    left = cum[:, :, :-1, :]                          # threshold b in [0, B-2]
+    right = total - left
+    nl = jnp.sum(left, axis=3)                        # (nodes,F,B-1)
+    nr = jnp.sum(right, axis=3)
+    n = jnp.sum(total, axis=3)                        # (nodes,F,1)
+
+    def gini(counts, size):
+        size = jnp.maximum(size, 1e-9)
+        p = counts / size[..., None]
+        return 1.0 - jnp.sum(p * p, axis=-1)
+
+    g_parent = gini(total, n)[:, :, 0]                # (nodes,F) — same per F
+    g_split = (nl * gini(left, nl) + nr * gini(right, nr)) / jnp.maximum(
+        n, 1e-9)
+    gain = g_parent[:, :, None] - g_split             # (nodes,F,B-1)
+    # invalid splits (empty side) get -inf
+    gain = jnp.where((nl > 0) & (nr > 0), gain, -jnp.inf)
+    flat_gain = gain.reshape(nodes, -1)
+    best = jnp.argmax(flat_gain, axis=1)
+    best_gain = jnp.take_along_axis(flat_gain, best[:, None], axis=1)[:, 0]
+    best_f = (best // (B - 1)).astype(jnp.int32)
+    best_thr = (best % (B - 1)).astype(jnp.int32)
+    class_counts = total[:, 0, 0, :]                  # (nodes, C)
+    node_class = jnp.argmax(class_counts, axis=1)
+    node_count = n[:, 0, 0]
+    return best_f, best_thr, best_gain, node_class.astype(jnp.int32), node_count
+
+
+def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
+                max_depth: int = 5, n_bins: int = 32, n_classes: int = 2,
+                min_samples_split: int = 2) -> DTreeResult:
+    Xbin, edges = quantize_features(X, n_bins)
+    n, d = Xbin.shape
+    data, _ = grid.shard_rows(Xbin, jnp.asarray(y, jnp.int32))
+    # per-row node index rides with the resident data and is updated in
+    # place each level (the paper re-routes rows the same way)
+    node_idx = jax.tree.map(
+        lambda a: jnp.zeros(a.shape[:2], jnp.int32), data["w"])
+
+    # feature/threshold are allocated for the FULL tree (leaf level stays
+    # -1) so prediction-time lookups are always in bounds.
+    n_total = 2 ** (max_depth + 1) - 1
+    feature = np.full((n_total,), -1, np.int32)
+    threshold = np.zeros((n_total,), np.int32)
+    leaf_value = np.zeros((n_total,), np.int32)
+    history = []
+    reached_depth = 0
+
+    for depth in range(max_depth):
+        n_nodes = 2 ** depth
+        level_off = n_nodes - 1                      # first node id at depth
+
+        @jax.jit
+        def level_hist(node_idx, data, n_nodes=n_nodes):
+            def local_fn(_, sl):
+                return {"H": _level_histogram(
+                    sl["nidx"], sl["X"], sl["y0"], sl["w"],
+                    n_nodes, d, n_bins, n_classes)}
+            dat = dict(data)
+            dat["nidx"] = node_idx
+            return grid.map_reduce(local_fn, (), dat)["H"]
+
+        H = level_hist(node_idx, data)
+        bf, bthr, bgain, bclass, bcount = jax.device_get(
+            jax.jit(_best_splits)(H))
+
+        # host commits splits (the paper's "host selects best split")
+        made_split = np.zeros((n_nodes,), bool)
+        for m in range(n_nodes):
+            gid = level_off + m
+            leaf_value[gid] = int(bclass[m])
+            can = (np.isfinite(bgain[m]) and bgain[m] > 1e-9
+                   and bcount[m] >= min_samples_split)
+            if can:
+                feature[gid] = int(bf[m])
+                threshold[gid] = int(bthr[m])
+                made_split[m] = True
+        history.append({"depth": depth, "splits": int(made_split.sum()),
+                        "mean_gain": float(np.nan_to_num(
+                            np.where(made_split, bgain, 0.0).mean()))})
+        if not made_split.any():
+            break
+        reached_depth = depth + 1
+
+        # re-route rows: new local node id = 2*old + go_right; rows at
+        # leaf-ized nodes keep a frozen id (they map to a dead subtree slot
+        # whose leaf_value is propagated below)
+        feat_l = jnp.asarray(feature[level_off:level_off + n_nodes])
+        thr_l = jnp.asarray(threshold[level_off:level_off + n_nodes])
+
+        @jax.jit
+        def reroute(node_idx, Xb):
+            f = jnp.maximum(feat_l[node_idx], 0)
+            t = thr_l[node_idx]
+            xv = jnp.take_along_axis(Xb, f[..., None], axis=-1)[..., 0]
+            go_right = (xv > t).astype(jnp.int32)
+            return node_idx * 2 + go_right
+
+        node_idx = reroute(node_idx, data["X"])
+
+    # Final-level leaf values: one more histogram pass assigns every
+    # deepest node its majority class (the paper's last host merge).
+    if reached_depth > 0:
+        n_nodes = 2 ** reached_depth
+        level_off = n_nodes - 1
+
+        @jax.jit
+        def final_hist(node_idx, data, n_nodes=n_nodes):
+            def local_fn(_, sl):
+                return {"H": _level_histogram(
+                    sl["nidx"], sl["X"], sl["y0"], sl["w"],
+                    n_nodes, d, n_bins, n_classes)}
+            dat = dict(data)
+            dat["nidx"] = node_idx
+            return grid.map_reduce(local_fn, (), dat)["H"]
+
+        Hf = np.asarray(jax.device_get(final_hist(node_idx, data)))
+        counts = Hf[:, 0, :, :].sum(axis=1)          # (nodes, C)
+        for m in range(n_nodes):
+            gid = level_off + m
+            if counts[m].sum() > 0:
+                leaf_value[gid] = int(counts[m].argmax())
+
+    # propagate classes downward so prediction at any dead/empty slot
+    # returns its nearest populated ancestor's majority class
+    for gid in range((n_total - 1) // 2):
+        for child in (2 * gid + 1, 2 * gid + 2):
+            if feature[gid] == -1:
+                leaf_value[child] = leaf_value[gid]
+
+    tree = DTree(feature=jnp.asarray(feature),
+                 threshold=jnp.asarray(threshold),
+                 leaf_value=jnp.asarray(leaf_value),
+                 bin_edges=edges, max_depth=max_depth, n_classes=n_classes)
+    return DTreeResult(tree=tree, history=history)
+
+
+def dtree_predict(tree: DTree, X: jax.Array) -> jax.Array:
+    """Vectorized root-to-leaf descent on binned features."""
+    Xn = np.asarray(X)
+    binned = np.empty(Xn.shape, np.int32)
+    edges = np.asarray(tree.bin_edges)
+    for j in range(Xn.shape[1]):
+        binned[:, j] = np.searchsorted(edges[j], Xn[:, j], side="right")
+    Xb = jnp.asarray(binned)
+
+    def step(node, _):
+        f = tree.feature[node]
+        is_leaf = f < 0
+        fv = jnp.take_along_axis(Xb, jnp.maximum(f, 0)[:, None],
+                                 axis=1)[:, 0]
+        go_right = (fv > tree.threshold[node]).astype(jnp.int32)
+        nxt = node * 2 + 1 + go_right
+        return jnp.where(is_leaf, node, nxt), None
+
+    node = jnp.zeros((Xb.shape[0],), jnp.int32)
+    node, _ = jax.lax.scan(step, node, None, length=tree.max_depth)
+    return tree.leaf_value[node]

@@ -1,0 +1,104 @@
+"""K-means clustering (Lloyd's algorithm) on the PIM grid.
+
+Paper workload #4.  Per iteration each DPU streams its resident points,
+assigns each to the nearest centroid, and accumulates per-cluster partial
+sums and counts; the host merges partials and recomputes centroids.
+
+TPU adaptation of the inner loop (DESIGN.md §2): instead of the DPU's
+scalar accumulation we compute assignments with a distance matrix and
+accumulate with a one-hot matmul — both MXU-shaped.  The fused
+distance->argmin->accumulate hotspot is `kernels/kmeans_assign.py`.
+
+Fixed-point path (insight I1): points stored int16/int8 with a per-feature
+scale; distances computed in int32 off integer Gram terms.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.pim import PimGrid
+from repro.core import quantize as qz
+
+Precision = Literal["fp32", "int16", "int8"]
+
+
+@dataclasses.dataclass
+class KMeansResult:
+    centroids: jax.Array      # (k, d)
+    history: list             # per-iter {"sse": ..., "moved": ...}
+    precision: str
+
+
+def _assign_and_partials(x, wmask, centroids):
+    """x: (R,d) float, centroids: (k,d) -> one-hot partial sums/counts/sse.
+
+    ||x-c||² = ||x||² - 2 x·c + ||c||²; argmin over k drops ||x||².
+    The one-hot matmul is the TPU-native accumulation (ref for the Pallas
+    kernel)."""
+    xc = x @ centroids.T                                   # (R,k)
+    c2 = jnp.sum(centroids * centroids, axis=1)            # (k,)
+    dist = c2[None, :] - 2.0 * xc                          # (R,k) + ||x||²
+    a = jnp.argmin(dist, axis=1)                           # (R,)
+    onehot = jax.nn.one_hot(a, centroids.shape[0],
+                            dtype=x.dtype) * wmask[:, None]
+    sums = onehot.T @ x                                    # (k,d)
+    counts = jnp.sum(onehot, axis=0)                       # (k,)
+    x2 = jnp.sum(x * x, axis=1)
+    best = jnp.take_along_axis(dist, a[:, None], axis=1)[:, 0]
+    sse = jnp.sum((x2 + best) * wmask)
+    return sums, counts, sse
+
+
+def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
+                 iters: int = 20, precision: Precision = "fp32",
+                 seed: int = 0) -> KMeansResult:
+    n, d = X.shape
+    key = jax.random.PRNGKey(seed)
+    init_idx = jax.random.choice(key, n, (k,), replace=False)
+    c0 = jnp.asarray(X)[init_idx]
+
+    if precision == "fp32":
+        data, _ = grid.shard_rows(X)
+
+        def local_fn(centroids, sl):
+            sums, counts, sse = _assign_and_partials(
+                sl["X"], sl["w"], centroids)
+            return {"sums": sums, "counts": counts, "sse": sse}
+    else:
+        bits = {"int16": 16, "int8": 8}[precision]
+        Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+        data, _ = grid.shard_rows(Xq.values)
+        x_scale = Xq.scale            # (1,d)
+
+        def local_fn(centroids, sl):
+            # Dequantize-on-stream: the resident copy is integer; the
+            # per-feature scale rides in registers (paper's bank layout).
+            xf = sl["X"].astype(jnp.float32) * x_scale
+            sums, counts, sse = _assign_and_partials(xf, sl["w"], centroids)
+            return {"sums": sums, "counts": counts, "sse": sse}
+
+    def update_fn(centroids, merged):
+        counts = merged["counts"]
+        safe = jnp.maximum(counts, 1.0)[:, None]
+        new_c = merged["sums"] / safe
+        # empty clusters keep their previous centroid (paper's policy)
+        new_c = jnp.where(counts[:, None] > 0, new_c, centroids)
+        moved = jnp.max(jnp.abs(new_c - centroids))
+        return new_c, {"sse": merged["sse"], "moved": moved}
+
+    centroids, history = grid.fit(init_state=c0, local_fn=local_fn,
+                                  update_fn=update_fn, data=data,
+                                  steps=iters)
+    return KMeansResult(centroids=centroids, history=history,
+                        precision=precision)
+
+
+def kmeans_assign_points(centroids: jax.Array, X: jax.Array) -> jax.Array:
+    xc = X @ centroids.T
+    c2 = jnp.sum(centroids * centroids, axis=1)
+    return jnp.argmin(c2[None, :] - 2.0 * xc, axis=1)

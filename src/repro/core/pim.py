@@ -1,0 +1,180 @@
+"""PimGrid — the paper's PIM execution model as a composable JAX module.
+
+The UPMEM system the paper evaluates is a grid of 2,524 DPUs, each a weak
+core bonded to its own DRAM bank.  Training works like this (paper §ML
+implementations):
+
+  1. the training set is partitioned *once* across DPU banks and stays
+     resident there for the whole run (insight I4),
+  2. every iteration, each DPU computes a *partial statistic* (gradient,
+     histogram, cluster sums) over its rows, streaming its bank (I3),
+  3. DPUs cannot communicate; the host CPU gathers and merges the partial
+     results and broadcasts the updated model (I5),
+  4. merge cost is tolerable when overlapped with compute (I5).
+
+TPU mapping (DESIGN.md §2): a *virtual DPU* (vDPU) is one slice of a leading
+``n_vdpus`` axis.  That axis is sharded over the mesh's data axes
+(``("pod","data")`` in production), and vDPUs co-resident on one device are
+vmapped — exactly like UPMEM tasklets.  The host merge becomes a
+*hierarchical* reduction: ``psum`` over ``data`` (fast ICI, = intra-rank
+merge) followed by ``psum`` over ``pod`` (slow DCN, = the host hop).
+
+``PimGrid`` runs in two modes with one code path:
+  * ``mesh=None`` — single-device (CPU tests / benchmarks): vmap + sum.
+  * ``mesh=...``  — ``shard_map`` over the data axes, hierarchical psum.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax.experimental.shard_map import shard_map
+
+
+def _tree_sum_leading(tree):
+    return jax.tree.map(lambda x: jnp.sum(x, axis=0), tree)
+
+
+@dataclasses.dataclass(frozen=True)
+class PimGrid:
+    """A grid of virtual DPUs over (optionally) a device mesh.
+
+    Args:
+      n_vdpus: number of virtual DPUs (>= product of data-axis sizes, and
+        divisible by it when a mesh is used).
+      mesh: optional ``jax.sharding.Mesh``; when given, the vDPU axis is
+        sharded over ``data_axes`` and reductions are hierarchical psums.
+      data_axes: mesh axes carrying the vDPU shards, ordered slow->fast
+        (the *first* axis is the "host hop" — reduced last, compressible).
+    """
+
+    n_vdpus: int
+    mesh: Mesh | None = None
+    data_axes: Sequence[str] = ("data",)
+
+    def __post_init__(self):
+        if self.mesh is not None:
+            shards = self.n_shards
+            if self.n_vdpus % shards:
+                raise ValueError(
+                    f"n_vdpus={self.n_vdpus} not divisible by data shards "
+                    f"{shards}")
+
+    # -- layout --------------------------------------------------------
+
+    @property
+    def n_shards(self) -> int:
+        if self.mesh is None:
+            return 1
+        return int(np.prod([self.mesh.shape[a] for a in self.data_axes]))
+
+    def data_sharding(self) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P(tuple(self.data_axes)))
+
+    def replicated_sharding(self) -> NamedSharding | None:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, P())
+
+    def shard_rows(self, X: jax.Array, *extras: jax.Array):
+        """Partition rows across vDPUs (the one-time resident placement).
+
+        Pads the row count up to a multiple of ``n_vdpus`` and returns
+        ``(data_dict, n_rows)`` where ``data_dict`` holds ``X`` (and
+        positional extras ``y0``, ``y1``...) reshaped to
+        ``(n_vdpus, rows_per_vdpu, ...)`` plus a 0/1 ``w`` mask marking
+        real rows — local statistics must be weighted by ``w`` so padding
+        never contaminates the merge.
+        """
+        n = X.shape[0]
+        per = -(-n // self.n_vdpus)              # ceil
+        pad = per * self.n_vdpus - n
+
+        def place(a):
+            a = jnp.asarray(a)
+            if pad:
+                a = jnp.concatenate(
+                    [a, jnp.zeros((pad,) + a.shape[1:], a.dtype)], axis=0)
+            a = a.reshape((self.n_vdpus, per) + a.shape[1:])
+            if self.mesh is not None:
+                a = jax.device_put(a, self.data_sharding())
+            return a
+
+        # place() appends `pad` zero rows — zeros are exactly the mask
+        # value for padding, so the mask goes in unpadded
+        w = jnp.ones((n,), jnp.float32)
+        data = {"X": place(X), "w": place(w)}
+        for i, e in enumerate(extras):
+            data[f"y{i}"] = place(e)
+        return data, n
+
+    # -- the core primitive ---------------------------------------------
+
+    def map_reduce(self, local_fn: Callable[[Any, Any], Any],
+                   model: Any, data: Any) -> Any:
+        """partial = local_fn(model, per_vdpu_slice); return Σ partial.
+
+        ``local_fn`` sees one vDPU's resident slice (no leading axis) and
+        returns a pytree of summable statistics.  The reduction is the
+        paper's host merge: vmapped-tasklet sum -> intra-pod psum -> pod
+        psum.
+        """
+        if self.mesh is None:
+            return _tree_sum_leading(jax.vmap(lambda d: local_fn(model, d))(data))
+
+        axes = tuple(self.data_axes)
+
+        def shard_body(model, data):
+            part = _tree_sum_leading(jax.vmap(lambda d: local_fn(model, d))(data))
+            # Hierarchical merge: fast axes first (ICI), slow axis last
+            # (the "host" hop). Mathematically one psum; structurally two
+            # collectives with different replica groups (see roofline).
+            for ax in reversed(axes[1:]):
+                part = jax.tree.map(lambda x, a=ax: jax.lax.psum(x, a), part)
+            part = jax.tree.map(lambda x: jax.lax.psum(x, axes[0]), part)
+            return part
+
+        data_specs = jax.tree.map(lambda _: P(axes), data)
+        return shard_map(
+            shard_body, mesh=self.mesh,
+            in_specs=(P(), data_specs), out_specs=P(),
+            check_rep=False,
+        )(model, data)
+
+    # -- generic training loop -------------------------------------------
+
+    def fit(self, *, init_state: Any, local_fn: Callable,
+            update_fn: Callable, data: Any, steps: int,
+            callback: Callable | None = None):
+        """Run the paper's iterative loop: local partials -> merge -> update.
+
+        ``update_fn(state, merged) -> (state, metrics)`` runs "on the host"
+        (replicated).  Returns ``(state, [metrics per step])``.
+        """
+
+        @jax.jit
+        def one_step(state, data):
+            merged = self.map_reduce(local_fn, state, data)
+            return update_fn(state, merged)
+
+        history = []
+        state = init_state
+        for step in range(steps):
+            state, metrics = one_step(state, data)
+            history.append(metrics)
+            if callback is not None:
+                callback(step, state, metrics)
+        return state, history
+
+
+def make_cpu_grid(n_vdpus: int = 64) -> PimGrid:
+    """Single-device grid used by tests/benchmarks on the CPU container."""
+    return PimGrid(n_vdpus=n_vdpus, mesh=None)

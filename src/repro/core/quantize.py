@@ -1,0 +1,289 @@
+"""Fixed-point / quantized arithmetic — the paper's insight I1.
+
+UPMEM DPUs have no FPU and only a native 8x8->16-bit multiplier, so the
+paper trains with fixed-point (Q-format) operands and *hybrid precision*:
+narrow multiplies, wide (32/64-bit) accumulation, with negligible accuracy
+loss.  On TPU the same structure is profitable for a different reason —
+int8 operands halve/quarter HBM and interconnect bytes and feed the MXU's
+native s8xs8->s32 path — so we keep the paper's scheme and reuse it for
+gradient compression (distributed/compression.py).
+
+Two families are provided:
+
+* ``QFormat`` — classic Qm.n fixed point (the paper's representation):
+  value = int / 2**frac_bits, saturating casts, exact bit behaviour.
+* dynamic symmetric quantization (per-tensor / per-row scales) — the
+  "quantization" variant the paper cites [178, 179], used for dataset
+  storage and gradient compression.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# Q-format fixed point
+# ---------------------------------------------------------------------------
+
+_INT_DTYPES = {8: jnp.int8, 16: jnp.int16, 32: jnp.int32, 64: jnp.int64}
+
+
+@dataclasses.dataclass(frozen=True)
+class QFormat:
+    """Qm.n fixed-point format stored in a ``total_bits`` signed integer.
+
+    ``value = stored_int * 2**-frac_bits``.  ``int_bits`` excludes the sign
+    bit, so ``total_bits = 1 + int_bits + frac_bits`` must hold.
+    """
+
+    int_bits: int
+    frac_bits: int
+
+    def __post_init__(self):
+        if self.total_bits not in _INT_DTYPES:
+            raise ValueError(f"unsupported total bits {self.total_bits}")
+
+    @property
+    def total_bits(self) -> int:
+        return 1 + self.int_bits + self.frac_bits
+
+    @property
+    def dtype(self):
+        return _INT_DTYPES[self.total_bits]
+
+    @property
+    def scale(self) -> float:
+        return float(2 ** self.frac_bits)
+
+    @property
+    def max_value(self) -> float:
+        return (2 ** (self.total_bits - 1) - 1) / self.scale
+
+    @property
+    def min_value(self) -> float:
+        return -(2 ** (self.total_bits - 1)) / self.scale
+
+    # -- conversions --------------------------------------------------------
+
+    def quantize(self, x: jax.Array, stochastic: bool = False,
+                 key: jax.Array | None = None) -> jax.Array:
+        """Float -> Qm.n integer, saturating.  Optional stochastic rounding
+        (paper-adjacent: unbiased rounding keeps GD updates unbiased)."""
+        scaled = jnp.asarray(x, jnp.float32) * self.scale
+        if stochastic:
+            if key is None:
+                raise ValueError("stochastic rounding requires a PRNG key")
+            noise = jax.random.uniform(key, scaled.shape, jnp.float32)
+            q = jnp.floor(scaled + noise)
+        else:
+            q = jnp.round(scaled)
+        lo = -(2 ** (self.total_bits - 1))
+        hi = 2 ** (self.total_bits - 1) - 1
+        return jnp.clip(q, lo, hi).astype(self.dtype)
+
+    def dequantize(self, q: jax.Array, dtype=jnp.float32) -> jax.Array:
+        return q.astype(dtype) / jnp.asarray(self.scale, dtype)
+
+    # -- arithmetic (saturating, wide-accumulate) ---------------------------
+
+    def add(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        wide = a.astype(jnp.int32) + b.astype(jnp.int32)
+        return self._saturate(wide)
+
+    def mul(self, a: jax.Array, b: jax.Array) -> jax.Array:
+        """Qm.n * Qm.n -> Qm.n with int32 intermediate (hybrid precision:
+        the product carries 2n fractional bits; shift back down)."""
+        wide = a.astype(jnp.int32) * b.astype(jnp.int32)
+        wide = _rounding_rshift(wide, self.frac_bits)
+        return self._saturate(wide)
+
+    def _saturate(self, wide: jax.Array) -> jax.Array:
+        lo = -(2 ** (self.total_bits - 1))
+        hi = 2 ** (self.total_bits - 1) - 1
+        return jnp.clip(wide, lo, hi).astype(self.dtype)
+
+
+def _rounding_rshift(x: jax.Array, bits: int) -> jax.Array:
+    """Arithmetic right shift with round-to-nearest (ties away from zero is
+    avoided; we add half-ulp before shifting, matching DPU-style fixed
+    point)."""
+    if bits == 0:
+        return x
+    half = jnp.asarray(1 << (bits - 1), x.dtype)
+    return (x + half) >> bits
+
+
+# Paper-representative formats.
+Q1_14 = QFormat(int_bits=1, frac_bits=14)    # weights/features in [-2, 2)
+Q3_12 = QFormat(int_bits=3, frac_bits=12)    # wider dynamic range
+Q7_8 = QFormat(int_bits=7, frac_bits=8)      # int16 general purpose
+Q1_6 = QFormat(int_bits=1, frac_bits=6)      # int8 features
+
+
+# ---------------------------------------------------------------------------
+# Dynamic symmetric quantization (per-tensor / per-axis scale)
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class Quantized:
+    """A quantized tensor: ``values * scale`` reconstructs the original.
+
+    ``scale`` broadcasts against ``values`` (per-tensor scalar or per-row
+    column vector)."""
+
+    values: jax.Array
+    scale: jax.Array
+
+    def dequantize(self, dtype=jnp.float32) -> jax.Array:
+        return self.values.astype(dtype) * self.scale.astype(dtype)
+
+
+jax.tree_util.register_pytree_node(
+    Quantized,
+    lambda q: ((q.values, q.scale), None),
+    lambda _, c: Quantized(*c),
+)
+
+
+def quantize_symmetric(x: jax.Array, bits: int = 8, axis=None,
+                       stochastic: bool = False,
+                       key: jax.Array | None = None) -> Quantized:
+    """Symmetric linear quantization with dynamic scale.
+
+    ``axis=None`` -> per-tensor scale; ``axis=k`` -> scale per slice along
+    every axis except ``k``'s complement (i.e. reduce over ``axis``).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    if axis is None:
+        amax = jnp.max(jnp.abs(x))
+    else:
+        amax = jnp.max(jnp.abs(x), axis=axis, keepdims=True)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    scaled = x / scale
+    if stochastic:
+        if key is None:
+            raise ValueError("stochastic rounding requires a PRNG key")
+        noise = jax.random.uniform(key, x.shape, jnp.float32)
+        q = jnp.floor(scaled + noise)
+    else:
+        q = jnp.round(scaled)
+    dtype = _INT_DTYPES[bits] if bits in _INT_DTYPES else jnp.int32
+    return Quantized(jnp.clip(q, -qmax - 1, qmax).astype(dtype), scale)
+
+
+def dequantize(q: Quantized, dtype=jnp.float32) -> jax.Array:
+    return q.dequantize(dtype)
+
+
+# ---------------------------------------------------------------------------
+# Hybrid-precision linear algebra (narrow multiply, wide accumulate)
+# ---------------------------------------------------------------------------
+
+def fxp_matmul(a: jax.Array, b: jax.Array,
+               acc_dtype=jnp.int32) -> jax.Array:
+    """Integer matmul with wide accumulation: the paper's hybrid precision.
+
+    ``a``: (..., M, K) int8/int16, ``b``: (K, N) int8/int16 ->
+    (..., M, N) ``acc_dtype``.  On TPU this hits the MXU s8 path via
+    ``preferred_element_type``; the pure-jnp semantics are identical.
+    """
+    return jax.lax.dot_general(
+        a, b,
+        dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+        preferred_element_type=acc_dtype,
+    )
+
+
+def _split_limbs(x: jax.Array):
+    """int16 -> (hi, lo) int8-range limbs with x = 256*hi + lo, lo∈[0,256).
+
+    This is the TPU-native widening trick (DESIGN.md §2): the MXU multiplies
+    8-bit operands natively, so a 16-bit multiply is four 8-bit passes —
+    structurally the same as the DPU's software-widened multiply, but run on
+    the systolic array."""
+    xi = x.astype(jnp.int32)
+    hi = (xi >> 8).astype(jnp.int16)          # arithmetic shift = floor/256
+    lo = (xi & 0xFF).astype(jnp.int16)        # unsigned low byte
+    return hi, lo
+
+
+def hybrid_dot(a: jax.Array, b: jax.Array, *, k_chunk: int = 4096
+               ) -> jax.Array:
+    """Overflow-safe integer matmul (..., M, K) x (K, N) -> float32.
+
+    The paper's hybrid precision, adapted: every >8-bit operand is split
+    into int8-range limbs, each limb pair is accumulated in int32 over
+    K-chunks of ``k_chunk`` (bounding |partial| < 2^31), and limb partials
+    are combined in float32.  Exact for |true dot| < 2^24 * 2^16.
+    """
+    def limbs(x):
+        if x.dtype in (jnp.int8, jnp.uint8):
+            return [(1.0, x.astype(jnp.int16))]
+        hi, lo = _split_limbs(x)
+        return [(256.0, hi), (1.0, lo)]
+
+    K = a.shape[-1]
+    k_chunk = min(k_chunk, K)          # never pad K *up* to the chunk
+    n_chunks = -(-K // k_chunk)
+    pad = n_chunks * k_chunk - K
+    if pad:
+        a = jnp.concatenate(
+            [a, jnp.zeros(a.shape[:-1] + (pad,), a.dtype)], axis=-1)
+        b = jnp.concatenate(
+            [b, jnp.zeros((pad,) + b.shape[1:], b.dtype)], axis=0)
+
+    out = None
+    for wa, la in limbs(a):
+        for wb, lb in limbs(b):
+            acc = jnp.zeros(a.shape[:-1] + b.shape[1:], jnp.float32)
+            for c in range(n_chunks):
+                sl_a = la[..., c * k_chunk:(c + 1) * k_chunk]
+                sl_b = lb[c * k_chunk:(c + 1) * k_chunk]
+                part = jax.lax.dot_general(
+                    sl_a, sl_b,
+                    dimension_numbers=(((a.ndim - 1,), (0,)), ((), ())),
+                    preferred_element_type=jnp.int32)
+                acc = acc + part.astype(jnp.float32)
+            term = (wa * wb) * acc
+            out = term if out is None else out + term
+    return out
+
+
+def quantized_dot(xq: Quantized, wq: Quantized,
+                  acc_dtype=jnp.int32, out_dtype=jnp.float32) -> jax.Array:
+    """(M,K)q @ (K,N)q -> float: integer MXU matmul + scale fixup.
+
+    Scales must be per-tensor or per-row(M)/per-col(N) so the fixup is a
+    rank-1 broadcast (this is what per-channel quantization gives you)."""
+    acc = fxp_matmul(xq.values, wq.values, acc_dtype)
+    return acc.astype(out_dtype) * xq.scale.astype(out_dtype) * \
+        wq.scale.astype(out_dtype)
+
+
+# ---------------------------------------------------------------------------
+# Error-feedback state for quantized gradient exchange (beyond-paper reuse
+# of I1 for collective compression; see distributed/compression.py)
+# ---------------------------------------------------------------------------
+
+def ef_quantize(grad: jax.Array, error: jax.Array, bits: int = 8
+                ) -> Tuple[Quantized, jax.Array]:
+    """Quantize ``grad + error`` and return (quantized, new_error).
+
+    Error feedback keeps the compressed-SGD iterates within O(1) of the
+    exact ones (Karimireddy et al.); new_error = input - dequantized."""
+    target = grad + error
+    q = quantize_symmetric(target, bits=bits)
+    new_error = target - q.dequantize(grad.dtype)
+    return q, new_error
+
+
+@partial(jax.jit, static_argnames=("bits",))
+def quantize_dequantize(x: jax.Array, bits: int = 8) -> jax.Array:
+    """Round-trip helper (used in tests/benchmarks for accuracy tables)."""
+    return quantize_symmetric(x, bits=bits).dequantize(x.dtype)

@@ -1,0 +1,6 @@
+"""Distribution substrate: mesh axes, logical sharding rules, hierarchical
+and quantized collectives, compute/comm overlap."""
+
+from repro.distributed.sharding import (  # noqa: F401
+    LogicalRules, shard_hint, use_rules, current_rules, logical_to_spec,
+)

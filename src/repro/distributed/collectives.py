@@ -1,0 +1,80 @@
+"""Hierarchical + quantized collectives — the paper's insight I5 (host-
+mediated merge) and I1 (fixed point) applied to pod-scale training.
+
+UPMEM DPUs cannot talk to each other: partial results funnel through the
+host CPU.  On a TPU multi-pod the same hierarchy exists physically — fast
+ICI inside a pod, slow DCN between pods — so the "host hop" maps to the
+``pod`` mesh axis.  ``hierarchical_psum`` reduces over the fast axes
+first, then crosses the slow axis once with 1/pod_size of the traffic
+already folded.
+
+``quantized_psum`` compresses the slow hop with the paper's fixed-point
+representation (int8 + per-chunk scale, optional error feedback), cutting
+DCN bytes 4x for f32 / 2x for bf16 gradients.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantize as qz
+
+
+def hierarchical_psum(x, fast_axes: Sequence[str], slow_axis: str | None):
+    """psum over fast (ICI) axes, then the slow (DCN/"host") axis."""
+    for ax in fast_axes:
+        x = jax.tree.map(lambda v, a=ax: jax.lax.psum(v, a), x)
+    if slow_axis is not None:
+        x = jax.tree.map(lambda v: jax.lax.psum(v, slow_axis), x)
+    return x
+
+
+def quantized_psum(x: jax.Array, axis: str, *, bits: int = 8
+                   ) -> jax.Array:
+    """All-reduce with fixed-point compression on the wire.
+
+    Implemented as quantize -> integer psum (int32 accumulation — the
+    paper's hybrid precision) -> dequantize.  The scale is made uniform
+    across the axis with a cheap f32 max-psum so every participant uses
+    the same grid (required for correct integer summation).
+    """
+    qmax = 2 ** (bits - 1) - 1
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
+    total = jax.lax.psum(q, axis)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype)
+
+
+def quantized_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
+                      bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+    """Error-feedback variant: returns (reduced, new_error).  The residual
+    of this round's quantization is added to the next round's input, which
+    keeps compressed SGD within O(1) of exact (see core.quantize.ef_*)."""
+    qmax = 2 ** (bits - 1) - 1
+    target = x + error
+    amax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis)
+    scale = jnp.maximum(amax, 1e-12) / qmax
+    q = jnp.clip(jnp.round(target / scale), -qmax - 1, qmax)
+    new_error = target - q * scale
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
+    return (total.astype(jnp.float32) * scale).astype(x.dtype), new_error
+
+
+def hierarchical_grad_reduce(grads, *, fast_axes: Sequence[str],
+                             slow_axis: Optional[str],
+                             compress_bits: int = 0):
+    """The paper's full merge pattern for gradients: exact ICI reduction,
+    optionally fixed-point-compressed DCN hop (beyond-paper reuse of I1)."""
+    grads = jax.tree.map(
+        lambda g: jax.lax.psum(g, tuple(fast_axes)), grads)
+    if slow_axis is None:
+        return grads
+    if compress_bits:
+        return jax.tree.map(
+            lambda g: quantized_psum(g, slow_axis, bits=compress_bits),
+            grads)
+    return jax.tree.map(lambda g: jax.lax.psum(g, slow_axis), grads)

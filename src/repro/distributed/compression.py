@@ -1,0 +1,72 @@
+"""Gradient compression state machine (int8/int4-style fixed point with
+error feedback, plus top-k sparsification) for the slow inter-pod hop.
+
+This is the framework-level wrapper around ``core.quantize.ef_quantize``
+and ``collectives.quantized_psum_ef``: it owns a per-leaf error buffer
+pytree that rides in the optimizer state, so compressed training is a
+drop-in flag on the Trainer.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import collectives as coll
+
+
+@dataclasses.dataclass(frozen=True)
+class CompressionConfig:
+    bits: int = 8                  # fixed-point width on the wire
+    error_feedback: bool = True
+    slow_axis: Optional[str] = "pod"
+    fast_axes: Tuple[str, ...] = ("data",)
+
+
+def init_error_state(grads: Any) -> Any:
+    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+
+def compressed_reduce(grads: Any, error: Any, cfg: CompressionConfig
+                      ) -> Tuple[Any, Any]:
+    """Reduce gradients hierarchically with a compressed slow hop.
+
+    Returns (reduced_grads, new_error).  Must run inside shard_map (axis
+    names bound).  With ``slow_axis=None`` falls back to exact psum.
+    """
+    grads = jax.tree.map(
+        lambda g: jax.lax.psum(g, tuple(cfg.fast_axes)), grads)
+    if cfg.slow_axis is None:
+        return grads, error
+    if not cfg.error_feedback:
+        out = jax.tree.map(
+            lambda g: coll.quantized_psum(g, cfg.slow_axis, bits=cfg.bits),
+            grads)
+        return out, error
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(error)
+    outs, new_errs = [], []
+    for g, e in zip(flat_g, flat_e):
+        o, ne = coll.quantized_psum_ef(g, e, cfg.slow_axis, bits=cfg.bits)
+        outs.append(o)
+        new_errs.append(ne)
+    return treedef.unflatten(outs), treedef.unflatten(new_errs)
+
+
+def topk_sparsify(g: jax.Array, frac: float, error: jax.Array
+                  ) -> Tuple[jax.Array, jax.Array]:
+    """Keep the largest-|.|  ``frac`` of entries (error-feedback residual
+    for the rest).  Returns (sparse_dense_tensor, new_error) — the dense
+    carrier keeps shapes static; on the wire this pairs with the int8
+    path (values) + implicit bitmap."""
+    target = g + error
+    flat = jnp.abs(target).reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    mask = (jnp.abs(target) >= thresh).astype(target.dtype)
+    kept = target * mask
+    return kept, target - kept

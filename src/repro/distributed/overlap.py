@@ -1,0 +1,58 @@
+"""Compute/communication overlap — the paper's insight I5: the host merge
+is tolerable when overlapped with DPU compute.
+
+TPU realization: split the per-step batch into microbatches and emit the
+gradient reduction of microbatch *i* interleaved with the forward+backward
+of microbatch *i+1* inside one ``lax.scan``.  XLA's latency-hiding
+scheduler turns the interleaved psums into async collectives that run
+behind the next microbatch's compute (visible in the dry-run HLO as
+``all-reduce-start``/``all-reduce-done`` pairs straddling dots).
+
+``microbatched_grads`` is the generic engine; the Trainer uses it when
+``grad_accum_microbatches > 1``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+def microbatched_grads(loss_fn: Callable, params: Any, batch: Any, *,
+                       n_micro: int,
+                       reduce_fn: Optional[Callable] = None
+                       ) -> Tuple[jax.Array, Any, Any]:
+    """Gradient accumulation with per-microbatch reduction overlap.
+
+    ``loss_fn(params, microbatch) -> (loss, metrics)``;
+    ``reduce_fn(grads) -> grads`` is the (hierarchical / compressed)
+    collective applied per microbatch so it overlaps the next microbatch's
+    compute.  When None, a plain sum-accumulate is used and the caller
+    reduces once at the end (no overlap — the baseline the §Perf log
+    compares against).
+
+    batch leaves must have leading dim divisible by ``n_micro``.
+    """
+
+    def split(x):
+        return x.reshape((n_micro, x.shape[0] // n_micro) + x.shape[1:])
+
+    micro = jax.tree.map(split, batch)
+    gfn = jax.value_and_grad(lambda p, b: loss_fn(p, b)[0])
+
+    def body(carry, mb):
+        loss_acc, grad_acc = carry
+        loss, grads = gfn(params, mb)
+        if reduce_fn is not None:
+            grads = reduce_fn(grads)   # overlaps next microbatch compute
+        grad_acc = jax.tree.map(jnp.add, grad_acc, grads)
+        return (loss_acc + loss, grad_acc), None
+
+    zero = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    (loss, grads), _ = jax.lax.scan(body, (jnp.zeros((), jnp.float32),
+                                           zero), micro)
+    scale = 1.0 / n_micro
+    grads = jax.tree.map(lambda g: g * scale, grads)
+    return loss * scale, grads, None

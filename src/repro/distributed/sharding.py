@@ -1,0 +1,143 @@
+"""Logical-axis sharding: one rules table maps model-space axis names to
+mesh axes; models annotate activations via ``shard_hint`` and the launcher
+derives parameter/input/output shardings from the same table.
+
+Axis vocabulary (DESIGN.md §6):
+  batch    — data-parallel batch            -> ("pod", "data")
+  seq      — sequence (context parallelism / decode KV sharding) -> "model"
+             for decode caches (flash-decoding), unsharded for train
+  embed    — d_model; **parameter storage only** (FSDP / ZeRO-3) -> "data"
+  heads    — query heads -> "model" when divisible, else replicated
+  kv_heads — KV heads -> "model" when divisible, else replicated
+  ff       — MLP hidden -> "model"
+  experts  — MoE expert dim -> "model" (expert parallelism)
+  vocab    — embedding/logit vocab -> "model"
+  lru      — RG-LRU width / SSD inner channels -> "model"
+  state    — SSM state dim -> replicated
+
+The rules object is intentionally tiny: a dict + a contextvar so model code
+stays framework-free (a bare dict of str->mesh-axis|None).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import contextvars
+import dataclasses
+from typing import Mapping, Optional, Sequence
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class LogicalRules:
+    mesh: Mesh
+    table: Mapping[str, object]      # logical axis -> mesh axis (str/tuple) or None
+
+    def spec(self, *logical_axes: Optional[str]) -> P:
+        parts = []
+        used = set()
+
+        def claim(ax):
+            # a mesh axis may appear at most once in a PartitionSpec
+            if ax is None:
+                return None
+            if isinstance(ax, (tuple, list)):
+                got = tuple(a for a in ax if a not in used)
+                used.update(got)
+                return got if got else None
+            if ax in used:
+                return None
+            used.add(ax)
+            return ax
+
+        for name in logical_axes:
+            ax = self.table.get(name) if name is not None else None
+            parts.append(claim(ax))
+        return P(*parts)
+
+    def sharding(self, *logical_axes: Optional[str]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(*logical_axes))
+
+
+_RULES: contextvars.ContextVar[Optional[LogicalRules]] = \
+    contextvars.ContextVar("repro_sharding_rules", default=None)
+
+
+def current_rules() -> Optional[LogicalRules]:
+    return _RULES.get()
+
+
+@contextlib.contextmanager
+def use_rules(rules: Optional[LogicalRules]):
+    tok = _RULES.set(rules)
+    try:
+        yield
+    finally:
+        _RULES.reset(tok)
+
+
+def shard_hint(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
+    """Annotate an activation with its logical layout.  No-op when no rules
+    are active (single-device tests) — model code never imports meshes.
+    Dims not divisible by their mesh-axis extent fall back to replication
+    (e.g. seq=1 decode can't shard over model=16)."""
+    rules = _RULES.get()
+    if rules is None:
+        return x
+    spec = list(rules.spec(*logical_axes))
+    for i, ax in enumerate(spec):
+        if ax is None:
+            continue
+        size = rules.mesh.shape[ax] if isinstance(ax, str) else \
+            int(__import__("numpy").prod([rules.mesh.shape[a] for a in ax]))
+        if i >= x.ndim or x.shape[i] % size:
+            spec[i] = None
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(rules.mesh, P(*spec)))
+
+
+def logical_to_spec(rules: Optional[LogicalRules],
+                    axes: Sequence[Optional[str]]) -> Optional[P]:
+    if rules is None:
+        return None
+    return rules.spec(*axes)
+
+
+# ---------------------------------------------------------------------------
+# default rule tables
+# ---------------------------------------------------------------------------
+
+def make_rules(mesh: Mesh, *, n_heads: int, n_kv_heads: int,
+               shard_seq_decode: bool = True,
+               fsdp_params: bool = True) -> LogicalRules:
+    """Build the per-arch rules table (DESIGN.md §6).
+
+    Head axes fall back to replication when not divisible by the model-axis
+    size (qwen2-0.5b 14H, whisper-tiny 6H, phi4-mini 24H, recurrentgemma
+    10H) — the MLP/vocab/expert dims still use TP there.
+    """
+    msize = mesh.shape["model"]
+    dp_axes = tuple(a for a in ("pod", "data") if a in mesh.shape)
+    table = {
+        "batch": dp_axes,
+        "seq": None,
+        # Megatron-style sequence-parallel residual stream: activations
+        # between blocks shard their seq dim over `model` (16x activation
+        # memory cut; SP<->TP transitions become all-to-alls)
+        "seq_act": "model",
+        "kv_seq": "model" if shard_seq_decode else None,
+        # ZeRO/FSDP over the full data-parallel product (pod included)
+        "embed": dp_axes if fsdp_params else None,
+        "embed_act": None,
+        "heads": "model" if n_heads % msize == 0 else None,
+        "kv_heads": "model" if n_kv_heads % msize == 0 else None,
+        "ff": "model",
+        "experts": "model",
+        "vocab": "model",
+        "lru": "model",
+        "state": None,
+        "head_dim": None,
+    }
+    return LogicalRules(mesh=mesh, table=table)

@@ -1,0 +1,109 @@
+"""Causal flash attention Pallas TPU kernel.
+
+Grid: (B, H, num_q_blocks, num_kv_blocks) — the last (kv) dimension is
+sequential on TPU, so the online-softmax state (m, l, acc) lives in VMEM
+scratch and carries across kv steps; causal upper-triangle blocks are
+skipped with ``pl.when`` (this is the triangular schedule the jnp baseline
+lacks — see EXPERIMENTS §Perf).
+
+GQA is handled in the BlockSpec index maps: the kv block for query head
+``h`` comes from kv head ``h // group``.  Block shapes keep the working
+set in VMEM: q/k/v tiles (bq|bk, D) with D = head_dim (128-aligned).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  bq: int, bk: int, causal: bool, scale: float):
+    iq = pl.program_id(2)
+    jk = pl.program_id(3)
+    nk = pl.num_programs(3)
+
+    @pl.when(jk == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # causal: kv block strictly after the q block's last row is dead
+    live = (jk * bk <= iq * bq + bq - 1) if causal else True
+
+    @pl.when(live)
+    def _step():
+        q = q_ref[0, 0].astype(jnp.float32)            # (bq, D)
+        k = k_ref[0, 0].astype(jnp.float32)            # (bk, D)
+        v = v_ref[0, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32) * scale  # (bq, bk)
+        if causal:
+            rows = iq * bq + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 0)
+            cols = jk * bk + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (bq, bk), 1)
+            s = jnp.where(cols <= rows, s, NEG_INF)
+        m_prev = m_ref[...]
+        l_prev = l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=1, keepdims=True)
+        pv = jax.lax.dot_general(
+            p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr + pv
+        m_ref[...] = m_new
+
+    @pl.when(jk == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0, 0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, block_q: int = 512,
+                    block_k: int = 512,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, S, D); k/v: (B, Kh, S, D), H % Kh == 0 -> (B, H, S, D)."""
+    B, H, S, D = q.shape
+    Kh = k.shape[1]
+    G = H // Kh
+    bq = min(block_q, S)
+    bk = min(block_k, S)
+    assert S % bq == 0 and S % bk == 0, "seq must divide block size"
+    nq, nk = S // bq, S // bk
+    scale = 1.0 / (D ** 0.5)
+
+    kernel = functools.partial(_flash_kernel, bq=bq, bk=bk, causal=causal,
+                               scale=scale)
+    grid = (B, H, nq, nk)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, D), lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+            pl.BlockSpec((1, 1, bk, D),
+                         lambda b, h, i, j: (b, h // G, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, D),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, S, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, 1), jnp.float32),     # running max m
+            pltpu.VMEM((bq, 1), jnp.float32),     # running sum l
+            pltpu.VMEM((bq, D), jnp.float32),     # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,53 @@
+"""Jitted public wrappers for the Pallas kernels.
+
+On CPU (this container) every kernel runs with ``interpret=True`` — the
+kernel body executes in Python per grid step, validating logic against
+``ref.py``; on TPU the same calls lower to Mosaic.  ``INTERPRET`` flips
+automatically off when a TPU backend is present.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import lut_activation as _lut
+from repro.kernels import fxp_matmul as _fxp
+from repro.kernels import kmeans_assign as _km
+from repro.kernels import split_hist as _sh
+
+INTERPRET = jax.default_backend() != "tpu"
+
+
+@partial(jax.jit, static_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, *, causal: bool = True, block_q: int = 512,
+                    block_k: int = 512):
+    return _fa.flash_attention(q, k, v, causal=causal, block_q=block_q,
+                               block_k=block_k, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("x_min", "x_max"))
+def lut_activation(x, table, *, x_min: float, x_max: float):
+    return _lut.lut_activation(x, table, x_min=x_min, x_max=x_max,
+                               interpret=INTERPRET)
+
+
+@jax.jit
+def fxp_matmul(a, b):
+    return _fxp.fxp_matmul(a, b, interpret=INTERPRET)
+
+
+@jax.jit
+def kmeans_assign(x, centroids):
+    return _km.kmeans_assign(x, centroids, interpret=INTERPRET)
+
+
+@partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_classes"))
+def split_hist(node_idx, xbin, y, *, n_nodes: int, n_bins: int,
+               n_classes: int):
+    return _sh.split_hist(node_idx, xbin, y, n_nodes=n_nodes,
+                          n_bins=n_bins, n_classes=n_classes,
+                          interpret=INTERPRET)

@@ -1,0 +1,28 @@
+"""Production mesh construction.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state — the dry-run sets
+``XLA_FLAGS=--xla_force_host_platform_device_count=512`` before first
+jax init, and smoke tests/benches must keep seeing 1 device.
+
+Topology (TPU v5e target):
+  single pod:  (16, 16)   axes ("data", "model") — 256 chips
+  multi-pod:   (2, 16, 16) axes ("pod", "data", "model") — 512 chips;
+               the ``pod`` axis crosses DCN (the paper's "host hop").
+"""
+
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(data: int = 1, model: int = 1):
+    """Small mesh over however many (fake or real) local devices exist —
+    used by tests that exercise sharded code paths on CPU."""
+    return jax.make_mesh((data, model), ("data", "model"))

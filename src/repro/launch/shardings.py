@@ -1,0 +1,158 @@
+"""Derive parameter / optimizer / cache / batch shardings from the logical
+rules table by pattern-matching pytree paths (DESIGN.md §6).
+
+Conventions:
+  * leaves under a ``scan``-stacked group carry a leading repeat axis
+    (unsharded);
+  * optimizer state mirrors its parameter's spec (ZeRO falls out of the
+    ``embed -> data`` FSDP rule);
+  * decode caches shard sequence over ``model`` (flash-decoding) and
+    batch over the data axes.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.distributed.sharding import LogicalRules
+
+# last-key -> logical axes, disambiguated by ndim where needed
+_PARAM_AXES = {
+    # vocab over model only: sharding d over data too makes the token
+    # gather fall into SPMD "involuntary full rematerialization"
+    "embed": ("vocab", None),
+    "head": ("embed", "vocab"),
+    "pos_emb": (None, "embed"),
+    "wq": ("embed", "heads", None),
+    "wk": ("embed", "kv_heads", None),
+    "wv": ("embed", "kv_heads", None),
+    "wo": ("heads", None, "embed"),
+    "bq": ("heads", None),
+    "bk": ("kv_heads", None),
+    "bv": ("kv_heads", None),
+    "w_down": ("ff", "embed"),
+    "router": (None, None),
+    "conv_w": (None, "lru"),
+    "conv_b": ("lru",),
+    "w_in": ("embed", None),
+    "A_log": (None,),
+    "dt_bias": (None,),
+    "D": (None,),
+    "norm_scale": ("lru",),
+    "w_out": ("lru", "embed"),
+    "w_x": ("embed", "lru"),
+    "w_a": ("lru", None),
+    "w_i": ("lru", None),
+    "lambda": ("lru",),
+    "b_a": ("lru",),
+    "b_i": ("lru",),
+    "b_up": ("ff",),
+    "b_down": (None,),
+    "scale": (None,),
+    "bias": (None,),
+}
+
+_CACHE_AXES = {
+    "k": ("batch", "kv_seq", "kv_heads", None),
+    "v": ("batch", "kv_seq", "kv_heads", None),
+    "conv": ("batch", None, "lru"),
+    "ssm": ("batch", "heads", None, None),
+    "h": ("batch", "lru"),
+}
+
+
+def _path_keys(path) -> list:
+    out = []
+    for e in path:
+        k = getattr(e, "key", None)
+        if k is None:
+            k = getattr(e, "idx", None)
+        out.append(k)
+    return out
+
+
+def _leading_stack_dims(keys, leaf_ndim, base_axes) -> int:
+    return leaf_ndim - len(base_axes)
+
+
+def param_axes(path, leaf) -> Tuple[Optional[str], ...]:
+    keys = _path_keys(path)
+    name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+    if name in ("w_gate", "w_up"):
+        base = ("experts", "embed", "ff") if leaf.ndim >= 3 and \
+            "moe" in keys else ("embed", "ff")
+    elif name == "w_down" and leaf.ndim >= 3 and "moe" in keys:
+        base = ("experts", "ff", "embed")
+    elif name in _PARAM_AXES:
+        base = _PARAM_AXES[name]
+    else:
+        base = (None,) * leaf.ndim
+    extra = leaf.ndim - len(base)
+    if extra > 0:      # scan-stacked leading repeat axes
+        base = (None,) * extra + tuple(base)
+    return tuple(base[: leaf.ndim]) if extra < 0 else tuple(base)
+
+
+def cache_axes(path, leaf) -> Tuple[Optional[str], ...]:
+    keys = _path_keys(path)
+    name = next((k for k in reversed(keys) if isinstance(k, str)), "")
+    base = _CACHE_AXES.get(name, ("batch",) + (None,) * (leaf.ndim - 1))
+    extra = leaf.ndim - len(base)
+    if extra > 0:
+        base = (None,) * extra + tuple(base)
+    return tuple(base[: leaf.ndim]) if extra < 0 else tuple(base)
+
+
+def _axis_size(rules: LogicalRules, mesh_axes) -> int:
+    if mesh_axes is None:
+        return 1
+    if isinstance(mesh_axes, (tuple, list)):
+        n = 1
+        for a in mesh_axes:
+            n *= rules.mesh.shape[a]
+        return n
+    return rules.mesh.shape[mesh_axes]
+
+
+def tree_shardings(rules: LogicalRules, tree: Any, axes_fn) -> Any:
+    """Map a pytree of ShapeDtypeStructs/arrays -> NamedShardings.
+
+    Dims whose size is not divisible by the target mesh-axis extent fall
+    back to replication (e.g. global_batch=1 in ``long_500k`` cannot
+    shard over data=16)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = []
+    for path, leaf in flat:
+        ax = list(axes_fn(path, leaf))
+        spec = list(rules.spec(*ax))
+        for i, mesh_ax in enumerate(spec):
+            if mesh_ax is None:
+                continue
+            if i >= len(leaf.shape) or \
+                    leaf.shape[i] % _axis_size(rules, mesh_ax):
+                spec[i] = None
+        out.append(NamedSharding(rules.mesh, P(*spec)))
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def param_shardings(rules: LogicalRules, params: Any) -> Any:
+    return tree_shardings(rules, params, param_axes)
+
+
+def opt_shardings(rules: LogicalRules, opt_state: Any) -> Any:
+    """Optimizer state mirrors params (m/v/master live under inner dicts
+    whose leaf paths end with the parameter names)."""
+    return tree_shardings(rules, opt_state, param_axes)
+
+
+def cache_shardings(rules: LogicalRules, cache: Any) -> Any:
+    return tree_shardings(rules, cache, cache_axes)
+
+
+def batch_shardings(rules: LogicalRules, batch: Any) -> Any:
+    def axes(path, leaf):
+        return ("batch",) + (None,) * (leaf.ndim - 1)
+    return tree_shardings(rules, batch, axes)

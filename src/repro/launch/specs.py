@@ -1,0 +1,100 @@
+"""Input specs per (architecture x assigned shape): ShapeDtypeStruct
+stand-ins for every model input — weak-type-correct, shardable, zero
+allocation (the dry-run and roofline read these).
+
+Assigned LM shape set (each applies to all 10 archs unless skipped):
+  train_4k     seq 4,096   x global_batch 256   (train_step)
+  prefill_32k  seq 32,768  x global_batch 32    (prefill forward)
+  decode_32k   KV 32,768   x global_batch 128   (serve_step, 1 token)
+  long_500k    KV 524,288  x global_batch 1     (serve_step, 1 token)
+
+``long_500k`` requires sub-quadratic attention: only mamba2-370m (O(1)
+SSD state) and recurrentgemma-2b (O(1) LRU state + 2048-window ring) run
+it; pure full-attention archs skip with a recorded reason (DESIGN.md
+§Arch-applicability).  Modality frontends are stubs: whisper receives
+precomputed frame embeddings, llava precomputed patch embeddings.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.common import ModelConfig, ATTN, LOCAL_ATTN
+
+SHAPES: Dict[str, dict] = {
+    "train_4k": dict(kind="train", seq_len=4096, global_batch=256),
+    "prefill_32k": dict(kind="prefill", seq_len=32768, global_batch=32),
+    "decode_32k": dict(kind="decode", seq_len=32768, global_batch=128),
+    "long_500k": dict(kind="decode", seq_len=524288, global_batch=1),
+}
+
+_SUBQUADRATIC = {"mamba2-370m", "recurrentgemma-2b"}
+
+
+@dataclasses.dataclass(frozen=True)
+class CellSpec:
+    arch: str
+    shape: str
+    kind: str                   # train | prefill | decode
+    batch: int
+    seq_len: int
+    skip_reason: Optional[str] = None
+
+    @property
+    def runnable(self) -> bool:
+        return self.skip_reason is None
+
+
+def cell_spec(cfg: ModelConfig, shape: str) -> CellSpec:
+    meta = SHAPES[shape]
+    skip = None
+    if shape == "long_500k" and cfg.name not in _SUBQUADRATIC:
+        skip = ("pure full-attention arch: 512k-context decode is "
+                "quadratic/unservable; long_500k runs only for SSM/hybrid "
+                "(mamba2-370m, recurrentgemma-2b)")
+    return CellSpec(arch=cfg.name, shape=shape, kind=meta["kind"],
+                    batch=meta["global_batch"], seq_len=meta["seq_len"],
+                    skip_reason=skip)
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+def batch_specs(cfg: ModelConfig, spec: CellSpec) -> Dict[str, jax.ShapeDtypeStruct]:
+    """Full-sequence inputs for train/prefill."""
+    B, S = spec.batch, spec.seq_len
+    out = {}
+    if cfg.encoder is not None:
+        # whisper: decoder tokens = S; stub frame embeddings from the
+        # (stubbed) conv frontend
+        out["tokens"] = _sds((B, S), jnp.int32)
+        out["frames"] = _sds((B, cfg.encoder.n_ctx, cfg.d_model),
+                             jnp.dtype(cfg.dtype))
+        return out
+    n_prefix = cfg.n_prefix_embeds
+    if n_prefix:
+        # vlm: patch embeddings occupy the first n_prefix of S positions
+        out["prefix_embeds"] = _sds((B, n_prefix, cfg.d_model),
+                                    jnp.dtype(cfg.dtype))
+        out["tokens"] = _sds((B, S - n_prefix), jnp.int32)
+    else:
+        out["tokens"] = _sds((B, S), jnp.int32)
+    return out
+
+
+def decode_specs(cfg: ModelConfig, spec: CellSpec, model) -> Tuple:
+    """(cache_specs, token_spec, pos_spec) for serve_step."""
+    B, S = spec.batch, spec.seq_len
+    cache = jax.eval_shape(lambda: model.init_cache(B, S))
+    token = _sds((B, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    return cache, token, pos
+
+
+def train_tokens_per_step(spec: CellSpec) -> int:
+    return spec.batch * spec.seq_len

@@ -1,0 +1,95 @@
+"""Production training launcher: ``--arch <id>`` + mesh + fault-tolerant
+runtime.  On real hardware this runs under one process per host with the
+production mesh; on the CPU container use the smoke configs
+(``--smoke``) — the full-size configs are exercised via dryrun.py.
+
+  PYTHONPATH=src python -m repro.launch.train --arch qwen2-0.5b --smoke \
+      --steps 50 --batch 8 --seq 128
+"""
+
+from __future__ import annotations
+
+import argparse
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, get_smoke_config, list_archs
+from repro.models import build
+from repro.optim import adamw
+from repro.data import TokenStream
+from repro.runtime import Trainer, TrainerConfig
+from repro.distributed.sharding import make_rules, use_rules
+from repro.launch.mesh import make_production_mesh
+from repro.launch import shardings as sh
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True, choices=list_archs())
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced same-family config (CPU)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--production-mesh", action="store_true",
+                    help="build the (16,16) mesh (needs 256 devices)")
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_smoke_config(args.arch) if args.smoke else \
+        get_config(args.arch)
+    model = build(cfg)
+
+    rules = None
+    if args.production_mesh:
+        mesh = make_production_mesh(multi_pod=args.multi_pod)
+        rules = make_rules(mesh, n_heads=cfg.n_heads,
+                           n_kv_heads=cfg.n_kv_heads)
+
+    with use_rules(rules):
+        params = model.init(jax.random.PRNGKey(0))
+        opt = adamw(args.lr)
+        state = {"params": params, "opt": opt.init(params)}
+        if rules is not None:
+            state = jax.device_put(state, {
+                "params": sh.param_shardings(rules, params),
+                "opt": sh.opt_shardings(rules, state["opt"])})
+
+        stream = TokenStream(cfg.vocab_size, args.batch, args.seq, seed=0)
+
+        def make_batch(step):
+            b = stream.batch_at(step)
+            if cfg.encoder is not None:
+                b["frames"] = jnp.zeros(
+                    (args.batch, cfg.encoder.n_ctx, cfg.d_model),
+                    cfg.compute_dtype)
+            if cfg.n_prefix_embeds:
+                b["prefix_embeds"] = jnp.zeros(
+                    (args.batch, cfg.n_prefix_embeds, cfg.d_model),
+                    cfg.compute_dtype)
+            return b
+
+        @jax.jit
+        def step_fn(state, batch):
+            def lfn(p):
+                return model.loss(p, batch)
+            (loss, met), grads = jax.value_and_grad(
+                lfn, has_aux=True)(state["params"])
+            new_p, new_o = opt.update(grads, state["opt"],
+                                      state["params"])
+            return {"params": new_p, "opt": new_o}, {"loss": loss, **met}
+
+        trainer = Trainer(step_fn, state, make_batch,
+                          TrainerConfig(ckpt_dir=args.ckpt_dir,
+                                        log_every=10))
+        out = trainer.run(args.steps, callback=lambda s, m: print(
+            f"step {s}: loss={float(m['loss']):.4f}"))
+        print(f"done: {out['final_step']} steps, "
+              f"restarts={out['restarts']}")
+
+
+if __name__ == "__main__":
+    main()

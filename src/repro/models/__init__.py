@@ -1,0 +1,8 @@
+"""Assigned LM-architecture pool: composable blocks (GQA attention, MoE,
+Mamba-2 SSD, RG-LRU, enc-dec) behind one Model facade."""
+
+from repro.models.common import (  # noqa: F401
+    ModelConfig, MoEConfig, SSMConfig, RGLRUConfig, EncoderConfig,
+    ATTN, LOCAL_ATTN, MAMBA2, RGLRU,
+)
+from repro.models.model_api import Model, build  # noqa: F401

@@ -1,0 +1,264 @@
+"""Attention: GQA + RoPE + optional QKV bias + sliding window + cross-attn,
+with a KV cache for serving and a chunked online-softmax path for long
+sequences (pure-JAX flash; the Pallas TPU kernel lives in
+``kernels/flash_attention.py`` and shares this module as its reference).
+
+Sharding (via logical hints): query heads / KV heads shard over the
+``model`` axis when divisible; decode KV caches shard their *sequence* dim
+over ``model`` (flash-decoding: XLA reduces the partial softmax stats
+across shards), which keeps 32k caches per-device-resident even when the
+head count cannot shard (DESIGN.md §6).
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.distributed.sharding import shard_hint
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def init_attn(cfg: cm.ModelConfig, key: jax.Array, *,
+              kv_d_model: int | None = None) -> dict:
+    d, H, Kh, Dh = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    kd = kv_d_model or d
+    ks = cm.split_keys(key, 4)
+    dt = cfg.compute_dtype
+    p = {
+        "wq": cm.dense_init(ks[0], (d, H, Dh), dt, fan_in=d),
+        "wk": cm.dense_init(ks[1], (kd, Kh, Dh), dt, fan_in=kd),
+        "wv": cm.dense_init(ks[2], (kd, Kh, Dh), dt, fan_in=kd),
+        "wo": cm.dense_init(ks[3], (H, Dh, d), dt, fan_in=H * Dh),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H, Dh), dt)
+        p["bk"] = jnp.zeros((Kh, Dh), dt)
+        p["bv"] = jnp.zeros((Kh, Dh), dt)
+    return p
+
+
+# ---------------------------------------------------------------------------
+# core softmax attention (direct + chunked/online)
+# ---------------------------------------------------------------------------
+
+def _mask_bias(q_pos, k_pos, *, causal: bool, window: int,
+               kv_valid_len=None):
+    """Additive mask bias (0 / -inf) of shape (q, k) in f32."""
+    ok = jnp.ones((q_pos.shape[0], k_pos.shape[0]), bool)
+    if causal:
+        ok &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        ok &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_valid_len is not None:
+        ok &= k_pos[None, :] < kv_valid_len
+    return jnp.where(ok, 0.0, -jnp.inf).astype(jnp.float32)
+
+
+def mha(q: jax.Array, k: jax.Array, v: jax.Array, *, causal: bool,
+        window: int = 0, q_offset=0, kv_valid_len=None,
+        chunk: int = 0) -> jax.Array:
+    """Grouped-query attention.
+
+    q: (B, Sq, H, Dh); k/v: (B, Skv, Kh, Dh); returns (B, Sq, H, Dh).
+    ``q_offset`` is the absolute position of q[0] (decode / windowed).
+    ``chunk`` > 0 and Skv > chunk selects the online-softmax path.
+    """
+    B, Sq, H, Dh = q.shape
+    Kh = k.shape[2]
+    G = H // Kh
+    # GQA via kv-head expansion: keeping a (Kh, G) grouped layout blocks
+    # GSPMD from sharding 64 query heads over model=16 (neither factor
+    # divides), which silently replicated attention per model rank.
+    # Repeating kv to H heads costs one transient (B,S,H,Dh) but lets the
+    # head dim shard cleanly (§Perf iteration: 110b memory term -16x).
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    k = shard_hint(k, "batch", None, "heads", None)
+    v = shard_hint(v, "batch", None, "heads", None)
+    scale = 1.0 / jnp.sqrt(jnp.asarray(Dh, jnp.float32))
+    q_pos = q_offset + jnp.arange(Sq)
+
+    if not chunk or k.shape[1] <= chunk:
+        k_pos = jnp.arange(k.shape[1])
+        bias = _mask_bias(q_pos, k_pos, causal=causal, window=window,
+                          kv_valid_len=kv_valid_len)
+        s = jnp.einsum("bqhd,bshd->bhqs", q, k,
+                       preferred_element_type=jnp.float32)
+        s = s * scale + bias[None, None]
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhqs,bshd->bqhd", p.astype(v.dtype), v,
+                       preferred_element_type=jnp.float32)
+        return o.astype(q.dtype)
+
+    # ---- flash-style double chunking (jnp): outer sequential loop over q
+    # blocks, inner online-softmax scan over kv blocks.  Peak memory is
+    # O(B·H·cq·ck) regardless of S.  The baseline schedule sweeps every
+    # kv block with masking; the triangular (causal-skip) schedule is a
+    # recorded §Perf optimization. ----
+    Skv = k.shape[1]
+    nk = -(-Skv // chunk)
+    pad = nk * chunk - Skv
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+    kc = k.reshape(B, nk, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    vc = v.reshape(B, nk, chunk, H, Dh).transpose(1, 0, 2, 3, 4)
+    starts = jnp.arange(nk) * chunk
+
+    cq = min(chunk, Sq)
+    nq = -(-Sq // cq)
+    qpad = nq * cq - Sq
+    q_p = jnp.pad(q, ((0, 0), (0, qpad), (0, 0), (0, 0))) if qpad else q
+    qc = q_p.reshape(B, nq, cq, H, Dh).transpose(1, 0, 2, 3, 4)
+    q_starts = jnp.arange(nq) * cq
+
+    def q_block(args):
+        qi, q0 = args
+        qp = q_offset + q0 + jnp.arange(cq)
+
+        @jax.checkpoint  # flash bwd: recompute the block, never store s/p
+        def body(carry, xs):
+            m, l, acc = carry
+            kj, vj, start = xs
+            k_pos = start + jnp.arange(chunk)
+            bias = _mask_bias(qp, k_pos, causal=causal, window=window,
+                              kv_valid_len=kv_valid_len)
+            if pad:  # padded kv tail is never valid
+                bias = bias + jnp.where(k_pos[None, :] < Skv, 0.0,
+                                        -jnp.inf)
+            s = jnp.einsum("bqhd,bshd->bhqs", qi, kj,
+                           preferred_element_type=jnp.float32)
+            s = s * scale + bias[None, None]
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            # guard all-masked rows: exp(-inf - -inf)
+            m_safe = jnp.where(jnp.isneginf(m_new), 0.0, m_new)
+            p = jnp.exp(s - m_safe[..., None])
+            corr = jnp.exp(jnp.where(jnp.isneginf(m), m_safe, m) - m_safe)
+            l_new = l * corr + jnp.sum(p, axis=-1)
+            pv = jnp.einsum("bhqs,bshd->bhqd", p.astype(vj.dtype), vj,
+                            preferred_element_type=jnp.float32)
+            acc_new = acc * corr[..., None] + pv
+            return (m_new, l_new, acc_new), None
+
+        m0 = jnp.full((B, H, cq), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, H, cq), jnp.float32)
+        a0 = jnp.zeros((B, H, cq, Dh), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0),
+                                      (kc, vc, starts))
+        return acc / jnp.maximum(l, 1e-30)[..., None]
+
+    out = jax.lax.map(q_block, (qc, q_starts))       # (nq,B,H,cq,Dh)
+    out = out.transpose(1, 0, 3, 2, 4).reshape(B, nq * cq, H, Dh)
+    if qpad:
+        out = out[:, :Sq]
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# block-level forward (projections + rope + cache plumbing)
+# ---------------------------------------------------------------------------
+
+def qkv_proj(cfg: cm.ModelConfig, p: dict, x: jax.Array,
+             kv_x: jax.Array | None = None):
+    kv_x = x if kv_x is None else kv_x
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", kv_x, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", kv_x, p["wv"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+        k = k + p["bk"]
+        v = v + p["bv"]
+    q = shard_hint(q, "batch", "seq", "heads", "head_dim")
+    k = shard_hint(k, "batch", "seq", "kv_heads", "head_dim")
+    v = shard_hint(v, "batch", "seq", "kv_heads", "head_dim")
+    return q, k, v
+
+
+def out_proj(p: dict, o: jax.Array) -> jax.Array:
+    y = jnp.einsum("bshk,hkd->bsd", o, p["wo"])
+    return shard_hint(y, "batch", "seq", "embed_act")
+
+
+def attn_full(cfg: cm.ModelConfig, p: dict, x: jax.Array,
+              positions: jax.Array, *, causal: bool = True,
+              window: int = 0, kv_x: jax.Array | None = None,
+              kv_positions: jax.Array | None = None) -> jax.Array:
+    """Full-sequence attention (train / prefill / encoder / cross)."""
+    q, k, v = qkv_proj(cfg, p, x, kv_x)
+    if cfg.pos_emb == "rope":
+        q = cm.rope(q, positions, cfg.rope_base, cfg.rope_dim)
+        kp = positions if kv_positions is None else kv_positions
+        k = cm.rope(k, kp, cfg.rope_base, cfg.rope_dim)
+    o = mha(q, k, v, causal=causal, window=window,
+            chunk=cfg.attn_chunk if k.shape[1] > cfg.attn_chunk else 0)
+    return out_proj(p, o)
+
+
+def init_cache(cfg: cm.ModelConfig, batch: int, max_len: int, *,
+               window: int = 0, dtype=None) -> dict:
+    """KV cache for one attention layer.  ``window > 0`` allocates a ring
+    buffer of that size (local attention: O(window) state for 500k decode)."""
+    size = min(window, max_len) if window > 0 else max_len
+    dt = dtype or cfg.compute_dtype
+    shape = (batch, size, cfg.n_kv_heads, cfg.hd)
+    return {
+        "k": jnp.zeros(shape, dt),
+        "v": jnp.zeros(shape, dt),
+    }
+
+
+def attn_decode(cfg: cm.ModelConfig, p: dict, x: jax.Array, cache: dict,
+                pos: jax.Array, *, window: int = 0
+                ) -> Tuple[jax.Array, dict]:
+    """One-token decode with cache update.
+
+    x: (B, 1, d); pos: scalar absolute position.  RoPE is applied *before*
+    insertion, so ring-buffer entries carry their absolute rotation.
+    """
+    B = x.shape[0]
+    q, k, v = qkv_proj(cfg, p, x)
+    posb = jnp.full((B, 1), pos, jnp.int32)
+    if cfg.pos_emb == "rope":
+        q = cm.rope(q, posb, cfg.rope_base, cfg.rope_dim)
+        k = cm.rope(k, posb, cfg.rope_base, cfg.rope_dim)
+
+    size = cache["k"].shape[1]
+    slot = pos % size if window > 0 else pos
+    ck = jax.lax.dynamic_update_slice(cache["k"], k, (0, slot, 0, 0))
+    cv = jax.lax.dynamic_update_slice(cache["v"], v, (0, slot, 0, 0))
+    ck = shard_hint(ck, "batch", "kv_seq", "kv_heads", "head_dim")
+    cv = shard_hint(cv, "batch", "kv_seq", "kv_heads", "head_dim")
+
+    if window > 0:
+        # ring buffer: every filled slot is a past position; validity only
+        valid = jnp.minimum(pos + 1, size)
+        o = mha(q, ck, cv, causal=False, kv_valid_len=valid)
+    else:
+        o = mha(q, ck, cv, causal=False, kv_valid_len=pos + 1)
+    return out_proj(p, o), {"k": ck, "v": cv}
+
+
+def cross_cache(cfg: cm.ModelConfig, p: dict, enc_out: jax.Array) -> dict:
+    """Precompute encoder K/V once (whisper decoder cross-attention)."""
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    if cfg.qkv_bias:
+        k, v = k + p["bk"], v + p["bv"]
+    return {"k": k, "v": v}
+
+
+def cross_attend(cfg: cm.ModelConfig, p: dict, x: jax.Array,
+                 cc: dict) -> jax.Array:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    if cfg.qkv_bias:
+        q = q + p["bq"]
+    o = mha(q, cc["k"], cc["v"], causal=False)
+    return out_proj(p, o)

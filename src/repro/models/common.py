@@ -1,0 +1,202 @@
+"""Shared model-config schema, norms, RoPE, and init helpers.
+
+One composable config drives all ten assigned architectures: a per-layer
+``block_pattern`` selects the temporal mixer (full/local attention, Mamba-2
+SSD, RG-LRU) and the channel mixer (dense MLP or MoE).  Homogeneous and
+periodic patterns are ``lax.scan``-stacked so HLO size is depth-independent
+(mandatory for the 94-layer x 512-device dry-run).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+
+# block kinds
+ATTN = "attn"             # full (causal for decoder) attention + channel mixer
+LOCAL_ATTN = "local_attn"  # sliding-window attention + channel mixer
+MAMBA2 = "mamba2"          # SSD mixer (no separate channel mixer)
+RGLRU = "rglru"            # RG-LRU recurrent block + channel mixer
+
+
+@dataclasses.dataclass(frozen=True)
+class MoEConfig:
+    n_experts: int
+    top_k: int
+    d_ff: int                      # per-expert hidden size
+    capacity_factor: float = 1.25
+    router_jitter: float = 0.0
+
+
+@dataclasses.dataclass(frozen=True)
+class SSMConfig:
+    d_state: int = 128
+    head_dim: int = 64
+    expand: int = 2
+    n_groups: int = 1
+    conv_width: int = 4
+    chunk: int = 128
+    dt_min: float = 0.001
+    dt_max: float = 0.1
+
+
+@dataclasses.dataclass(frozen=True)
+class RGLRUConfig:
+    lru_width: int = 0             # 0 -> d_model
+    conv_width: int = 4
+    c: float = 8.0                 # the fixed RG-LRU exponent scale
+
+
+@dataclasses.dataclass(frozen=True)
+class EncoderConfig:
+    """Whisper-style encoder; the conv/audio frontend is a stub — inputs
+    arrive as precomputed frame embeddings (B, n_ctx, d_model)."""
+    n_layers: int
+    n_ctx: int                     # e.g. 1500 audio frames
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0              # 0 -> d_model // n_heads
+    block_pattern: Tuple[str, ...] = ()   # () -> (ATTN,) * n_layers
+    act: str = "swiglu"            # "swiglu" | "gelu"
+    norm: str = "rmsnorm"          # "rmsnorm" | "layernorm"
+    qkv_bias: bool = False
+    rope_base: float = 10000.0
+    rope_dim: int = 0              # 0 -> head_dim (partial RoPE if smaller)
+    window: int = 0                # sliding window for LOCAL_ATTN layers
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    emb_scale: bool = False        # gemma-style sqrt(d_model) embed scaling
+    pos_emb: str = "rope"          # "rope" | "absolute" (whisper)
+    moe: Optional[MoEConfig] = None
+    ssm: Optional[SSMConfig] = None
+    rglru: Optional[RGLRUConfig] = None
+    encoder: Optional[EncoderConfig] = None
+    # modality frontend stubs: >0 means input_specs carries precomputed
+    # embeddings of this many positions prepended to the token stream
+    n_prefix_embeds: int = 0       # e.g. vision patches for llava
+    dtype: str = "bfloat16"
+    # runtime knobs
+    attn_chunk: int = 1024         # q/kv flash block size for long seqs
+    remat: bool = True
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or (self.d_model // self.n_heads)
+
+    @property
+    def pattern(self) -> Tuple[str, ...]:
+        return self.block_pattern or (ATTN,) * self.n_layers
+
+    @property
+    def compute_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    def scan_groups(self) -> Tuple[Tuple[str, ...], int, Tuple[str, ...]]:
+        """Split the pattern into (unit, n_repeats, tail) where
+        pattern == unit * n_repeats + tail and unit is the smallest
+        repeating prefix — scan over repeats, unroll the tail."""
+        pat = self.pattern
+        n = len(pat)
+        for ulen in range(1, n + 1):
+            unit = pat[:ulen]
+            reps = n // ulen
+            if reps >= 2 and unit * reps == pat[: ulen * reps]:
+                tail = pat[ulen * reps:]
+                return unit, reps, tail
+        return pat, 1, ()
+
+
+# ---------------------------------------------------------------------------
+# numerics
+# ---------------------------------------------------------------------------
+
+def rmsnorm(x: jax.Array, scale: jax.Array, eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    out = xf * jax.lax.rsqrt(var + eps) * (1.0 + scale.astype(jnp.float32))
+    return out.astype(dt)
+
+
+def layernorm(x: jax.Array, scale: jax.Array, bias: jax.Array,
+              eps: float) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    mu = jnp.mean(xf, axis=-1, keepdims=True)
+    var = jnp.var(xf, axis=-1, keepdims=True)
+    out = (xf - mu) * jax.lax.rsqrt(var + eps)
+    out = out * scale.astype(jnp.float32) + bias.astype(jnp.float32)
+    return out.astype(dt)
+
+
+def apply_norm(cfg: ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    if cfg.norm == "rmsnorm":
+        return rmsnorm(x, p["scale"], cfg.norm_eps)
+    return layernorm(x, p["scale"], p["bias"], cfg.norm_eps)
+
+
+def init_norm(cfg: ModelConfig) -> dict:
+    if cfg.norm == "rmsnorm":
+        return {"scale": jnp.zeros((cfg.d_model,), cfg.compute_dtype)}
+    return {"scale": jnp.ones((cfg.d_model,), cfg.compute_dtype),
+            "bias": jnp.zeros((cfg.d_model,), cfg.compute_dtype)}
+
+
+def rope(x: jax.Array, positions: jax.Array, base: float,
+         rope_dim: int = 0) -> jax.Array:
+    """Rotary embedding on the last dim of (B, S, H, Dh).
+
+    ``rope_dim < Dh`` applies partial RoPE (phi-style): only the first
+    ``rope_dim`` channels rotate."""
+    dh = x.shape[-1]
+    rd = rope_dim or dh
+    half = rd // 2
+    freq = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq   # (B,S,half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    xr = x[..., :rd].astype(jnp.float32)
+    x1, x2 = xr[..., :half], xr[..., half:]
+    rot = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin],
+                          axis=-1)
+    if rd < dh:
+        rot = jnp.concatenate([rot, x[..., rd:].astype(jnp.float32)],
+                              axis=-1)
+    return rot.astype(x.dtype)
+
+
+def sinusoidal_pos_emb(n_pos: int, d: int) -> jax.Array:
+    """Whisper-style absolute sinusoidal embeddings (f32, cast at use)."""
+    half = d // 2
+    freq = jnp.exp(-math.log(10000.0) * jnp.arange(half) / (half - 1))
+    ang = jnp.arange(n_pos)[:, None] * freq[None, :]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(key: jax.Array, shape: Sequence[int], dtype,
+               fan_in: int | None = None) -> jax.Array:
+    fan_in = fan_in if fan_in is not None else shape[0]
+    std = 1.0 / math.sqrt(fan_in)
+    return (jax.random.normal(key, tuple(shape), jnp.float32) * std
+            ).astype(dtype)
+
+
+def split_keys(key: jax.Array, n: int):
+    return list(jax.random.split(key, n))

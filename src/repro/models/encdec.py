@@ -1,0 +1,217 @@
+"""Whisper-style encoder-decoder.
+
+The audio frontend (mel conv stack) is a STUB per the assignment:
+``input_specs()`` supplies precomputed frame embeddings (B, n_audio_ctx,
+d_model).  The encoder is a non-causal transformer over those frames; the
+decoder is a causal transformer with cross-attention into the encoder
+output.  Whisper uses LayerNorm + GELU + absolute (sinusoidal) positions —
+all driven by the config.
+"""
+
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import attention as att
+from repro.models import mlp as mlp_mod
+from repro.models import transformer as tfm
+from repro.distributed.sharding import shard_hint
+
+
+# ---------------------------------------------------------------------------
+# encoder
+# ---------------------------------------------------------------------------
+
+def init_encoder(cfg: cm.ModelConfig, key: jax.Array) -> dict:
+    ec = cfg.encoder
+    keys = jax.random.split(key, ec.n_layers)
+
+    def one(k):
+        k1, k2 = jax.random.split(k)
+        return {"norm1": cm.init_norm(cfg),
+                "attn": att.init_attn(cfg, k1),
+                "norm2": cm.init_norm(cfg),
+                "mlp": mlp_mod.init_mlp(cfg, k2)}
+
+    layers = [one(k) for k in keys]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *layers)
+    return {"scan": stacked, "final_norm": cm.init_norm(cfg)}
+
+
+def encode(cfg: cm.ModelConfig, params: dict, frames: jax.Array
+           ) -> jax.Array:
+    """frames: (B, n_ctx, d) stub embeddings -> encoder states."""
+    ec = cfg.encoder
+    x = frames.astype(cfg.compute_dtype)
+    x = x + cm.sinusoidal_pos_emb(ec.n_ctx, cfg.d_model).astype(x.dtype)
+    x = shard_hint(x, "batch", "seq", "embed_act")
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer(x, p):
+        h = cm.apply_norm(cfg, p["norm1"], x)
+        x = x + att.attn_full(cfg, p["attn"], h, positions, causal=False)
+        h = cm.apply_norm(cfg, p["norm2"], x)
+        x = x + mlp_mod.mlp(cfg, p["mlp"], h)
+        return shard_hint(x, "batch", "seq_act", None), None
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["scan"])
+    return cm.apply_norm(cfg, params["final_norm"], x)
+
+
+# ---------------------------------------------------------------------------
+# decoder (causal self-attn + cross-attn + mlp per layer)
+# ---------------------------------------------------------------------------
+
+def init_decoder(cfg: cm.ModelConfig, key: jax.Array) -> dict:
+    keys = jax.random.split(key, cfg.n_layers)
+
+    def one(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {"norm1": cm.init_norm(cfg),
+                "self_attn": att.init_attn(cfg, k1),
+                "norm_x": cm.init_norm(cfg),
+                "cross_attn": att.init_attn(cfg, k2),
+                "norm2": cm.init_norm(cfg),
+                "mlp": mlp_mod.init_mlp(cfg, k3)}
+
+    layers = [one(k) for k in keys]
+    return {"scan": jax.tree.map(lambda *xs: jnp.stack(xs), *layers)}
+
+
+def _dec_layer(cfg, p, x, positions, enc_out):
+    h = cm.apply_norm(cfg, p["norm1"], x)
+    x = x + att.attn_full(cfg, p["self_attn"], h, positions, causal=True)
+    h = cm.apply_norm(cfg, p["norm_x"], x)
+    cc = att.cross_cache(cfg, p["cross_attn"], enc_out)
+    x = x + att.cross_attend(cfg, p["cross_attn"], h, cc)
+    h = cm.apply_norm(cfg, p["norm2"], x)
+    x = x + mlp_mod.mlp(cfg, p["mlp"], h)
+    return shard_hint(x, "batch", "seq_act", None)
+
+
+# ---------------------------------------------------------------------------
+# full model
+# ---------------------------------------------------------------------------
+
+def init_encdec(cfg: cm.ModelConfig, key: jax.Array) -> dict:
+    k_enc, k_dec, k_emb = jax.random.split(key, 3)
+    V = tfm.padded_vocab(cfg)
+    return {
+        "encoder": init_encoder(cfg, k_enc),
+        "decoder": init_decoder(cfg, k_dec),
+        "embed": cm.dense_init(k_emb, (V, cfg.d_model), cfg.compute_dtype,
+                               fan_in=cfg.d_model),
+        "pos_emb": cm.dense_init(jax.random.fold_in(k_emb, 1),
+                                 (4096 * 16, cfg.d_model),
+                                 cfg.compute_dtype),
+        "final_norm": cm.init_norm(cfg),
+    }
+
+
+def _dec_embed(cfg, params, tokens, pos0=0):
+    x = jnp.take(params["embed"], tokens, axis=0)
+    S = tokens.shape[1]
+    pe = jax.lax.dynamic_slice_in_dim(params["pos_emb"], pos0, S, axis=0)
+    return shard_hint(x + pe[None], "batch", "seq", "embed_act")
+
+
+def _dec_head(cfg, params, x):
+    logits = jnp.einsum("bsd,vd->bsv", x, params["embed"])  # tied (whisper)
+    V, Vp = cfg.vocab_size, tfm.padded_vocab(cfg)
+    if Vp != V:
+        logits = logits + jnp.where(jnp.arange(Vp) < V, 0.0,
+                                    -1e9).astype(logits.dtype)
+    return shard_hint(logits, "batch", "seq", "vocab")
+
+
+def encdec_forward(cfg: cm.ModelConfig, params: dict, tokens: jax.Array,
+                   frames: jax.Array) -> jax.Array:
+    enc_out = encode(cfg, params["encoder"], frames)
+    x = _dec_embed(cfg, params, tokens)
+    B, S, _ = x.shape
+    positions = jnp.broadcast_to(jnp.arange(S)[None], (B, S))
+
+    def layer(x, p):
+        return _dec_layer(cfg, p, x, positions, enc_out), None
+
+    body = layer
+    if cfg.remat:
+        body = jax.checkpoint(
+            layer, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["decoder"]["scan"])
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    return _dec_head(cfg, params, x)
+
+
+def encdec_loss(cfg: cm.ModelConfig, params: dict, batch: dict
+                ) -> Tuple[jax.Array, dict]:
+    """batch: {"tokens": (B,S), "frames": (B,n_ctx,d)}."""
+    logits = encdec_forward(cfg, params, batch["tokens"], batch["frames"])
+    ce = tfm.cross_entropy(logits, batch["tokens"])
+    return ce, {"ce": ce, "aux": jnp.zeros((), jnp.float32)}
+
+
+# -- serving ---------------------------------------------------------------
+
+def encdec_init_cache(cfg: cm.ModelConfig, batch: int, max_len: int,
+                      enc_out: jax.Array | None = None) -> dict:
+    """Self-attn KV rings per decoder layer + static cross K/V."""
+    L = cfg.n_layers
+    self_c = jax.tree.map(
+        lambda x: jnp.broadcast_to(x[None], (L,) + x.shape),
+        att.init_cache(cfg, batch, max_len))
+    ec = cfg.encoder
+    cross_shape = (L, batch, ec.n_ctx, cfg.n_kv_heads, cfg.hd)
+    cross_c = {"k": jnp.zeros(cross_shape, cfg.compute_dtype),
+               "v": jnp.zeros(cross_shape, cfg.compute_dtype)}
+    return {"self": self_c, "cross": cross_c}
+
+
+def encdec_build_cross(cfg: cm.ModelConfig, params: dict,
+                       frames: jax.Array, cache: dict) -> dict:
+    """Run the encoder once and fill the cross-attention cache."""
+    enc_out = encode(cfg, params["encoder"], frames)
+
+    def per_layer(p):
+        cc = att.cross_cache(cfg, p["cross_attn"], enc_out)
+        return cc["k"], cc["v"]
+
+    k, v = jax.vmap(per_layer)(params["decoder"]["scan"])
+    return {"self": cache["self"], "cross": {"k": k, "v": v}}
+
+
+def encdec_decode_step(cfg: cm.ModelConfig, params: dict, cache: dict,
+                       token: jax.Array, pos: jax.Array
+                       ) -> Tuple[jax.Array, dict]:
+    x = _dec_embed(cfg, params, token, pos)  # dynamic positional slice
+
+    def scan_body(carry, pc):
+        y = carry
+        p, sc, ck, cv = pc
+        h = cm.apply_norm(cfg, p["norm1"], y)
+        mix, new_sc = att.attn_decode(cfg, p["self_attn"], h, sc, pos)
+        y = y + mix
+        h = cm.apply_norm(cfg, p["norm_x"], y)
+        y = y + att.cross_attend(cfg, p["cross_attn"], h,
+                                 {"k": ck, "v": cv})
+        h = cm.apply_norm(cfg, p["norm2"], y)
+        y = y + mlp_mod.mlp(cfg, p["mlp"], h)
+        return y, new_sc
+
+    x, new_self = jax.lax.scan(
+        scan_body, x,
+        (params["decoder"]["scan"], cache["self"],
+         cache["cross"]["k"], cache["cross"]["v"]))
+    x = cm.apply_norm(cfg, params["final_norm"], x)
+    return _dec_head(cfg, params, x), {"self": new_self,
+                                       "cross": cache["cross"]}

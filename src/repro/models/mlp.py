@@ -1,0 +1,57 @@
+"""Channel mixers: SwiGLU / GELU MLP.
+
+The activation can be swapped for its LUT variant (paper insight I2) via
+``act_override`` — `kernels/lut_activation.py` provides the TPU kernel and
+``core/lut.py`` the table machinery; accuracy parity is benchmarked in
+``benchmarks/bench_lut.py``.
+"""
+
+from __future__ import annotations
+
+from typing import Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.distributed.sharding import shard_hint
+
+
+def init_mlp(cfg: cm.ModelConfig, key: jax.Array,
+             d_ff: int | None = None) -> dict:
+    d, f = cfg.d_model, d_ff or cfg.d_ff
+    dt = cfg.compute_dtype
+    ks = cm.split_keys(key, 3)
+    if cfg.act in ("swiglu", "geglu"):
+        return {
+            "w_gate": cm.dense_init(ks[0], (d, f), dt),
+            "w_up": cm.dense_init(ks[1], (d, f), dt),
+            "w_down": cm.dense_init(ks[2], (f, d), dt, fan_in=f),
+        }
+    return {
+        "w_up": cm.dense_init(ks[0], (d, f), dt),
+        "b_up": jnp.zeros((f,), dt),
+        "w_down": cm.dense_init(ks[1], (f, d), dt, fan_in=f),
+        "b_down": jnp.zeros((d,), dt),
+    }
+
+
+def mlp(cfg: cm.ModelConfig, p: dict, x: jax.Array,
+        act_override: Optional[Callable] = None) -> jax.Array:
+    if cfg.act in ("swiglu", "geglu"):
+        g = jnp.einsum("bsd,df->bsf", x, p["w_gate"])
+        u = jnp.einsum("bsd,df->bsf", x, p["w_up"])
+        g = shard_hint(g, "batch", "seq", "ff")
+        u = shard_hint(u, "batch", "seq", "ff")
+        act = act_override or (
+            jax.nn.silu if cfg.act == "swiglu" else jax.nn.gelu)
+        h = act(g) * u
+    else:
+        h = jnp.einsum("bsd,df->bsf", x, p["w_up"]) + p["b_up"]
+        h = shard_hint(h, "batch", "seq", "ff")
+        act = act_override or jax.nn.gelu
+        h = act(h)
+    y = jnp.einsum("bsf,fd->bsd", h, p["w_down"])
+    if "b_down" in p:
+        y = y + p["b_down"]
+    return shard_hint(y, "batch", "seq", "embed_act")

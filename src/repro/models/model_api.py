@@ -1,0 +1,86 @@
+"""Unified Model facade: one object per architecture config exposing
+``init / loss / forward / init_cache / decode_step / prefill`` regardless
+of family (decoder-only, enc-dec, VLM-stub).  The launcher, trainer,
+dry-run and tests all consume this interface.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.models import transformer as tfm
+from repro.models import encdec as ed
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: cm.ModelConfig
+
+    # -- construction ------------------------------------------------------
+
+    def init(self, key: jax.Array) -> dict:
+        if self.cfg.encoder is not None:
+            return ed.init_encdec(self.cfg, key)
+        return tfm.init_lm(self.cfg, key)
+
+    # -- training ----------------------------------------------------------
+
+    def loss(self, params: dict, batch: Dict[str, jax.Array]
+             ) -> Tuple[jax.Array, dict]:
+        if self.cfg.encoder is not None:
+            return ed.encdec_loss(self.cfg, params, batch)
+        return tfm.lm_loss(self.cfg, params, batch)
+
+    # -- inference ---------------------------------------------------------
+
+    def prefill(self, params: dict, batch: Dict[str, jax.Array]
+                ) -> jax.Array:
+        """Full-context forward; returns last-position logits."""
+        if self.cfg.encoder is not None:
+            logits = ed.encdec_forward(self.cfg, params, batch["tokens"],
+                                       batch["frames"])
+            return logits[:, -1:, :]
+        return tfm.lm_prefill(self.cfg, params, batch["tokens"],
+                              batch.get("prefix_embeds"))
+
+    def init_cache(self, batch: int, max_len: int) -> dict:
+        if self.cfg.encoder is not None:
+            return ed.encdec_init_cache(self.cfg, batch, max_len)
+        return tfm.lm_init_cache(self.cfg, batch, max_len)
+
+    def decode_step(self, params: dict, cache: dict, token: jax.Array,
+                    pos: jax.Array) -> Tuple[jax.Array, dict]:
+        if self.cfg.encoder is not None:
+            return ed.encdec_decode_step(self.cfg, params, cache, token,
+                                         pos)
+        return tfm.lm_decode_step(self.cfg, params, cache, token, pos)
+
+    # -- metadata ----------------------------------------------------------
+
+    def param_count(self, params: dict) -> int:
+        return sum(int(p.size) for p in jax.tree.leaves(params))
+
+    def active_param_count(self, params: dict) -> int:
+        """MoE-aware: router picks top_k of n_experts each token."""
+        total = self.param_count(params)
+        if self.cfg.moe is None:
+            return total
+        moe_leaves = 0
+        for path, leaf in jax.tree_util.tree_leaves_with_path(params):
+            keys = [getattr(k, "key", "") for k in path]
+            if any(k in ("w_gate", "w_up", "w_down") for k in keys) and \
+               any(k == "moe" for k in keys):
+                moe_leaves += int(leaf.size)
+        mc = self.cfg.moe
+        active = total - moe_leaves + int(moe_leaves * mc.top_k
+                                          / mc.n_experts)
+        return active
+
+
+def build(cfg: cm.ModelConfig) -> Model:
+    return Model(cfg)

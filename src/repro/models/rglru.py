@@ -1,0 +1,114 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma temporal mixer).
+
+Recurrence (De et al., 2024):
+    r_t = σ(W_a x_t + b_a)                       (recurrence gate)
+    i_t = σ(W_x x_t + b_x)                       (input gate)
+    a_t = exp(-c · softplus(Λ) · r_t)            (diagonal decay, c = 8)
+    h_t = a_t ⊙ h_{t-1} + sqrt(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training/prefill uses ``jax.lax.associative_scan`` over time (the linear
+diagonal recurrence composes associatively: (a₂,b₂)∘(a₁,b₁) =
+(a₂a₁, a₂b₁+b₂)), decode is the single-step update — O(lru_width) state,
+which together with the 2048-token local-attention ring buffer is why
+recurrentgemma-2b runs the ``long_500k`` cell.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.distributed.sharding import shard_hint
+
+
+def _width(cfg: cm.ModelConfig) -> int:
+    return cfg.rglru.lru_width or cfg.d_model
+
+
+def init_rglru(cfg: cm.ModelConfig, key: jax.Array) -> dict:
+    d = cfg.d_model
+    w = _width(cfg)
+    rc = cfg.rglru
+    dt = cfg.compute_dtype
+    ks = cm.split_keys(key, 7)
+    # init Λ so a^c ∈ (0.9, 0.999) roughly (paper's init)
+    lam = jax.random.uniform(ks[4], (w,), jnp.float32, 0.9 ** 2, 0.999 ** 2)
+    lam = jnp.log(jnp.expm1(-jnp.log(lam) / rc.c))      # softplus inverse
+    return {
+        "w_x": cm.dense_init(ks[0], (d, w), dt),         # input branch
+        "w_gate": cm.dense_init(ks[1], (d, w), dt),      # GeLU gate branch
+        "conv_w": cm.dense_init(ks[2], (rc.conv_width, w), dt,
+                                fan_in=rc.conv_width),
+        "conv_b": jnp.zeros((w,), dt),
+        "w_a": cm.dense_init(ks[3], (w, w), dt),
+        "b_a": jnp.zeros((w,), jnp.float32),
+        "w_i": cm.dense_init(ks[5], (w, w), dt),
+        "b_i": jnp.zeros((w,), jnp.float32),
+        "lambda": lam,
+        "w_out": cm.dense_init(ks[6], (w, d), dt, fan_in=w),
+    }
+
+
+def _gates(cfg, p, xb):
+    rc = cfg.rglru
+    r = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["w_a"]
+                                  ).astype(jnp.float32) + p["b_a"])
+    i = jax.nn.sigmoid(jnp.einsum("bsw,wv->bsv", xb, p["w_i"]
+                                  ).astype(jnp.float32) + p["b_i"])
+    log_a = -rc.c * jax.nn.softplus(p["lambda"]) * r     # (B,S,w) f32
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(jnp.clip(1.0 - a * a, 1e-12, 1.0))
+    gated_in = beta * i * xb.astype(jnp.float32)
+    return a, gated_in
+
+
+def _causal_conv(p, x, width):
+    pad = jnp.pad(x, ((0, 0), (width - 1, 0), (0, 0)))
+    return sum(pad[:, i:i + x.shape[1], :] * p["conv_w"][i][None, None, :]
+               for i in range(width)) + p["conv_b"]
+
+
+def rglru_forward(cfg: cm.ModelConfig, p: dict, x: jax.Array) -> jax.Array:
+    """x: (B, S, d) -> (B, S, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])
+    xb = shard_hint(xb, "batch", "seq", "lru")
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    gate = shard_hint(gate, "batch", "seq", "lru")
+    xb = _causal_conv(p, xb, cfg.rglru.conv_width)
+    a, b = _gates(cfg, p, xb)
+
+    def combine(u, v):
+        au, bu = u
+        av, bv = v
+        return au * av, av * bu + bv
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    y = (h.astype(x.dtype) * gate)
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return shard_hint(out, "batch", "seq", "embed_act")
+
+
+def init_rglru_cache(cfg: cm.ModelConfig, batch: int) -> dict:
+    w = _width(cfg)
+    return {
+        "conv": jnp.zeros((batch, cfg.rglru.conv_width - 1, w),
+                          cfg.compute_dtype),
+        "h": jnp.zeros((batch, w), jnp.float32),
+    }
+
+
+def rglru_decode(cfg: cm.ModelConfig, p: dict, x: jax.Array,
+                 cache: dict) -> Tuple[jax.Array, dict]:
+    """x: (B, 1, d)."""
+    xb = jnp.einsum("bsd,dw->bsw", x, p["w_x"])          # (B,1,w)
+    gate = jax.nn.gelu(jnp.einsum("bsd,dw->bsw", x, p["w_gate"]))
+    hist = jnp.concatenate([cache["conv"], xb], axis=1)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    a, b = _gates(cfg, p, conv[:, None, :])
+    h = a[:, 0] * cache["h"] + b[:, 0]                   # (B,w)
+    y = h[:, None, :].astype(x.dtype) * gate
+    out = jnp.einsum("bsw,wd->bsd", y, p["w_out"])
+    return out, {"conv": hist[:, 1:, :], "h": h}

@@ -1,0 +1,180 @@
+"""Mamba-2 SSD (state-space duality) mixer — chunked parallel form for
+train/prefill, O(1)-state recurrence for decode (this is why mamba2-370m
+runs the ``long_500k`` cell: the decode state is (B,H,P,N), independent of
+context length).
+
+The chunked algorithm follows the paper's ``ssd_minimal`` block
+decomposition: intra-chunk quadratic (attention-like, MXU-shaped) +
+inter-chunk state recurrence (lax.scan over S/chunk steps).  All decay
+math runs in float32.
+"""
+
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common as cm
+from repro.distributed.sharding import shard_hint
+
+
+def _dims(cfg: cm.ModelConfig):
+    sc = cfg.ssm
+    d_in = sc.expand * cfg.d_model
+    H = d_in // sc.head_dim
+    return sc, d_in, H, sc.head_dim, sc.d_state, sc.n_groups
+
+
+def init_mamba2(cfg: cm.ModelConfig, key: jax.Array) -> dict:
+    sc, d_in, H, Pd, N, G = _dims(cfg)
+    d = cfg.d_model
+    dt = cfg.compute_dtype
+    conv_ch = d_in + 2 * G * N
+    ks = cm.split_keys(key, 6)
+    import math
+    dt_init = jnp.exp(jax.random.uniform(ks[4], (H,), jnp.float32)
+                      * (math.log(sc.dt_max) - math.log(sc.dt_min))
+                      + math.log(sc.dt_min))
+    return {
+        # fused input projection: [z, x, B, C, dt]
+        "w_in": cm.dense_init(ks[0], (d, 2 * d_in + 2 * G * N + H), dt),
+        "conv_w": cm.dense_init(ks[1], (sc.conv_width, conv_ch), dt,
+                                fan_in=sc.conv_width),
+        "conv_b": jnp.zeros((conv_ch,), dt),
+        "A_log": jnp.log(jnp.arange(1, H + 1, dtype=jnp.float32)),
+        "dt_bias": jnp.log(jnp.expm1(dt_init)),       # softplus inverse
+        "D": jnp.ones((H,), jnp.float32),
+        "norm_scale": jnp.zeros((d_in,), dt),
+        "w_out": cm.dense_init(ks[5], (d_in, d), dt, fan_in=d_in),
+    }
+
+
+def _split_proj(cfg, p, x):
+    sc, d_in, H, Pd, N, G = _dims(cfg)
+    z, xbc, dt = jnp.split(
+        jnp.einsum("bsd,de->bse", x, p["w_in"]),
+        [d_in, 2 * d_in + 2 * G * N], axis=-1)
+    return z, xbc, dt
+
+
+def _causal_conv(p, xbc, width):
+    """Depthwise causal conv over seq (B, S, C)."""
+    pad = jnp.pad(xbc, ((0, 0), (width - 1, 0), (0, 0)))
+    out = sum(pad[:, i:i + xbc.shape[1], :] *
+              p["conv_w"][i][None, None, :] for i in range(width))
+    return jax.nn.silu(out + p["conv_b"])
+
+
+def _gate_norm(cfg, p, y, z):
+    sc, d_in, H, Pd, N, G = _dims(cfg)
+    g = y * jax.nn.silu(z)
+    return cm.rmsnorm(g, p["norm_scale"], cfg.norm_eps)
+
+
+def mamba2_forward(cfg: cm.ModelConfig, p: dict, x: jax.Array
+                   ) -> jax.Array:
+    """Full-sequence SSD. x: (B, S, d) -> (B, S, d)."""
+    sc, d_in, H, Pd, N, G = _dims(cfg)
+    B, S, _ = x.shape
+    Q = min(sc.chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by ssd chunk {Q}"
+    nc = S // Q
+
+    z, xbc, dtr = _split_proj(cfg, p, x)
+    xbc = _causal_conv(p, xbc, sc.conv_width)
+    xs, Bm, Cm = jnp.split(xbc, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, S, H, Pd)
+    xs = shard_hint(xs, "batch", "seq", "heads", None)
+    Bm = Bm.reshape(B, S, G, N)
+    Cm = Cm.reshape(B, S, G, N)
+    # broadcast groups to heads
+    rep = H // G
+    Bh = jnp.repeat(Bm, rep, axis=2)                    # (B,S,H,N)
+    Ch = jnp.repeat(Cm, rep, axis=2)
+
+    dt = jax.nn.softplus(dtr.astype(jnp.float32) + p["dt_bias"])  # (B,S,H)
+    A = -jnp.exp(p["A_log"])                                      # (H,)
+    a_dt = (dt * A).reshape(B, nc, Q, H)
+    xd = (xs.astype(jnp.float32) * dt[..., None]).reshape(B, nc, Q, H, Pd)
+    Bc = Bh.astype(jnp.float32).reshape(B, nc, Q, H, N)
+    Cc = Ch.astype(jnp.float32).reshape(B, nc, Q, H, N)
+
+    cs = jnp.cumsum(a_dt, axis=2)                       # inclusive (B,nc,Q,H)
+    # 1. intra-chunk: L[q,s] = exp(cs_q - cs_s) for s<=q
+    seg = cs[:, :, :, None, :] - cs[:, :, None, :, :]   # (B,nc,Q,S=Q,H)
+    tri = jnp.tril(jnp.ones((Q, Q), bool))
+    L = jnp.where(tri[None, None, :, :, None], jnp.exp(seg), 0.0)
+    scores = jnp.einsum("bcqhn,bcshn->bcqsh", Cc, Bc)   # (B,nc,Q,Q,H)
+    y_diag = jnp.einsum("bcqsh,bcqsh,bcshp->bcqhp", scores, L, xd)
+
+    # 2. per-chunk end states: Σ_s exp(cs_last - cs_s) B_s ⊗ xd_s
+    decay_end = jnp.exp(cs[:, :, -1:, :] - cs)          # (B,nc,Q,H)
+    states = jnp.einsum("bcsh,bcshn,bcshp->bchpn", decay_end, Bc, xd)
+
+    # 3. inter-chunk recurrence (sequential over chunks)
+    chunk_decay = jnp.exp(cs[:, :, -1, :])              # (B,nc,H)
+
+    def step(h, inp):
+        st, dec = inp
+        h_new = h * dec[:, :, None, None] + st
+        return h_new, h                                  # emit PREVIOUS
+
+    h0 = jnp.zeros((B, H, Pd, N), jnp.float32)
+    _, prev = jax.lax.scan(
+        step, h0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    prev = prev.transpose(1, 0, 2, 3, 4)                # (B,nc,H,P,N)
+
+    # 4. state -> output within chunk: C_q · prev ⊗ exp(cs_q)
+    y_off = jnp.einsum("bcqhn,bchpn,bcqh->bcqhp", Cc, prev,
+                       jnp.exp(cs))
+    y = (y_diag + y_off).reshape(B, S, H, Pd)
+    y = y + p["D"][None, None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, S, d_in).astype(x.dtype)
+    y = _gate_norm(cfg, p, y, z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return shard_hint(out, "batch", "seq", "embed_act")
+
+
+def init_mamba2_cache(cfg: cm.ModelConfig, batch: int) -> dict:
+    sc, d_in, H, Pd, N, G = _dims(cfg)
+    conv_ch = d_in + 2 * G * N
+    return {
+        "conv": jnp.zeros((batch, sc.conv_width - 1, conv_ch),
+                          cfg.compute_dtype),
+        "ssm": jnp.zeros((batch, H, Pd, N), jnp.float32),
+    }
+
+
+def mamba2_decode(cfg: cm.ModelConfig, p: dict, x: jax.Array,
+                  cache: dict) -> Tuple[jax.Array, dict]:
+    """Single-token recurrence. x: (B, 1, d)."""
+    sc, d_in, H, Pd, N, G = _dims(cfg)
+    B = x.shape[0]
+    z, xbc, dtr = _split_proj(cfg, p, x)                 # (B,1,·)
+    # conv ring: append token, weighted sum of last `width` inputs
+    hist = jnp.concatenate([cache["conv"], xbc], axis=1)  # (B,w,C)
+    conv = jnp.einsum("bwc,wc->bc", hist, p["conv_w"]) + p["conv_b"]
+    conv = jax.nn.silu(conv)[:, None, :]
+    new_conv = hist[:, 1:, :]
+
+    xs, Bm, Cm = jnp.split(conv, [d_in, d_in + G * N], axis=-1)
+    xs = xs.reshape(B, H, Pd)
+    rep = H // G
+    Bh = jnp.repeat(Bm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+    Ch = jnp.repeat(Cm.reshape(B, G, N), rep, axis=1).astype(jnp.float32)
+
+    dt = jax.nn.softplus(dtr[:, 0].astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    a = jnp.exp(dt * A)                                  # (B,H)
+    xd = xs.astype(jnp.float32) * dt[..., None]          # (B,H,P)
+    new_ssm = (cache["ssm"] * a[:, :, None, None]
+               + jnp.einsum("bhp,bhn->bhpn", xd, Bh))
+    y = jnp.einsum("bhpn,bhn->bhp", new_ssm, Ch)
+    y = y + p["D"][None, :, None] * xs.astype(jnp.float32)
+    y = y.reshape(B, 1, d_in).astype(x.dtype)
+    y = _gate_norm(cfg, p, y, z)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    return out, {"conv": new_conv, "ssm": new_ssm}

@@ -1,0 +1,5 @@
+"""Optimizers with ZeRO-shardable state (pure pytree transforms)."""
+
+from repro.optim.optimizers import (  # noqa: F401
+    sgd, momentum, adamw, Optimizer, OptState,
+)

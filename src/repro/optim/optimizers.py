@@ -1,0 +1,111 @@
+"""Minimal optax-style optimizers, self-contained (offline container).
+
+All states are plain pytrees mirroring the parameter tree, so ZeRO-style
+sharding is just a sharding rule on the state leaves (launch/train.py
+places them over the data axes).  ``adamw`` keeps f32 master weights when
+params are bf16 (hybrid precision — same structure as paper insight I1:
+narrow compute representation, wide accumulator).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    inner: Any                     # optimizer-specific pytree(s)
+
+
+@dataclasses.dataclass(frozen=True)
+class Optimizer:
+    init: Callable[[Any], OptState]
+    update: Callable[[Any, OptState, Any], Tuple[Any, OptState]]
+    # update(grads, state, params) -> (new_params, new_state)
+
+
+def _cast_like(x, ref):
+    return x.astype(ref.dtype)
+
+
+def sgd(lr: float) -> Optimizer:
+    def init(params):
+        return OptState(jnp.zeros((), jnp.int32), ())
+
+    def update(grads, state, params):
+        new = jax.tree.map(
+            lambda p, g: p - _cast_like(lr * g.astype(jnp.float32), p),
+            params, grads)
+        return new, OptState(state.step + 1, ())
+
+    return Optimizer(init, update)
+
+
+def momentum(lr: float, beta: float = 0.9) -> Optimizer:
+    def init(params):
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state, params):
+        m = jax.tree.map(lambda m_, g: beta * m_ + g.astype(jnp.float32),
+                         state.inner, grads)
+        new = jax.tree.map(lambda p, m_: p - _cast_like(lr * m_, p),
+                           params, m)
+        return new, OptState(state.step + 1, m)
+
+    return Optimizer(init, update)
+
+
+def adamw(lr: float, *, b1: float = 0.9, b2: float = 0.95,
+          eps: float = 1e-8, weight_decay: float = 0.0,
+          master_fp32: bool = True,
+          grad_clip: Optional[float] = 1.0) -> Optimizer:
+    """AdamW with optional f32 master copy for low-precision params."""
+
+    def init(params):
+        f32 = lambda p: jnp.zeros(p.shape, jnp.float32)
+        inner = {
+            "m": jax.tree.map(f32, params),
+            "v": jax.tree.map(f32, params),
+        }
+        if master_fp32:
+            inner["master"] = jax.tree.map(
+                lambda p: p.astype(jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), inner)
+
+    def update(grads, state, params):
+        step = state.step + 1
+        grads = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        if grad_clip is not None:
+            gn = jnp.sqrt(sum(jnp.sum(g * g)
+                              for g in jax.tree.leaves(grads)) + 1e-12)
+            scale = jnp.minimum(1.0, grad_clip / gn)
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        m = jax.tree.map(lambda m_, g: b1 * m_ + (1 - b1) * g,
+                         state.inner["m"], grads)
+        v = jax.tree.map(lambda v_, g: b2 * v_ + (1 - b2) * g * g,
+                         state.inner["v"], grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        base = state.inner.get("master", params) if master_fp32 else params
+
+        def upd(p, m_, v_):
+            mh = m_ / bc1
+            vh = v_ / bc2
+            u = mh / (jnp.sqrt(vh) + eps)
+            if weight_decay:
+                u = u + weight_decay * p.astype(jnp.float32)
+            return p.astype(jnp.float32) - lr * u
+
+        new_master = jax.tree.map(upd, base, m, v)
+        new_params = jax.tree.map(_cast_like, new_master, params)
+        inner = {"m": m, "v": v}
+        if master_fp32:
+            inner["master"] = new_master
+        return new_params, OptState(step, inner)
+
+    return Optimizer(init, update)

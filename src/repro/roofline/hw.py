@@ -1,0 +1,11 @@
+"""TPU v5e hardware constants (per chip) used by the roofline model."""
+
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s per chip (bf16 MXU)
+PEAK_FLOPS_INT8 = 394e12        # s8 MXU path (2x bf16)
+HBM_BW = 819e9                  # bytes/s per chip
+ICI_BW_PER_LINK = 50e9          # bytes/s per ICI link (~)
+HBM_GB = 16.0                   # per-chip HBM capacity
+
+# DCN (inter-pod) effective per-chip bandwidth — the paper's "host hop".
+# ~6.4 Tbps/pod aggregate over 256 chips ≈ 3 GB/s/chip sustained.
+DCN_BW_PER_CHIP = 3e9

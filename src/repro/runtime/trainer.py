@@ -1,0 +1,133 @@
+"""Fault-tolerant training loop.
+
+Production posture for 1000+ nodes (DESIGN.md §6):
+
+* **checkpoint/restart** — CheckpointManager snapshots (params, opt
+  state, data cursor) every ``ckpt_every`` steps; on construction the
+  Trainer auto-resumes from the newest checkpoint; restore is
+  mesh-shape-agnostic (elastic).
+* **step-scoped failure handling** — a failing step (device OOM, NaN
+  loss, preemption surfacing as an exception) triggers restore-from-last-
+  checkpoint and replay, up to ``max_restarts``; NaN/Inf losses are
+  treated as failures (blast-radius of a bad host) rather than silently
+  averaged in.
+* **straggler mitigation** — per-step wall-time EWMA + deviation; steps
+  slower than ``straggler_factor`` x EWMA are counted and reported via
+  ``metrics['stragglers']`` so the surrounding scheduler can re-shard or
+  swap nodes; the data pipeline double-buffers so a slow host never
+  stalls the accelerators (Prefetcher).
+* **deterministic data cursor** — TokenStream.batch_at(step) makes replay
+  after restart bit-exact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    ckpt_dir: Optional[str] = None
+    ckpt_every: int = 100
+    ckpt_keep: int = 3
+    max_restarts: int = 3
+    straggler_factor: float = 2.0
+    log_every: int = 10
+
+
+class Trainer:
+    """Drives ``step_fn(state, batch) -> (state, metrics)`` with fault
+    tolerance.  ``state`` is any pytree (params + opt state + extras);
+    ``batch_fn(step) -> batch`` must be deterministic in ``step``."""
+
+    def __init__(self, step_fn: Callable, init_state: Any,
+                 batch_fn: Callable[[int], Any],
+                 config: TrainerConfig = TrainerConfig(),
+                 state_placer: Optional[Callable] = None):
+        self.step_fn = step_fn
+        self.batch_fn = batch_fn
+        self.cfg = config
+        self.state = init_state
+        self.start_step = 0
+        self._ewma = None
+        self._restarts = 0
+        self.straggler_steps = 0
+        self.history: list = []
+
+        self.ckpt = None
+        if config.ckpt_dir:
+            self.ckpt = CheckpointManager(
+                config.ckpt_dir, keep=config.ckpt_keep)
+            resumed = self.ckpt.restore_latest(init_state,
+                                               placer=state_placer)
+            if resumed is not None:
+                step, state, _ = resumed
+                self.state = state
+                self.start_step = step + 1
+
+    # -- main loop ----------------------------------------------------------
+
+    def run(self, n_steps: int, callback: Optional[Callable] = None
+            ) -> Dict[str, Any]:
+        step = self.start_step
+        end = self.start_step + n_steps
+        while step < end:
+            try:
+                t0 = time.perf_counter()
+                batch = self.batch_fn(step)
+                self.state, metrics = self.step_fn(self.state, batch)
+                loss = float(metrics.get("loss", jnp.zeros(())))
+                if not np.isfinite(loss):
+                    raise FloatingPointError(
+                        f"non-finite loss {loss} at step {step}")
+                dt = time.perf_counter() - t0
+                self._track_time(dt)
+                metrics = dict(metrics, step=step, wall_time=dt,
+                               stragglers=self.straggler_steps)
+                self.history.append(
+                    {k: (float(v) if hasattr(v, "item") or
+                         isinstance(v, (int, float)) else v)
+                     for k, v in metrics.items()})
+                if callback and step % self.cfg.log_every == 0:
+                    callback(step, metrics)
+                if self.ckpt and step % self.cfg.ckpt_every == 0 and \
+                        step > self.start_step:
+                    self.ckpt.save(step, self.state,
+                                   extra={"data_step": step})
+                step += 1
+            except (FloatingPointError, RuntimeError) as e:  # failure path
+                self._restarts += 1
+                if self.ckpt is None or self._restarts > \
+                        self.cfg.max_restarts:
+                    raise
+                resumed = self.ckpt.restore_latest(self.state)
+                if resumed is None:
+                    raise RuntimeError(
+                        f"step {step} failed ({e}) with no checkpoint"
+                    ) from e
+                ck_step, self.state, _ = resumed
+                step = ck_step + 1          # replay from checkpoint
+        if self.ckpt:
+            self.ckpt.save(end - 1, self.state, extra={"data_step": end - 1})
+            self.ckpt.wait()
+        return {"final_step": end, "restarts": self._restarts,
+                "stragglers": self.straggler_steps,
+                "history": self.history}
+
+    # -- straggler tracking ---------------------------------------------------
+
+    def _track_time(self, dt: float):
+        if self._ewma is None:
+            self._ewma = dt
+            return
+        if dt > self.cfg.straggler_factor * self._ewma:
+            self.straggler_steps += 1
+        self._ewma = 0.9 * self._ewma + 0.1 * dt

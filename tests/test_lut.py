@@ -1,0 +1,56 @@
+"""LUT activation tests (paper insight I2): error bounds + the paper's
+LUT-beats-Taylor result."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import lut
+
+
+def test_sigmoid_lut_error_bound():
+    t = lut.sigmoid_lut(n_entries=1024)
+    # nearest-entry error <= Lipschitz(sigmoid)=1/4 * step/2
+    assert lut.lut_max_error(t, lut._np_sigmoid) <= 0.25 * t.step / 2 + 1e-6
+
+
+def test_interp_beats_nearest():
+    t = lut.sigmoid_lut(n_entries=256)
+    e_near = lut.lut_max_error(t, lut._np_sigmoid)
+    e_interp = lut.lut_max_error(t, lut._np_sigmoid, interp=True)
+    assert e_interp < e_near / 4
+
+
+def test_out_of_range_clamps():
+    t = lut.sigmoid_lut(n_entries=128, bound=8.0)
+    y = lut.lut_lookup(t, jnp.asarray([-100.0, 100.0]))
+    np.testing.assert_allclose(np.asarray(y), [0.0, 1.0], atol=1e-3)
+
+
+def test_taylor_diverges_lut_does_not():
+    """The paper's headline: Taylor sigmoid is unusable beyond small |x|."""
+    x = jnp.asarray([6.0])
+    taylor = float(lut.taylor_sigmoid(x)[0])
+    t = lut.sigmoid_lut()
+    lut_val = float(lut.lut_lookup(t, x)[0])
+    exact = 1.0 / (1.0 + np.exp(-6.0))
+    assert abs(lut_val - exact) < 1e-3
+    assert abs(taylor - exact) > 0.1       # diverged
+
+
+@given(n=st.sampled_from([128, 512, 2048]),
+       seed=st.integers(0, 50))
+@settings(max_examples=10, deadline=None)
+def test_lut_error_scales_with_entries(n, seed):
+    t = lut.gelu_lut(n_entries=n)
+    xs = np.random.default_rng(seed).uniform(-8, 8, 200).astype(np.float32)
+    got = np.asarray(lut.lut_lookup(t, jnp.asarray(xs)))
+    want = lut._np_gelu(xs.astype(np.float64))
+    # max |gelu'| <~ 1.13 -> error <= 1.13 * step/2 (+float eps)
+    assert np.abs(got - want).max() <= 1.2 * t.step / 2 + 1e-5
+
+
+def test_monotone_on_table_points():
+    t = lut.sigmoid_lut(n_entries=512)
+    vals = np.asarray(t.table)
+    assert (np.diff(vals) >= -1e-9).all()

@@ -1,0 +1,125 @@
+"""End-to-end correctness of the paper's four workloads, including the
+fixed-point / LUT variants (the paper's accuracy-parity claims)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import (train_linreg, train_logreg, train_kmeans,
+                                train_dtree)
+from repro.core.mlalgos.linreg import closed_form
+from repro.core.mlalgos.logreg import accuracy
+from repro.core.mlalgos.dtree import dtree_predict
+from repro.core.mlalgos.kmeans import kmeans_assign_points
+
+KEY = jax.random.PRNGKey(0)
+GRID = make_cpu_grid(16)
+
+
+class TestLinReg:
+    @pytest.fixture(scope="class")
+    def data(self):
+        return datasets.regression(KEY, 2000, 16)
+
+    def test_fp32_matches_closed_form(self, data):
+        X, y, _ = data
+        res = train_linreg(GRID, X, y, lr=0.05, steps=200)
+        w_cf = closed_form(X, y)
+        assert float(jnp.max(jnp.abs(res.w - w_cf))) < 5e-3
+
+    @pytest.mark.parametrize("precision,tol", [("int16", 5e-3),
+                                               ("int8", 5e-2)])
+    def test_fixed_point_parity(self, data, precision, tol):
+        """Paper claim: hybrid-precision training loses ~no accuracy."""
+        X, y, _ = data
+        res = train_linreg(GRID, X, y, lr=0.05, steps=200,
+                           precision=precision)
+        w_cf = closed_form(X, y)
+        assert float(jnp.max(jnp.abs(res.w - w_cf))) < tol
+
+    def test_loss_monotone_decreasing(self, data):
+        X, y, _ = data
+        res = train_linreg(GRID, X, y, lr=0.02, steps=50)
+        losses = [float(h["loss"]) for h in res.history]
+        assert losses[-1] < losses[0]
+        assert all(b <= a * 1.001 for a, b in zip(losses, losses[1:]))
+
+
+class TestLogReg:
+    @pytest.fixture(scope="class")
+    def data(self):
+        return datasets.binary_classification(KEY, 3000, 12)
+
+    def test_lut_matches_exact_sigmoid(self, data):
+        """Paper claim: LUT sigmoid == exact sigmoid for training."""
+        X, y, _ = data
+        r_exact = train_logreg(GRID, X, y, lr=0.5, steps=120,
+                               sigmoid="exact")
+        r_lut = train_logreg(GRID, X, y, lr=0.5, steps=120, sigmoid="lut")
+        a_exact, a_lut = accuracy(r_exact.w, X, y), accuracy(r_lut.w, X, y)
+        assert abs(a_exact - a_lut) < 0.01
+        assert a_exact > 0.75
+
+    def test_int8_lut_parity(self, data):
+        X, y, _ = data
+        r = train_logreg(GRID, X, y, lr=0.5, steps=120, precision="int8",
+                         sigmoid="lut")
+        assert accuracy(r.w, X, y) > 0.75
+
+    def test_taylor_degrades(self, data):
+        """Paper claim: Taylor-series sigmoid hurts training."""
+        X, y, _ = data
+        r_t = train_logreg(GRID, X, y, lr=0.5, steps=120, sigmoid="taylor")
+        r_e = train_logreg(GRID, X, y, lr=0.5, steps=120, sigmoid="exact")
+        assert accuracy(r_t.w, X, y) < accuracy(r_e.w, X, y) - 0.05
+
+
+class TestKMeans:
+    def test_sse_monotone_and_recovers_blobs(self):
+        X, assign, centers = datasets.blobs(KEY, 3000, 6, k=4, spread=0.2)
+        res = train_kmeans(GRID, X, 4, iters=15)
+        sses = [float(h["sse"]) for h in res.history]
+        assert all(b <= a * 1.0001 for a, b in zip(sses, sses[1:]))
+        # every true center has a learned centroid nearby
+        d = jnp.linalg.norm(res.centroids[:, None] - centers[None],
+                            axis=-1)
+        assert float(jnp.max(jnp.min(d, axis=0))) < 0.5
+
+    def test_int8_parity(self):
+        X, _, _ = datasets.blobs(KEY, 3000, 6, k=4, spread=0.2)
+        r32 = train_kmeans(GRID, X, 4, iters=12)
+        r8 = train_kmeans(GRID, X, 4, iters=12, precision="int8")
+        sse32 = float(r32.history[-1]["sse"])
+        sse8 = float(r8.history[-1]["sse"])
+        assert sse8 < sse32 * 1.05
+
+    def test_assignment_function(self):
+        X, _, centers = datasets.blobs(KEY, 500, 4, k=3, spread=0.1)
+        a = kmeans_assign_points(centers, X)
+        assert a.shape == (500,)
+        assert int(jnp.max(a)) <= 2
+
+
+class TestDTree:
+    def test_fits_separable_mixture(self):
+        X, y = datasets.mixture_classification(KEY, 3000, 8, n_classes=3)
+        res = train_dtree(GRID, X, y, max_depth=6, n_bins=32, n_classes=3)
+        pred = dtree_predict(res.tree, X)
+        acc = float(jnp.mean(pred == y))
+        assert acc > 0.9
+
+    def test_depth_zero_safety(self):
+        X, y = datasets.mixture_classification(KEY, 200, 4, n_classes=2)
+        res = train_dtree(GRID, X, y, max_depth=1, n_bins=8, n_classes=2)
+        pred = dtree_predict(res.tree, X)
+        assert pred.shape == (200,)
+
+    def test_pure_labels_stop_splitting(self):
+        X = jax.random.normal(KEY, (256, 4))
+        y = jnp.zeros((256,), jnp.int32)       # one class: no valid split
+        res = train_dtree(GRID, X, y, max_depth=4, n_bins=8, n_classes=2)
+        pred = dtree_predict(res.tree, X)
+        assert int(jnp.sum(pred)) == 0
+        assert res.history[0]["splits"] == 0

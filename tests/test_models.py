@@ -1,0 +1,156 @@
+"""Per-arch smoke tests (reduced same-family configs): one forward/train
+step on CPU asserting shapes + no NaNs, plus decode/forward consistency
+for every recurrence family and MoE routing invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_smoke_config, list_archs, get_config
+from repro.models import build
+from repro.models import transformer as tfm
+
+KEY = jax.random.PRNGKey(0)
+ALL_ARCHS = list_archs()
+
+
+def _batch_for(cfg, B=2, S=16):
+    batch = {"tokens": jax.random.randint(KEY, (B, S), 0,
+                                          cfg.vocab_size)}
+    if cfg.encoder is not None:
+        batch["frames"] = jax.random.normal(
+            KEY, (B, cfg.encoder.n_ctx, cfg.d_model))
+    if cfg.n_prefix_embeds:
+        batch["prefix_embeds"] = jax.random.normal(
+            KEY, (B, cfg.n_prefix_embeds, cfg.d_model))
+    return batch
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(KEY)
+    batch = _batch_for(cfg)
+    loss, metrics = jax.jit(model.loss)(params, batch)
+    assert np.isfinite(float(loss))
+    grads, _ = jax.grad(model.loss, has_aux=True)(params, batch)
+    gn = sum(float(jnp.sum(g.astype(jnp.float32) ** 2))
+             for g in jax.tree.leaves(grads))
+    assert np.isfinite(gn) and gn > 0
+
+
+@pytest.mark.parametrize("arch", ALL_ARCHS)
+def test_smoke_decode_shapes(arch):
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(KEY)
+    B = 2
+    cache = model.init_cache(B, 32)
+    if cfg.encoder is not None:
+        from repro.models import encdec as ed
+        frames = jax.random.normal(KEY, (B, cfg.encoder.n_ctx,
+                                         cfg.d_model))
+        cache = ed.encdec_build_cross(cfg, params, frames, cache)
+    tok = jnp.zeros((B, 1), jnp.int32)
+    logits, cache2 = jax.jit(model.decode_step)(params, cache, tok,
+                                                jnp.int32(0))
+    assert logits.shape[0] == B and logits.shape[1] == 1
+    assert not bool(jnp.any(jnp.isnan(logits)))
+    assert jax.tree.structure(cache) == jax.tree.structure(cache2)
+
+
+@pytest.mark.parametrize("arch", ["qwen2-0.5b", "mamba2-370m",
+                                  "recurrentgemma-2b"])
+def test_decode_matches_forward(arch):
+    """KV-cache / SSM-state / LRU-state decode == full forward."""
+    cfg = get_smoke_config(arch)
+    model = build(cfg)
+    params = model.init(jax.random.PRNGKey(1))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.PRNGKey(2), (B, S), 0,
+                              cfg.vocab_size)
+    full, _ = tfm.lm_forward(cfg, params, toks)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    outs = []
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec), np.asarray(full),
+                               atol=2e-4, rtol=2e-4)
+
+
+def test_sliding_window_ring_buffer():
+    """Positions beyond the window must not influence local attention."""
+    cfg = get_smoke_config("recurrentgemma-2b")
+    model = build(cfg)
+    params = model.init(KEY)
+    B, S = 1, 16   # window is 8 in the smoke config
+    toks = jax.random.randint(KEY, (B, S), 0, cfg.vocab_size)
+    cache = model.init_cache(B, S)
+    step = jax.jit(model.decode_step)
+    for t in range(S):
+        lg, cache = step(params, cache, toks[:, t:t + 1], jnp.int32(t))
+    # ring caches must have window-sized seq dims
+    k_shapes = [l.shape for l in jax.tree.leaves(cache)
+                if l.ndim >= 4]
+    assert any(s[-3] == cfg.window for s in k_shapes)
+
+
+def test_moe_routing_conservation():
+    """Top-k gate weights are renormalized and outputs are finite; with
+    capacity_factor >= n_experts every token must be routed."""
+    import dataclasses
+    from repro.models import moe as moe_mod
+    cfg = get_smoke_config("qwen3-moe-235b-a22b")
+    cfg = dataclasses.replace(
+        cfg, moe=dataclasses.replace(cfg.moe, capacity_factor=99.0))
+    p = moe_mod.init_moe(cfg, KEY)
+    x = jax.random.normal(KEY, (2, 8, cfg.d_model))
+    y, aux = moe_mod.moe_ffn(cfg, p, x)
+    assert y.shape == x.shape
+    assert np.isfinite(float(aux)) and float(aux) > 0
+    # aux ~ 1 means balanced; must be within [1, n_experts]
+    assert 0.5 <= float(aux) <= cfg.moe.n_experts + 1e-3
+
+
+def test_scan_groups_periodic_detection():
+    cfg = get_config("recurrentgemma-2b")
+    unit, reps, tail = cfg.scan_groups()
+    assert unit == ("rglru", "rglru", "local_attn")
+    assert reps == 8 and tail == ("rglru", "rglru")
+    cfg2 = get_config("qwen2-0.5b")
+    unit2, reps2, tail2 = cfg2.scan_groups()
+    assert unit2 == ("attn",) and reps2 == 24 and tail2 == ()
+
+
+def test_full_configs_match_assignment():
+    """The exact published dims from the assignment table."""
+    want = {
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+        "qwen3-moe-235b-a22b": (94, 4096, 64, 4, 1536, 151936),
+        "phi3.5-moe-42b-a6.6b": (32, 4096, 32, 8, 6400, 32064),
+        "mamba2-370m": (48, 1024, 1, 1, 0, 50280),
+        "phi4-mini-3.8b": (32, 3072, 24, 8, 8192, 200064),
+        "minitron-8b": (32, 4096, 32, 8, 16384, 256000),
+        "qwen2-0.5b": (24, 896, 14, 2, 4864, 151936),
+        "qwen1.5-110b": (80, 8192, 64, 8, 49152, 152064),
+        "llava-next-mistral-7b": (32, 4096, 32, 8, 14336, 32000),
+        "recurrentgemma-2b": (26, 2560, 10, 1, 7680, 256000),
+    }
+    for arch, (L, d, H, kv, ff, V) in want.items():
+        cfg = get_config(arch)
+        assert (cfg.n_layers, cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                cfg.d_ff, cfg.vocab_size) == (L, d, H, kv, ff, V), arch
+    # MoE structure
+    q3 = get_config("qwen3-moe-235b-a22b")
+    assert q3.moe.n_experts == 128 and q3.moe.top_k == 8
+    p35 = get_config("phi3.5-moe-42b-a6.6b")
+    assert p35.moe.n_experts == 16 and p35.moe.top_k == 2
+    rg = get_config("recurrentgemma-2b")
+    assert rg.window == 2048
+    m2 = get_config("mamba2-370m")
+    assert m2.ssm.d_state == 128

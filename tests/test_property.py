@@ -1,0 +1,79 @@
+"""Hypothesis property tests on system invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as qz
+from repro.core import lut
+from repro.core.pim import make_cpu_grid
+from repro.models.common import ModelConfig, ATTN, LOCAL_ATTN, RGLRU
+
+
+@given(seed=st.integers(0, 1000), n=st.integers(10, 200),
+       vdpus=st.sampled_from([2, 4, 8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_pim_sum_invariant(seed, n, vdpus):
+    """Σ over vDPU shards == direct Σ, for any grid size and row count
+    (the paper's merge must be exact regardless of DPU count)."""
+    rng = np.random.default_rng(seed)
+    X = rng.normal(size=(n, 3)).astype(np.float32)
+    grid = make_cpu_grid(vdpus)
+    data, n_rows = grid.shard_rows(jnp.asarray(X))
+    out = grid.map_reduce(
+        lambda _, sl: jnp.sum(sl["X"] * sl["w"][:, None], axis=0),
+        (), data)
+    np.testing.assert_allclose(np.asarray(out), X.sum(axis=0), rtol=2e-4,
+                               atol=1e-4)
+    assert n_rows == n
+
+
+@given(seed=st.integers(0, 1000), bits=st.sampled_from([8, 16]))
+@settings(max_examples=20, deadline=None)
+def test_hybrid_dot_matches_integer_math(seed, bits):
+    rng = np.random.default_rng(seed)
+    lim = 2 ** (bits - 1)
+    a = rng.integers(-lim, lim - 1, (7, 33)).astype(
+        np.int8 if bits == 8 else np.int16)
+    b = rng.integers(-lim, lim - 1, (33, 5)).astype(a.dtype)
+    want = a.astype(np.int64) @ b.astype(np.int64)
+    got = np.asarray(qz.hybrid_dot(jnp.asarray(a), jnp.asarray(b)),
+                     np.float64)
+    rel = np.abs(got - want) / np.maximum(np.abs(want), 1.0)
+    assert rel.max() < 1e-5
+
+
+@given(x=st.floats(-7.9, 7.9), entries=st.sampled_from([256, 1024]))
+@settings(max_examples=40, deadline=None)
+def test_lut_pointwise_error(x, entries):
+    t = lut.sigmoid_lut(entries)
+    got = float(lut.lut_lookup(t, jnp.asarray([x], jnp.float32))[0])
+    want = 1.0 / (1.0 + np.exp(-x))
+    assert abs(got - want) <= 0.25 * t.step / 2 + 1e-6
+
+
+@given(pattern=st.lists(st.sampled_from([ATTN, LOCAL_ATTN, RGLRU]),
+                        min_size=1, max_size=12))
+@settings(max_examples=30, deadline=None)
+def test_scan_groups_reconstruct_pattern(pattern):
+    """unit*reps+tail must always reproduce the original block pattern."""
+    cfg = ModelConfig(name="t", n_layers=len(pattern), d_model=8,
+                      n_heads=2, n_kv_heads=1, d_ff=16, vocab_size=32,
+                      block_pattern=tuple(pattern))
+    unit, reps, tail = cfg.scan_groups()
+    assert unit * reps + tail == tuple(pattern)
+    assert reps >= 1
+
+
+@given(seed=st.integers(0, 500), frac=st.floats(0.1, 0.9))
+@settings(max_examples=20, deadline=None)
+def test_topk_sparsify_conservation(seed, frac):
+    from repro.distributed.compression import topk_sparsify
+    rng = np.random.default_rng(seed)
+    g = jnp.asarray(rng.normal(size=(64,)).astype(np.float32))
+    kept, err = topk_sparsify(g, frac, jnp.zeros_like(g))
+    np.testing.assert_allclose(np.asarray(kept + err), np.asarray(g),
+                               atol=1e-6)
+    nz = int(jnp.sum(kept != 0))
+    assert nz >= int(64 * frac) // 2          # at least ~k kept

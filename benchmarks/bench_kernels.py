@@ -13,8 +13,9 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks.common import time_fn, emit
-from repro.kernels import ops, ref
+from repro.kernels import dispatch, ops, ref
 from repro.core import lut as lutm
+from repro.core import quantize as qz
 
 
 def run():
@@ -50,6 +51,27 @@ def run():
     ok = np.array_equal(np.asarray(ops.fxp_matmul(a, b)),
                         np.asarray(fxp_ref(a, b)))
     emit("fxp_matmul_ref_256x512x256", us, f"kernel_exact={ok}")
+
+    # fxp matmul, non-block-aligned (exercises the pad-and-slice path);
+    # the timed call is the kernel itself (interpret-mode off TPU)
+    ao = jax.random.randint(key, (300, 130), -128, 128, jnp.int8)
+    bo = jax.random.randint(key, (130, 70), -128, 128, jnp.int8)
+    ok = np.array_equal(np.asarray(ops.fxp_matmul(ao, bo)),
+                        np.asarray(fxp_ref(ao, bo)))
+    emit("fxp_matmul_padded_300x130x70", time_fn(ops.fxp_matmul, ao, bo),
+         f"kernel_exact={ok}")
+
+    # hybrid int16 matmul: dispatch (Pallas limbs) vs quantize.hybrid_dot
+    ah = jax.random.randint(key, (2048, 64), -32768, 32767
+                            ).astype(jnp.int16)
+    bh = jax.random.randint(key, (64, 1), -32768, 32767).astype(jnp.int16)
+    hd_ref = jax.jit(qz.hybrid_dot)
+    us = time_fn(hd_ref, ah, bh)
+    disp = jax.jit(dispatch.hybrid_matmul)
+    ok = np.array_equal(np.asarray(disp(ah, bh)),
+                        np.asarray(hd_ref(ah, bh)))
+    emit("hybrid_dot_ref_2048x64", us, f"dispatch_exact={ok}")
+    emit("hybrid_matmul_dispatch_2048x64", time_fn(disp, ah, bh), "")
 
     # kmeans assign
     x = jax.random.normal(key, (8192, 32))

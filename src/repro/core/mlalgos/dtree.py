@@ -12,8 +12,9 @@ workload PIM/TPU friendly):
   * features are pre-quantized to ``n_bins`` integer bins (insight I1 —
     the resident dataset is uint8),
   * per level, each vDPU accumulates H[node, feature, bin, class] counts
-    over its rows (`kernels/split_hist.py` is the TPU hotspot; here the
-    reference expresses it as a scatter-add),
+    over its rows on the `kernels/split_hist` Pallas kernel (routed via
+    `kernels.dispatch.level_histogram`; `dispatch.use_kernels(False)`
+    flips to the scatter-add jnp reference),
   * the merged histogram gives every candidate split's Gini impurity via
     cumulative sums; the host picks argmax gain per node,
   * rows re-route with one gather (node -> chosen feature/threshold).
@@ -32,6 +33,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core.pim import PimGrid
+from repro.kernels import dispatch
 
 
 @dataclasses.dataclass
@@ -66,23 +68,6 @@ def quantize_features(X: jax.Array, n_bins: int = 32
     for j in range(Xn.shape[1]):
         binned[:, j] = np.searchsorted(edges[j], Xn[:, j], side="right")
     return jnp.asarray(binned), jnp.asarray(edges)
-
-
-def _level_histogram(node_idx, Xbin, y, wmask, n_nodes, n_feat, n_bins,
-                     n_classes):
-    """H[node, feature, bin, class] counts for one vDPU slice.
-
-    Expressed as a flat scatter-add; `kernels/split_hist.py` implements the
-    TPU version (one-hot matmul accumulation in VMEM)."""
-    R = Xbin.shape[0]
-    f_idx = jnp.arange(n_feat, dtype=jnp.int32)
-    # flat index per (row, feature)
-    flat = ((node_idx[:, None] * n_feat + f_idx[None, :]) * n_bins
-            + Xbin) * n_classes + y[:, None]
-    H = jnp.zeros((n_nodes * n_feat * n_bins * n_classes,), jnp.float32)
-    H = H.at[flat.reshape(-1)].add(
-        jnp.broadcast_to(wmask[:, None], (R, n_feat)).reshape(-1))
-    return H.reshape(n_nodes, n_feat, n_bins, n_classes)
 
 
 def _best_splits(H):
@@ -150,9 +135,9 @@ def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
         @jax.jit
         def level_hist(node_idx, data, n_nodes=n_nodes):
             def local_fn(_, sl):
-                return {"H": _level_histogram(
+                return {"H": dispatch.level_histogram(
                     sl["nidx"], sl["X"], sl["y0"], sl["w"],
-                    n_nodes, d, n_bins, n_classes)}
+                    n_nodes=n_nodes, n_bins=n_bins, n_classes=n_classes)}
             dat = dict(data)
             dat["nidx"] = node_idx
             return grid.map_reduce(local_fn, (), dat)["H"]
@@ -204,9 +189,9 @@ def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
         @jax.jit
         def final_hist(node_idx, data, n_nodes=n_nodes):
             def local_fn(_, sl):
-                return {"H": _level_histogram(
+                return {"H": dispatch.level_histogram(
                     sl["nidx"], sl["X"], sl["y0"], sl["w"],
-                    n_nodes, d, n_bins, n_classes)}
+                    n_nodes=n_nodes, n_bins=n_bins, n_classes=n_classes)}
             dat = dict(data)
             dat["nidx"] = node_idx
             return grid.map_reduce(local_fn, (), dat)["H"]

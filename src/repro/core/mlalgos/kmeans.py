@@ -7,7 +7,10 @@ sums and counts; the host merges partials and recomputes centroids.
 TPU adaptation of the inner loop (DESIGN.md §2): instead of the DPU's
 scalar accumulation we compute assignments with a distance matrix and
 accumulate with a one-hot matmul — both MXU-shaped.  The fused
-distance->argmin->accumulate hotspot is `kernels/kmeans_assign.py`.
+distance->argmin->accumulate hotspot runs on the `kernels/kmeans_assign`
+Pallas kernel via `kernels.dispatch.kmeans_partials` (interpret-mode jnp
+emulation off-TPU; `dispatch.use_kernels(False)` flips to the pure-jnp
+reference).
 
 Fixed-point path (insight I1): points stored int16/int8 with a per-feature
 scale; distances computed in int32 off integer Gram terms.
@@ -23,6 +26,7 @@ import jax.numpy as jnp
 
 from repro.core.pim import PimGrid
 from repro.core import quantize as qz
+from repro.kernels import dispatch
 
 Precision = Literal["fp32", "int16", "int8"]
 
@@ -34,29 +38,9 @@ class KMeansResult:
     precision: str
 
 
-def _assign_and_partials(x, wmask, centroids):
-    """x: (R,d) float, centroids: (k,d) -> one-hot partial sums/counts/sse.
-
-    ||x-c||² = ||x||² - 2 x·c + ||c||²; argmin over k drops ||x||².
-    The one-hot matmul is the TPU-native accumulation (ref for the Pallas
-    kernel)."""
-    xc = x @ centroids.T                                   # (R,k)
-    c2 = jnp.sum(centroids * centroids, axis=1)            # (k,)
-    dist = c2[None, :] - 2.0 * xc                          # (R,k) + ||x||²
-    a = jnp.argmin(dist, axis=1)                           # (R,)
-    onehot = jax.nn.one_hot(a, centroids.shape[0],
-                            dtype=x.dtype) * wmask[:, None]
-    sums = onehot.T @ x                                    # (k,d)
-    counts = jnp.sum(onehot, axis=0)                       # (k,)
-    x2 = jnp.sum(x * x, axis=1)
-    best = jnp.take_along_axis(dist, a[:, None], axis=1)[:, 0]
-    sse = jnp.sum((x2 + best) * wmask)
-    return sums, counts, sse
-
-
 def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
                  iters: int = 20, precision: Precision = "fp32",
-                 seed: int = 0) -> KMeansResult:
+                 seed: int = 0, engine: str = "scan") -> KMeansResult:
     n, d = X.shape
     key = jax.random.PRNGKey(seed)
     init_idx = jax.random.choice(key, n, (k,), replace=False)
@@ -66,8 +50,8 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
         data, _ = grid.shard_rows(X)
 
         def local_fn(centroids, sl):
-            sums, counts, sse = _assign_and_partials(
-                sl["X"], sl["w"], centroids)
+            sums, counts, sse = dispatch.kmeans_partials(
+                sl["X"], centroids, sl["w"])
             return {"sums": sums, "counts": counts, "sse": sse}
     else:
         bits = {"int16": 16, "int8": 8}[precision]
@@ -79,7 +63,8 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
             # Dequantize-on-stream: the resident copy is integer; the
             # per-feature scale rides in registers (paper's bank layout).
             xf = sl["X"].astype(jnp.float32) * x_scale
-            sums, counts, sse = _assign_and_partials(xf, sl["w"], centroids)
+            sums, counts, sse = dispatch.kmeans_partials(
+                xf, centroids, sl["w"])
             return {"sums": sums, "counts": counts, "sse": sse}
 
     def update_fn(centroids, merged):
@@ -93,7 +78,7 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
 
     centroids, history = grid.fit(init_state=c0, local_fn=local_fn,
                                   update_fn=update_fn, data=data,
-                                  steps=iters)
+                                  steps=iters, engine=engine)
     return KMeansResult(centroids=centroids, history=history,
                         precision=precision)
 

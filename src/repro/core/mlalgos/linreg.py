@@ -21,6 +21,7 @@ import jax.numpy as jnp
 
 from repro.core.pim import PimGrid
 from repro.core import quantize as qz
+from repro.kernels import dispatch
 
 Precision = Literal["fp32", "int16", "int8"]
 
@@ -41,7 +42,7 @@ def _quantize_dataset(X, y, bits):
 def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  lr: float = 0.1, steps: int = 100,
                  precision: Precision = "fp32",
-                 l2: float = 0.0) -> LinRegResult:
+                 l2: float = 0.0, engine: str = "scan") -> LinRegResult:
     d = X.shape[1]
 
     if precision == "fp32":
@@ -69,15 +70,16 @@ def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
         def local_fn(w, sl):
             wq = qz.quantize_symmetric(w * x_scale[0], bits=16)
             Xi = sl["X"]
-            # (R,d)i @ (d,1)i -> (R,) — int8-limb dots, int32 accumulate
-            acc = qz.hybrid_dot(Xi, wq.values[:, None])[:, 0]
+            # (R,d)i @ (d,1)i -> (R,) — int8-limb dots on the fxp_matmul
+            # Pallas kernel, int32 accumulate
+            acc = dispatch.hybrid_matmul(Xi, wq.values[:, None])[:, 0]
             pred = acc * wq.scale
             yf = sl["y0"].astype(jnp.float32) * y_scale
             r = (pred - yf) * sl["w"]
             # gradient: g_k = s_k · Σ_r Xq[r,k]·rq[r] — per-feature scale
             # factors out per output element, so the fixup is rank-1.
             rq = qz.quantize_symmetric(r, bits=16)
-            gacc = qz.hybrid_dot(Xi.T, rq.values[:, None])[:, 0]
+            gacc = dispatch.hybrid_matmul(Xi.T, rq.values[:, None])[:, 0]
             g = gacc * (x_scale[0] * rq.scale)
             return {"g": g, "loss": jnp.sum(r * r)}
 
@@ -88,7 +90,8 @@ def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
 
     w0 = jnp.zeros((d,), jnp.float32)
     w, history = grid.fit(init_state=w0, local_fn=local_fn,
-                          update_fn=update_fn, data=data, steps=steps)
+                          update_fn=update_fn, data=data, steps=steps,
+                          engine=engine)
     return LinRegResult(w=w, history=history, precision=precision)
 
 

@@ -24,6 +24,7 @@ import jax.numpy as jnp
 from repro.core.pim import PimGrid
 from repro.core import quantize as qz
 from repro.core import lut as lut_mod
+from repro.kernels import dispatch
 
 Sigmoid = Literal["exact", "lut", "lut_interp", "taylor"]
 Precision = Literal["fp32", "int16", "int8"]
@@ -44,7 +45,9 @@ def make_sigmoid(kind: Sigmoid, n_entries: int = 1024):
         return lut_mod.taylor_sigmoid
     table = lut_mod.sigmoid_lut(n_entries=n_entries)
     if kind == "lut":
-        return lambda x: lut_mod.lut_lookup(table, x)
+        # nearest-entry LUT routes through the lut_activation Pallas
+        # kernel (one-hot @ table on the MXU)
+        return lambda x: dispatch.lut_apply(table, x)
     if kind == "lut_interp":
         return lambda x: lut_mod.lut_lookup_interp(table, x)
     raise ValueError(kind)
@@ -55,7 +58,7 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  precision: Precision = "fp32",
                  sigmoid: Sigmoid = "exact",
                  lut_entries: int = 1024,
-                 l2: float = 0.0) -> LogRegResult:
+                 l2: float = 0.0, engine: str = "scan") -> LogRegResult:
     d = X.shape[1]
     sig = make_sigmoid(sigmoid, lut_entries)
 
@@ -84,11 +87,12 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
             # fold the per-feature data scale into the weight (see linreg)
             wq = qz.quantize_symmetric(w * x_scale[0], bits=16)
             Xi = sl["X"]
-            z = qz.hybrid_dot(Xi, wq.values[:, None])[:, 0] * wq.scale
+            z = dispatch.hybrid_matmul(Xi, wq.values[:, None])[:, 0] \
+                * wq.scale
             p = sig(z)
             r = (p - sl["y0"]) * sl["w"]
             rq = qz.quantize_symmetric(r, bits=16)
-            gacc = qz.hybrid_dot(Xi.T, rq.values[:, None])[:, 0]
+            gacc = dispatch.hybrid_matmul(Xi.T, rq.values[:, None])[:, 0]
             g = gacc * (x_scale[0] * rq.scale)
             eps = 1e-7
             pe = jnp.clip(jax.nn.sigmoid(z), eps, 1 - eps)
@@ -102,7 +106,8 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
 
     w0 = jnp.zeros((d,), jnp.float32)
     w, history = grid.fit(init_state=w0, local_fn=local_fn,
-                          update_fn=update_fn, data=data, steps=steps)
+                          update_fn=update_fn, data=data, steps=steps,
+                          engine=engine)
     return LogRegResult(w=w, history=history, precision=precision,
                         sigmoid=sigmoid)
 

@@ -22,6 +22,35 @@ merge) followed by ``psum`` over ``pod`` (slow DCN, = the host hop).
 ``PimGrid`` runs in two modes with one code path:
   * ``mesh=None`` — single-device (CPU tests / benchmarks): vmap + sum.
   * ``mesh=...``  — ``shard_map`` over the data axes, hierarchical psum.
+
+DESIGN — the scan step engine
+-----------------------------
+
+``fit`` compiles the whole iterative loop instead of dispatching one
+jitted step per Python iteration (which re-creates the paper's
+CPU-centric bottleneck: the host dominates while the grid idles):
+
+  * **scan chunks** — steps run as ``jax.lax.scan`` over chunks of
+    ``scan_chunk`` iterations.  One host dispatch per chunk; metrics for
+    every step inside the chunk come back stacked, so per-step history
+    and callbacks still stream out at chunk boundaries.  Callbacks see
+    per-step metrics but end-of-chunk state (intermediate states are
+    never materialized).
+  * **donated carry** — on backends with buffer donation (TPU/GPU) the
+    carried state is donated to the chunk runner, so the model update is
+    in-place bank-resident state, like the DPU's.  ``fit`` copies the
+    caller's ``init_state`` before the first chunk, but state handed to
+    callbacks is live carry: its buffers are consumed by the next
+    chunk's dispatch, so callbacks that retain state must copy it.
+  * **compile cache** — the jitted chunk runner is cached on the grid
+    keyed by ``(local_fn, update_fn)``; repeated ``fit`` calls with the
+    same functions never retrace (at most two traces per pair: the full
+    chunk and the remainder chunk).
+  * **kernel dispatch** — the mlalgos' inner loops route through
+    ``repro.kernels.dispatch`` (fxp_matmul / kmeans_assign / split_hist /
+    lut_activation), so the body the scan compiles is the same code the
+    TPU runs natively; ``engine="python"`` keeps the seed's per-step
+    loop as the parity oracle.
 """
 
 from __future__ import annotations
@@ -37,8 +66,49 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
+_FIT_CACHE_MAX = 64
+
+
+def _donating_backend() -> bool:
+    """Whether jit buffer donation is real here.  Single source of truth
+    for the donate_argnums decision and fit's defensive init_state copy —
+    the two must stay in lockstep or callers hit use-after-donate."""
+    return jax.default_backend() in ("gpu", "tpu")
+
+
 def _tree_sum_leading(tree):
     return jax.tree.map(lambda x: jnp.sum(x, axis=0), tree)
+
+
+def _fn_signature(fn) -> tuple:
+    """Cache key for a step function: code identity + closure contents.
+
+    ``train_*`` re-creates its closures on every call, so keying the
+    compile cache on function *identity* would never hit.  Two closures
+    with the same code object and the same captured values (primitives by
+    value, everything else by object identity) trace to the same jaxpr,
+    so they can share a compiled runner.  Callers must keep the closure
+    alive while the key is in use (the cache stores the functions next to
+    the runner) so ``id()`` keys cannot be recycled.
+    """
+    code = getattr(fn, "__code__", None)
+    if code is None:
+        return (fn,)
+
+    def value_key(v):
+        if isinstance(v, (int, float, bool, str, bytes, type(None))):
+            return v
+        return id(v)
+
+    cells = ()
+    if fn.__closure__:
+        cells = tuple(value_key(c.cell_contents) for c in fn.__closure__)
+    # default args are trace-time constants too (the `lr=lr` binding
+    # pattern) — they must distinguish keys exactly like closure cells
+    defaults = tuple(value_key(v) for v in (fn.__defaults__ or ()))
+    kwdefaults = tuple(sorted(
+        (k, value_key(v)) for k, v in (fn.__kwdefaults__ or {}).items()))
+    return (code, cells, defaults, kwdefaults)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -57,6 +127,10 @@ class PimGrid:
     n_vdpus: int
     mesh: Mesh | None = None
     data_axes: Sequence[str] = ("data",)
+    # jitted chunk runners keyed by (local_fn, update_fn) — excluded from
+    # eq/hash; mutated in place (the dataclass is frozen, the dict is not)
+    _fit_cache: dict = dataclasses.field(default_factory=dict, init=False,
+                                         repr=False, compare=False)
 
     def __post_init__(self):
         if self.mesh is not None:
@@ -151,27 +225,106 @@ class PimGrid:
 
     # -- generic training loop -------------------------------------------
 
+    def compiled_step(self, local_fn: Callable, update_fn: Callable):
+        """The cached jitted chunk runner for ``(local_fn, update_fn)``.
+
+        ``runner(state, data, length=L)`` scans L merge->update steps and
+        returns ``(state, stacked_metrics)``.  ``length`` is static, so a
+        fit sees at most two traces (chunk + remainder); repeated fits
+        with the same local_fn *signature* (same code, same captured
+        values — not necessarily the same closure objects) reuse the
+        cache entirely.
+        """
+        # The kernel-dispatch flag is read at trace time, so it is part of
+        # the signature: a runner traced with kernels on must not serve a
+        # use_kernels(False) fit.  Imported lazily — dispatch sits above
+        # core in the layering (it imports repro.core.*).
+        from repro.kernels import dispatch as _dispatch
+
+        key = (_fn_signature(local_fn), _fn_signature(update_fn),
+               _dispatch.kernels_enabled())
+        entry = self._fit_cache.get(key)
+        if entry is not None:
+            # LRU touch: never-repeating keys (quantized paths) must not
+            # push the long-lived hot runners out of the FIFO window
+            self._fit_cache[key] = self._fit_cache.pop(key)
+            return entry[0]
+
+        # Donation is a no-op (with a warning) on CPU — only request
+        # it where the runtime can actually alias the carry.
+        donate = (0,) if _donating_backend() else ()
+
+        @partial(jax.jit, static_argnames=("length",),
+                 donate_argnums=donate)
+        def runner(state, data, *, length: int):
+            def body(state, _):
+                merged = self.map_reduce(local_fn, state, data)
+                return update_fn(state, merged)
+
+            return jax.lax.scan(body, state, None, length=length)
+
+        # the functions ride along so the id()-based cells in the key
+        # stay alive (no id recycling while the entry exists); bounded
+        # FIFO — quantized paths capture fresh scale arrays per call, so
+        # their keys never repeat and would otherwise accumulate runners
+        # (and their compiled executables) forever
+        while len(self._fit_cache) >= _FIT_CACHE_MAX:
+            self._fit_cache.pop(next(iter(self._fit_cache)))
+        self._fit_cache[key] = (runner, local_fn, update_fn)
+        return runner
+
     def fit(self, *, init_state: Any, local_fn: Callable,
             update_fn: Callable, data: Any, steps: int,
-            callback: Callable | None = None):
+            callback: Callable | None = None,
+            scan_chunk: int = 32, engine: str = "scan"):
         """Run the paper's iterative loop: local partials -> merge -> update.
 
         ``update_fn(state, merged) -> (state, metrics)`` runs "on the host"
         (replicated).  Returns ``(state, [metrics per step])``.
+
+        ``engine="scan"`` (default) compiles the loop as chunked
+        ``lax.scan`` (see DESIGN in the module docstring);
+        ``engine="python"`` is the seed's one-dispatch-per-step loop,
+        kept as the parity oracle and benchmark baseline.
         """
+        if engine == "python":
+            @jax.jit
+            def one_step(state, data):
+                merged = self.map_reduce(local_fn, state, data)
+                return update_fn(state, merged)
 
-        @jax.jit
-        def one_step(state, data):
-            merged = self.map_reduce(local_fn, state, data)
-            return update_fn(state, merged)
+            history = []
+            state = init_state
+            for step in range(steps):
+                state, metrics = one_step(state, data)
+                history.append(metrics)
+                if callback is not None:
+                    callback(step, state, metrics)
+            return state, history
+        if engine != "scan":
+            raise ValueError(f"unknown engine {engine!r}")
+        if scan_chunk < 1:
+            raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
 
+        runner = self.compiled_step(local_fn, update_fn)
         history = []
         state = init_state
-        for step in range(steps):
-            state, metrics = one_step(state, data)
-            history.append(metrics)
-            if callback is not None:
-                callback(step, state, metrics)
+        if steps > 0 and _donating_backend():
+            # the runner donates its carry argument — copy so the
+            # caller's init_state buffers survive the first chunk
+            state = jax.tree.map(
+                lambda x: x.copy() if isinstance(x, jax.Array) else x,
+                state)
+        done = 0
+        while done < steps:
+            length = min(scan_chunk, steps - done)
+            state, stacked = runner(state, data, length=length)
+            for i in range(length):
+                metrics = jax.tree.map(lambda x, i=i: x[i], stacked)
+                history.append(metrics)
+                if callback is not None:
+                    callback(done + i, state, metrics)
+            done += length
         return state, history
 
 

@@ -213,6 +213,21 @@ def _split_limbs(x: jax.Array):
     return hi, lo
 
 
+def int8_limbs(x: jax.Array):
+    """``[(weight, limb)]`` decomposition into int8-range limbs.
+
+    int8/uint8 pass through as a single limb; wider ints split via
+    ``_split_limbs`` (x = 256*hi + lo).  Limbs are int16-typed — the low
+    limb is unsigned [0, 256) — but every value fits a narrow multiply.
+    Shared by ``hybrid_dot`` (jnp path) and ``kernels.dispatch``'s
+    Pallas path so the two stay bit-identical by construction.
+    """
+    if x.dtype in (jnp.int8, jnp.uint8):
+        return [(1.0, x.astype(jnp.int16))]
+    hi, lo = _split_limbs(x)
+    return [(256.0, hi), (1.0, lo)]
+
+
 def hybrid_dot(a: jax.Array, b: jax.Array, *, k_chunk: int = 4096
                ) -> jax.Array:
     """Overflow-safe integer matmul (..., M, K) x (K, N) -> float32.
@@ -222,12 +237,6 @@ def hybrid_dot(a: jax.Array, b: jax.Array, *, k_chunk: int = 4096
     K-chunks of ``k_chunk`` (bounding |partial| < 2^31), and limb partials
     are combined in float32.  Exact for |true dot| < 2^24 * 2^16.
     """
-    def limbs(x):
-        if x.dtype in (jnp.int8, jnp.uint8):
-            return [(1.0, x.astype(jnp.int16))]
-        hi, lo = _split_limbs(x)
-        return [(256.0, hi), (1.0, lo)]
-
     K = a.shape[-1]
     k_chunk = min(k_chunk, K)          # never pad K *up* to the chunk
     n_chunks = -(-K // k_chunk)
@@ -239,8 +248,8 @@ def hybrid_dot(a: jax.Array, b: jax.Array, *, k_chunk: int = 4096
             [b, jnp.zeros((pad,) + b.shape[1:], b.dtype)], axis=0)
 
     out = None
-    for wa, la in limbs(a):
-        for wb, lb in limbs(b):
+    for wa, la in int8_limbs(a):
+        for wb, lb in int8_limbs(b):
             acc = jnp.zeros(a.shape[:-1] + b.shape[1:], jnp.float32)
             for c in range(n_chunks):
                 sl_a = la[..., c * k_chunk:(c + 1) * k_chunk]

@@ -1,0 +1,146 @@
+"""Kernel dispatch: routes the mlalgos' inner loops to the Pallas kernels.
+
+The paper's central claim is that PIM wins exactly when the necessary
+operations and datatypes are natively supported by the hardware.  This
+module is where that support is *selected*: each mlalgo hot spot calls a
+dispatch function instead of inlining jnp, and the dispatch table decides
+whether the native Pallas kernel or the pure-jnp reference runs.
+
+Dispatch table (mlalgo hot spot -> Pallas kernel):
+
+  ==================  ========================  =======================
+  dispatch fn         kernel                    used by
+  ==================  ========================  =======================
+  ``hybrid_matmul``   ``fxp_matmul``            linreg/logreg int8/int16
+                                                forward + gradient dots
+  ``kmeans_partials`` ``kmeans_assign``         kmeans fused distance ->
+                                                argmin -> accumulate
+  ``level_histogram`` ``split_hist``            dtree per-level split
+                                                statistics
+  ``lut_apply``       ``lut_activation``        logreg LUT sigmoid
+  ==================  ========================  =======================
+
+Backend selection is automatic: on TPU the kernels lower to Mosaic; on
+CPU/GPU (this container) they run with ``interpret=True`` — jnp emulation
+that stays jit/vmap-compatible, so the same mlalgo code path is exercised
+everywhere.  ``use_kernels(False)`` flips every entry to its pure-jnp
+reference; parity tests and the before/after benchmarks use it.  The flag
+is read at *trace* time, so flipping it only affects functions traced
+afterwards (each ``train_*`` call traces afresh).
+
+All dispatch functions accept per-row weights where the underlying
+statistic must ignore PimGrid shard padding, and every kernel pads
+non-block-aligned shapes internally — callers never see alignment
+constraints.
+"""
+
+from __future__ import annotations
+
+import contextlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut as lut_mod
+from repro.core import quantize as qz
+from repro.kernels import fxp_matmul as _fxp
+from repro.kernels import kmeans_assign as _km
+from repro.kernels import lut_activation as _lut
+from repro.kernels import ref as _ref
+from repro.kernels import split_hist as _sh
+from repro.kernels.ops import INTERPRET
+
+_ENABLED = [True]
+
+
+def kernels_enabled() -> bool:
+    """True when dispatch routes to the Pallas kernels (trace-time flag)."""
+    return _ENABLED[0]
+
+
+@contextlib.contextmanager
+def use_kernels(enabled: bool):
+    """Temporarily force the Pallas path on/off (for parity tests and
+    before/after benchmarks)."""
+    prev = _ENABLED[0]
+    _ENABLED[0] = enabled
+    try:
+        yield
+    finally:
+        _ENABLED[0] = prev
+
+
+# ---------------------------------------------------------------------------
+# hybrid_matmul — linreg/logreg int8/int16 dots on the fxp_matmul kernel
+# ---------------------------------------------------------------------------
+
+def hybrid_matmul(a: jax.Array, b: jax.Array, *,
+                  k_chunk: int = 4096) -> jax.Array:
+    """Drop-in for ``quantize.hybrid_dot`` at the mlalgos call sites:
+    (M, K) int8/int16 x (K, N) int8/int16 -> (M, N) float32.
+
+    Each >8-bit operand splits into int8-range limbs and every limb pair
+    runs through the ``fxp_matmul`` Pallas kernel, accumulated in int32
+    over K-chunks of ``k_chunk`` (|limb product| < 2^16, so each chunk
+    partial stays below 2^28 < 2^31); chunk/limb partials combine in
+    float32 — the same overflow guarantee as ``hybrid_dot``, exact for
+    any K.
+    """
+    if not kernels_enabled():
+        return qz.hybrid_dot(a, b, k_chunk=k_chunk)
+    K = a.shape[-1]
+    k_chunk = min(k_chunk, K)
+    n_chunks = -(-K // k_chunk)
+    out = None
+    for wa, la in qz.int8_limbs(a):
+        for wb, lb in qz.int8_limbs(b):
+            acc = None
+            for c in range(n_chunks):
+                part = _fxp.fxp_matmul(
+                    la[:, c * k_chunk:(c + 1) * k_chunk],
+                    lb[c * k_chunk:(c + 1) * k_chunk],
+                    interpret=INTERPRET).astype(jnp.float32)
+                acc = part if acc is None else acc + part
+            term = (wa * wb) * acc
+            out = term if out is None else out + term
+    return out
+
+
+# ---------------------------------------------------------------------------
+# kmeans_partials — fused distance -> argmin -> accumulate
+# ---------------------------------------------------------------------------
+
+def kmeans_partials(x: jax.Array, centroids: jax.Array, w: jax.Array):
+    """x: (N, D) f32, centroids: (K, D), w: (N,) 0/1 row mask ->
+    (sums (K, D), counts (K,), sse ()) — padding rows contribute nothing."""
+    if kernels_enabled():
+        return _km.kmeans_assign(x, centroids, w, interpret=INTERPRET)
+    return _ref.kmeans_assign_ref(x, centroids, w)
+
+
+# ---------------------------------------------------------------------------
+# level_histogram — dtree split statistics
+# ---------------------------------------------------------------------------
+
+def level_histogram(node_idx: jax.Array, xbin: jax.Array, y: jax.Array,
+                    w: jax.Array, *, n_nodes: int, n_bins: int,
+                    n_classes: int) -> jax.Array:
+    """H[node, feature, bin, class] weighted counts for one tree level."""
+    if kernels_enabled():
+        return _sh.split_hist(node_idx, xbin, y, w, n_nodes=n_nodes,
+                              n_bins=n_bins, n_classes=n_classes,
+                              interpret=INTERPRET)
+    return _ref.split_hist_ref(node_idx, xbin, y, n_nodes, n_bins,
+                               n_classes, w)
+
+
+# ---------------------------------------------------------------------------
+# lut_apply — LUT activations (logreg sigmoid)
+# ---------------------------------------------------------------------------
+
+def lut_apply(table: lut_mod.LutTable, x: jax.Array) -> jax.Array:
+    """Nearest-entry LUT evaluation of ``x`` (any shape)."""
+    if kernels_enabled():
+        return _lut.lut_activation(x, table.table, x_min=table.x_min,
+                                   x_max=table.x_max, interpret=INTERPRET)
+    return lut_mod.lut_lookup(table, x)

@@ -34,25 +34,44 @@ def _fxp_kernel(a_ref, b_ref, o_ref, acc_ref):
         o_ref[...] = acc_ref[...]
 
 
+def _pad_axis(x: jax.Array, axis: int, multiple: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to the next multiple of ``multiple``."""
+    size = x.shape[axis]
+    pad = -size % multiple
+    if not pad:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
 def fxp_matmul(a: jax.Array, b: jax.Array, *, block_m: int = 256,
                block_n: int = 256, block_k: int = 512,
                interpret: bool = False) -> jax.Array:
-    """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32."""
+    """a: (M, K) int8, b: (K, N) int8 -> (M, N) int32.
+
+    Non-block-aligned shapes are zero-padded up to block multiples and the
+    result sliced back — zero padding is exact for integer matmul.
+    """
     M, K = a.shape
     K2, N = b.shape
     assert K == K2
     bm, bn, bk = min(block_m, M), min(block_n, N), min(block_k, K)
-    assert M % bm == 0 and N % bn == 0 and K % bk == 0
+    a = _pad_axis(_pad_axis(a, 0, bm), 1, bk)
+    b = _pad_axis(_pad_axis(b, 0, bk), 1, bn)
+    Mp, Kp = a.shape
+    Np = b.shape[1]
 
-    return pl.pallas_call(
+    out = pl.pallas_call(
         _fxp_kernel,
-        grid=(M // bm, N // bn, K // bk),
+        grid=(Mp // bm, Np // bn, Kp // bk),
         in_specs=[
             pl.BlockSpec((bm, bk), lambda i, j, k: (i, k)),
             pl.BlockSpec((bk, bn), lambda i, j, k: (k, j)),
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j, k: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), jnp.int32),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), jnp.int32),
         scratch_shapes=[pltpu.VMEM((bm, bn), jnp.int32)],
         interpret=interpret,
     )(a, b)
+    return out[:M, :N]

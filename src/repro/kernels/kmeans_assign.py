@@ -6,6 +6,11 @@ and the one-hot-matmul partial accumulation of per-cluster sums / counts
 grid walks point blocks sequentially; partial statistics accumulate in
 f32 VMEM scratch and are emitted at the last block (outputs map every
 grid step to block 0, the canonical Pallas accumulator pattern).
+
+Each point carries a weight ``w`` (the PimGrid row mask: 1 for real rows,
+0 for shard padding) that scales its contribution to sums/counts/SSE —
+this is what lets the kernel consume ``shard_rows`` output directly and
+lets non-block-aligned N be zero-padded without contaminating the merge.
 """
 
 from __future__ import annotations
@@ -16,7 +21,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _km_kernel(x_ref, c_ref, sums_ref, counts_ref, sse_ref,
+def _km_kernel(x_ref, c_ref, w_ref, sums_ref, counts_ref, sse_ref,
                acc_s, acc_c, acc_e):
     i = pl.program_id(0)
     n = pl.num_programs(0)
@@ -29,6 +34,7 @@ def _km_kernel(x_ref, c_ref, sums_ref, counts_ref, sse_ref,
 
     x = x_ref[...].astype(jnp.float32)               # (bn, D)
     c = c_ref[...].astype(jnp.float32)               # (K, D)
+    w = w_ref[...].astype(jnp.float32)               # (bn, 1)
     xc = jax.lax.dot_general(x, c, (((1,), (1,)), ((), ())),
                              preferred_element_type=jnp.float32)
     c2 = jnp.sum(c * c, axis=1)
@@ -36,14 +42,14 @@ def _km_kernel(x_ref, c_ref, sums_ref, counts_ref, sse_ref,
     a = jnp.argmin(d, axis=1)
     K = c.shape[0]
     onehot = (jax.lax.broadcasted_iota(jnp.int32, (x.shape[0], K), 1)
-              == a[:, None]).astype(jnp.float32)
+              == a[:, None]).astype(jnp.float32) * w
     acc_s[...] += jax.lax.dot_general(
         onehot, x, (((0,), (0,)), ((), ())),
         preferred_element_type=jnp.float32)          # (K, D)
     acc_c[...] += jnp.sum(onehot, axis=0, keepdims=True)
     best = jnp.min(d, axis=1)
     x2 = jnp.sum(x * x, axis=1)
-    acc_e[0, 0] += jnp.sum(best + x2)
+    acc_e[0, 0] += jnp.sum((best + x2) * w[:, 0])
 
     @pl.when(i == n - 1)
     def _done():
@@ -52,22 +58,31 @@ def _km_kernel(x_ref, c_ref, sums_ref, counts_ref, sse_ref,
         sse_ref[...] = acc_e[...]
 
 
-def kmeans_assign(x: jax.Array, centroids: jax.Array, *,
+def kmeans_assign(x: jax.Array, centroids: jax.Array,
+                  w: jax.Array | None = None, *,
                   block_n: int = 1024,
                   interpret: bool = False):
-    """x: (N, D) f32, centroids: (K, D) -> (sums (K,D), counts (K,),
-    sse ()).  N must divide block_n."""
+    """x: (N, D) f32, centroids: (K, D), w: optional (N,) row weights ->
+    (sums (K,D), counts (K,), sse ()).  N is zero-padded (with w=0) to a
+    block multiple, so any N works."""
     N, D = x.shape
     K = centroids.shape[0]
     bn = min(block_n, N)
-    assert N % bn == 0
+    if w is None:
+        w = jnp.ones((N,), jnp.float32)
+    pad = -N % bn
+    if pad:
+        x = jnp.pad(x, ((0, pad), (0, 0)))
+        w = jnp.pad(w, (0, pad))
+    Np = N + pad
 
     sums, counts, sse = pl.pallas_call(
         _km_kernel,
-        grid=(N // bn,),
+        grid=(Np // bn,),
         in_specs=[
             pl.BlockSpec((bn, D), lambda i: (i, 0)),
             pl.BlockSpec((K, D), lambda i: (0, 0)),   # VMEM-resident
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
         ],
         out_specs=[
             pl.BlockSpec((K, D), lambda i: (0, 0)),
@@ -85,5 +100,5 @@ def kmeans_assign(x: jax.Array, centroids: jax.Array, *,
             pltpu.VMEM((1, 1), jnp.float32),
         ],
         interpret=interpret,
-    )(x, centroids)
+    )(x, centroids, w[:, None])
     return sums, counts[0], sse[0, 0]

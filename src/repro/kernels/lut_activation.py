@@ -42,13 +42,19 @@ def lut_activation(x: jax.Array, table: jax.Array, *, x_min: float,
                    x_max: float, block_rows: int = 256,
                    block_cols: int = 512,
                    interpret: bool = False) -> jax.Array:
-    """Elementwise LUT evaluation of a 2D array (reshape higher ranks)."""
+    """Elementwise LUT evaluation (any rank; flattened to 2D internally).
+
+    Non-block-aligned shapes are zero-padded to block multiples and the
+    result sliced back (the LUT of the pad values is simply discarded)."""
     orig_shape = x.shape
-    x2 = x.reshape(-1, orig_shape[-1])
+    x2 = jnp.atleast_1d(x).reshape(-1, orig_shape[-1] if orig_shape else 1)
     M, N = x2.shape
     bm = min(block_rows, M)
     bn = min(block_cols, N)
-    assert M % bm == 0 and N % bn == 0, "pad inputs to block multiples"
+    pad_m, pad_n = -M % bm, -N % bn
+    if pad_m or pad_n:
+        x2 = jnp.pad(x2, ((0, pad_m), (0, pad_n)))
+    Mp, Np = x2.shape
     n_entries = table.shape[0]
     step = (x_max - x_min) / (n_entries - 1)
 
@@ -56,13 +62,13 @@ def lut_activation(x: jax.Array, table: jax.Array, *, x_min: float,
                                n_entries=n_entries)
     out = pl.pallas_call(
         kernel,
-        grid=(M // bm, N // bn),
+        grid=(Mp // bm, Np // bn),
         in_specs=[
             pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
             pl.BlockSpec((n_entries,), lambda i, j: (0,)),  # VMEM-resident
         ],
         out_specs=pl.BlockSpec((bm, bn), lambda i, j: (i, j)),
-        out_shape=jax.ShapeDtypeStruct((M, N), x.dtype),
+        out_shape=jax.ShapeDtypeStruct((Mp, Np), x.dtype),
         interpret=interpret,
     )(x2, table)
-    return out.reshape(orig_shape)
+    return out[:M, :N].reshape(orig_shape)

@@ -41,13 +41,13 @@ def fxp_matmul(a, b):
 
 
 @jax.jit
-def kmeans_assign(x, centroids):
-    return _km.kmeans_assign(x, centroids, interpret=INTERPRET)
+def kmeans_assign(x, centroids, w=None):
+    return _km.kmeans_assign(x, centroids, w, interpret=INTERPRET)
 
 
 @partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_classes"))
-def split_hist(node_idx, xbin, y, *, n_nodes: int, n_bins: int,
+def split_hist(node_idx, xbin, y, w=None, *, n_nodes: int, n_bins: int,
                n_classes: int):
-    return _sh.split_hist(node_idx, xbin, y, n_nodes=n_nodes,
+    return _sh.split_hist(node_idx, xbin, y, w, n_nodes=n_nodes,
                           n_bins=n_bins, n_classes=n_classes,
                           interpret=INTERPRET)

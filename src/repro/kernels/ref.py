@@ -40,26 +40,33 @@ def fxp_matmul_ref(a, b):
         preferred_element_type=jnp.int32)
 
 
-def kmeans_assign_ref(x, centroids):
-    """x: (N,D) f32, centroids: (K,D) -> (sums (K,D), counts (K,), sse ())."""
+def kmeans_assign_ref(x, centroids, w=None):
+    """x: (N,D) f32, centroids: (K,D), w: optional (N,) row weights ->
+    (sums (K,D), counts (K,), sse ())."""
     d = (jnp.sum(centroids ** 2, axis=1)[None, :]
          - 2.0 * x @ centroids.T)                       # (N,K) + ||x||²
     a = jnp.argmin(d, axis=1)
     onehot = jax.nn.one_hot(a, centroids.shape[0], dtype=x.dtype)
+    if w is not None:
+        onehot = onehot * w[:, None]
     sums = onehot.T @ x
     counts = jnp.sum(onehot, axis=0)
     best = jnp.take_along_axis(d, a[:, None], axis=1)[:, 0]
-    sse = jnp.sum(best + jnp.sum(x * x, axis=1))
+    contrib = best + jnp.sum(x * x, axis=1)
+    sse = jnp.sum(contrib if w is None else contrib * w)
     return sums, counts, sse
 
 
-def split_hist_ref(node_idx, xbin, y, n_nodes, n_bins, n_classes):
-    """node_idx: (N,), xbin: (N,F) int bins, y: (N,) labels ->
-    H (n_nodes, F, n_bins, n_classes) float32 counts."""
+def split_hist_ref(node_idx, xbin, y, n_nodes, n_bins, n_classes, w=None):
+    """node_idx: (N,), xbin: (N,F) int bins, y: (N,) labels, w: optional
+    (N,) row weights -> H (n_nodes, F, n_bins, n_classes) float32 counts."""
     N, F = xbin.shape
     f_idx = jnp.arange(F)
     flat = ((node_idx[:, None] * F + f_idx[None, :]) * n_bins
             + xbin) * n_classes + y[:, None]
     H = jnp.zeros((n_nodes * F * n_bins * n_classes,), jnp.float32)
-    H = H.at[flat.reshape(-1)].add(1.0)
+    inc = (jnp.ones((N,), jnp.float32) if w is None
+           else w.astype(jnp.float32))
+    H = H.at[flat.reshape(-1)].add(
+        jnp.broadcast_to(inc[:, None], (N, F)).reshape(-1))
     return H.reshape(n_nodes, F, n_bins, n_classes)

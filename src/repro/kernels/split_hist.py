@@ -4,8 +4,12 @@ Builds H[node, feature, bin, class] counts for one level of CART growth.
 The DPU version scatters scalar increments; the TPU version turns the
 scatter into a one-hot matmul: for a block of rows, a (rows, nodes*bins*
 classes) one-hot of the combined index is contracted against a (rows, F)
-ones-mask on the MXU, accumulating (F, nodes*bins*classes) partials in
-VMEM scratch across the sequential row-block grid.
+weight column on the MXU, accumulating (F, nodes*bins*classes) partials
+in VMEM scratch across the sequential row-block grid.
+
+Rows carry a weight ``w`` (the PimGrid 0/1 row mask), so shard padding —
+and the zero-padding used to round N up to a block multiple — adds
+nothing to the histogram.
 """
 
 from __future__ import annotations
@@ -18,7 +22,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 
-def _hist_kernel(node_ref, xbin_ref, y_ref, h_ref, acc, *,
+def _hist_kernel(node_ref, xbin_ref, y_ref, w_ref, h_ref, acc, *,
                  n_nodes: int, n_bins: int, n_classes: int):
     i = pl.program_id(0)
     n = pl.num_programs(0)
@@ -30,15 +34,18 @@ def _hist_kernel(node_ref, xbin_ref, y_ref, h_ref, acc, *,
     node = node_ref[...]                          # (bn, 1) int32
     xbin = xbin_ref[...]                          # (bn, F) int32
     y = y_ref[...]                                # (bn, 1) int32
+    w = w_ref[...].astype(jnp.float32)            # (bn, 1)
     bn, F = xbin.shape
     nbc = n_nodes * n_bins * n_classes
     # combined (node, bin, class) index per (row, feature)
     comb = ((node * n_bins + xbin) * n_classes + y)       # (bn, F)
     ent = jax.lax.broadcasted_iota(jnp.int32, (bn, F, nbc), 2)
     onehot = (ent == comb[..., None]).astype(jnp.float32)  # (bn,F,nbc)
-    # contract rows on the MXU: (F, bn) x (bn, nbc) per feature
+    # contract rows on the MXU: (F, bn) x (bn, nbc) per feature, each row
+    # weighted by its mask
+    wcol = jnp.broadcast_to(w[None, :, :], (F, bn, 1))
     part = jax.lax.dot_general(
-        onehot.transpose(1, 0, 2), jnp.ones((F, bn, 1), jnp.float32),
+        onehot.transpose(1, 0, 2), wcol,
         (((1,), (1,)), ((0,), (0,))),
         preferred_element_type=jnp.float32)               # (F, nbc, 1)
     acc[...] += part[:, :, 0]
@@ -48,30 +55,41 @@ def _hist_kernel(node_ref, xbin_ref, y_ref, h_ref, acc, *,
         h_ref[...] = acc[...]
 
 
-def split_hist(node_idx: jax.Array, xbin: jax.Array, y: jax.Array, *,
+def split_hist(node_idx: jax.Array, xbin: jax.Array, y: jax.Array,
+               w: jax.Array | None = None, *,
                n_nodes: int, n_bins: int, n_classes: int,
                block_n: int = 512, interpret: bool = False) -> jax.Array:
-    """node_idx (N,), xbin (N,F), y (N,) ->
-    H (n_nodes, F, n_bins, n_classes) f32."""
+    """node_idx (N,), xbin (N,F), y (N,), w optional (N,) row weights ->
+    H (n_nodes, F, n_bins, n_classes) f32.  N is zero-padded (with w=0)
+    to a block multiple, so any N works."""
     N, F = xbin.shape
     bn = min(block_n, N)
-    assert N % bn == 0
     nbc = n_nodes * n_bins * n_classes
+    if w is None:
+        w = jnp.ones((N,), jnp.float32)
+    pad = -N % bn
+    if pad:
+        node_idx = jnp.pad(node_idx, (0, pad))
+        xbin = jnp.pad(xbin, ((0, pad), (0, 0)))
+        y = jnp.pad(y, (0, pad))
+        w = jnp.pad(w, (0, pad))
+    Np = N + pad
 
     kernel = functools.partial(_hist_kernel, n_nodes=n_nodes,
                                n_bins=n_bins, n_classes=n_classes)
     h = pl.pallas_call(
         kernel,
-        grid=(N // bn,),
+        grid=(Np // bn,),
         in_specs=[
             pl.BlockSpec((bn, 1), lambda i: (i, 0)),
             pl.BlockSpec((bn, F), lambda i: (i, 0)),
+            pl.BlockSpec((bn, 1), lambda i: (i, 0)),
             pl.BlockSpec((bn, 1), lambda i: (i, 0)),
         ],
         out_specs=pl.BlockSpec((F, nbc), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((F, nbc), jnp.float32),
         scratch_shapes=[pltpu.VMEM((F, nbc), jnp.float32)],
         interpret=interpret,
-    )(node_idx[:, None], xbin, y[:, None])
+    )(node_idx[:, None], xbin, y[:, None], w[:, None])
     # (F, nodes*bins*classes) -> (nodes, F, bins, classes)
     return h.reshape(F, n_nodes, n_bins, n_classes).transpose(1, 0, 2, 3)

@@ -10,12 +10,20 @@ Production posture for 1000+ nodes (DESIGN.md §6):
   loss, preemption surfacing as an exception) triggers restore-from-last-
   checkpoint and replay, up to ``max_restarts``; NaN/Inf losses are
   treated as failures (blast-radius of a bad host) rather than silently
-  averaged in.
+  averaged in.  Loss checks never sync the device on the hot path: step
+  metrics stay on-device and are materialized (and finiteness-checked)
+  only at ``log_every``/checkpoint boundaries — a checkpoint is never
+  written before the steps it covers have been verified finite.
 * **straggler mitigation** — per-step wall-time EWMA + deviation; steps
   slower than ``straggler_factor`` x EWMA are counted and reported via
   ``metrics['stragglers']`` so the surrounding scheduler can re-shard or
   swap nodes; the data pipeline double-buffers so a slow host never
-  stalls the accelerators (Prefetcher).
+  stalls the accelerators (Prefetcher).  Because the hot path no longer
+  blocks on the device, per-step ``wall_time``/EWMA measure the
+  *host-observed* step — ``batch_fn`` plus dispatch plus any device
+  queue backpressure — not pure device compute; a device-bound slow
+  step surfaces when the queue throttles or at the next flush boundary,
+  so straggler detection is at host/window granularity.
 * **deterministic data cursor** — TokenStream.batch_at(step) makes replay
   after restart bit-exact.
 """
@@ -79,31 +87,35 @@ class Trainer:
             ) -> Dict[str, Any]:
         step = self.start_step
         end = self.start_step + n_steps
+        pending: list = []           # un-materialized (step, metrics, dt)
         while step < end:
             try:
                 t0 = time.perf_counter()
                 batch = self.batch_fn(step)
+                # hot path: no float()/device_get here — the loss stays
+                # on-device and the step returns without blocking
                 self.state, metrics = self.step_fn(self.state, batch)
-                loss = float(metrics.get("loss", jnp.zeros(())))
-                if not np.isfinite(loss):
-                    raise FloatingPointError(
-                        f"non-finite loss {loss} at step {step}")
                 dt = time.perf_counter() - t0
                 self._track_time(dt)
-                metrics = dict(metrics, step=step, wall_time=dt,
-                               stragglers=self.straggler_steps)
-                self.history.append(
-                    {k: (float(v) if hasattr(v, "item") or
-                         isinstance(v, (int, float)) else v)
-                     for k, v in metrics.items()})
-                if callback and step % self.cfg.log_every == 0:
-                    callback(step, metrics)
-                if self.ckpt and step % self.cfg.ckpt_every == 0 and \
-                        step > self.start_step:
-                    self.ckpt.save(step, self.state,
-                                   extra={"data_step": step})
+                pending.append((step, metrics, dt, self.straggler_steps))
+                at_ckpt = (self.ckpt is not None
+                           and step % self.cfg.ckpt_every == 0
+                           and step > self.start_step)
+                at_log = step % self.cfg.log_every == 0
+                if at_ckpt or at_log or step == end - 1:
+                    # materialize + finite-check everything accumulated
+                    # since the last boundary (raises before a checkpoint
+                    # could capture a post-NaN state)
+                    flushed = self._flush(pending)
+                    pending = []
+                    if callback and at_log:
+                        callback(step, flushed[-1])
+                    if at_ckpt:
+                        self.ckpt.save(step, self.state,
+                                       extra={"data_step": step})
                 step += 1
             except (FloatingPointError, RuntimeError) as e:  # failure path
+                pending = []
                 self._restarts += 1
                 if self.ckpt is None or self._restarts > \
                         self.cfg.max_restarts:
@@ -121,6 +133,31 @@ class Trainer:
         return {"final_step": end, "restarts": self._restarts,
                 "stragglers": self.straggler_steps,
                 "history": self.history}
+
+    def _flush(self, pending) -> list:
+        """Materialize buffered step metrics into ``history``.
+
+        One host sync for the whole window; raises ``FloatingPointError``
+        on the first non-finite loss (the caller's failure path restores
+        and replays, discarding the poisoned window)."""
+        # verify the WHOLE window before appending anything: a partial
+        # append would survive the restore/replay and leave duplicate,
+        # rolled-back steps in history
+        for step, metrics, _, _ in pending:
+            loss = float(metrics.get("loss", jnp.zeros(())))
+            if not np.isfinite(loss):
+                raise FloatingPointError(
+                    f"non-finite loss {loss} at step {step}")
+        flushed = []
+        for step, metrics, dt, stragglers in pending:
+            entry = dict(metrics, step=step, wall_time=dt,
+                         stragglers=stragglers)
+            entry = {k: (float(v) if hasattr(v, "item") or
+                         isinstance(v, (int, float)) else v)
+                     for k, v in entry.items()}
+            self.history.append(entry)
+            flushed.append(entry)
+        return flushed
 
     # -- straggler tracking ---------------------------------------------------
 

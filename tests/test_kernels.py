@@ -101,6 +101,18 @@ class TestKMeansAssign:
         _, counts, _ = ops.kmeans_assign(x, c)
         assert float(jnp.sum(counts)) == 4096.0
 
+    def test_weighted_matches_ref(self):
+        x = jax.random.normal(KEY, (1000, 8))
+        c = jax.random.normal(jax.random.fold_in(KEY, 20), (4, 8))
+        w = (jax.random.uniform(jax.random.fold_in(KEY, 21), (1000,))
+             > 0.25).astype(jnp.float32)
+        s1, c1, e1 = ops.kmeans_assign(x, c, w)
+        s2, c2, e2 = ref.kmeans_assign_ref(x, c, w)
+        np.testing.assert_allclose(np.asarray(s1), np.asarray(s2),
+                                   atol=1e-3, rtol=1e-4)
+        np.testing.assert_array_equal(np.asarray(c1), np.asarray(c2))
+        np.testing.assert_allclose(float(e1), float(e2), rtol=1e-5)
+
 
 class TestSplitHist:
     @pytest.mark.parametrize("N,F,nodes,bins,classes", [
@@ -125,3 +137,15 @@ class TestSplitHist:
         # every feature column sees every row exactly once
         np.testing.assert_allclose(np.asarray(h).sum(axis=(0, 2, 3)),
                                    N * np.ones(4))
+
+    def test_weighted_matches_ref(self):
+        N = 300                                  # non-block-aligned too
+        node = jax.random.randint(KEY, (N,), 0, 4)
+        xb = jax.random.randint(jax.random.fold_in(KEY, 14), (N, 3), 0, 8)
+        y = jax.random.randint(jax.random.fold_in(KEY, 15), (N,), 0, 2)
+        w = (jax.random.uniform(jax.random.fold_in(KEY, 16), (N,))
+             > 0.5).astype(jnp.float32)
+        h1 = ops.split_hist(node, xb, y, w, n_nodes=4, n_bins=8,
+                            n_classes=2)
+        h2 = ref.split_hist_ref(node, xb, y, 4, 8, 2, w)
+        np.testing.assert_array_equal(np.asarray(h1), np.asarray(h2))

@@ -94,6 +94,21 @@ class TestTrainer:
         assert out["restarts"] == 1
         assert out["final_step"] == 8        # replayed through the fault
 
+    def test_replay_does_not_duplicate_history(self, tmp_path):
+        """A NaN mid-window must poison the WHOLE window: no finite
+        prefix may be flushed to history before the raise, or replay
+        records those steps twice."""
+        # ckpt_every=2 -> windows of two steps; fail at call 7 = step 6,
+        # the second step of window [5, 6]: step 5 is finite and must NOT
+        # be flushed before the raise (it would then reappear on replay).
+        # (Replay of older, already-verified steps after an async-ckpt
+        # restore may still duplicate those — pre-existing semantics.)
+        tr, _ = self._mk(tmp_path, fail_at=7)
+        out = tr.run(10)
+        assert out["restarts"] == 1
+        steps = [e["step"] for e in out["history"]]
+        assert steps.count(5.0) == 1 and steps.count(6.0) == 1
+
     def test_auto_resume_from_checkpoint(self, tmp_path):
         tr1, _ = self._mk(tmp_path)
         tr1.run(5)

@@ -1,0 +1,171 @@
+"""The lax.scan step engine must be a drop-in for the seed's per-step
+Python loop: bit-exact results, per-step metric streaming, and no
+retracing across repeated fits with the same step-function signature."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import train_linreg, train_kmeans
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestScanVsPythonLoop:
+    def test_linreg_fp32_bit_exact(self):
+        X, y, _ = datasets.regression(KEY, 500, 8)
+        grid = make_cpu_grid(8)
+        r_scan = train_linreg(grid, X, y, lr=0.05, steps=70)
+        r_py = train_linreg(grid, X, y, lr=0.05, steps=70,
+                            engine="python")
+        np.testing.assert_array_equal(np.asarray(r_scan.w),
+                                      np.asarray(r_py.w))
+        assert len(r_scan.history) == len(r_py.history) == 70
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.history[-1]["loss"]),
+            np.asarray(r_py.history[-1]["loss"]))
+
+    def test_kmeans_fp32_bit_exact(self):
+        X, _, _ = datasets.blobs(KEY, 600, 4, k=3, spread=0.3)
+        grid = make_cpu_grid(8)
+        r_scan = train_kmeans(grid, X, 3, iters=9)
+        r_py = train_kmeans(grid, X, 3, iters=9, engine="python")
+        np.testing.assert_array_equal(np.asarray(r_scan.centroids),
+                                      np.asarray(r_py.centroids))
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.history[-1]["sse"]),
+            np.asarray(r_py.history[-1]["sse"]))
+
+    def test_unknown_engine_raises(self):
+        grid = make_cpu_grid(4)
+        X = jnp.zeros((8, 2))
+        data, n = grid.shard_rows(X)
+        with pytest.raises(ValueError):
+            grid.fit(init_state=jnp.zeros((2,)),
+                     local_fn=lambda w, sl: {"g": jnp.zeros((2,))},
+                     update_fn=lambda w, m: (w, {}),
+                     data=data, steps=1, engine="bogus")
+
+    def test_nonpositive_scan_chunk_raises(self):
+        grid = make_cpu_grid(4)
+        X = jnp.zeros((8, 2))
+        data, n = grid.shard_rows(X)
+        with pytest.raises(ValueError):
+            grid.fit(init_state=jnp.zeros((2,)),
+                     local_fn=lambda w, sl: {"g": jnp.zeros((2,))},
+                     update_fn=lambda w, m: (w, {}),
+                     data=data, steps=4, scan_chunk=0)
+
+
+class TestChunking:
+    def _setup(self, grid):
+        X = jnp.arange(64, dtype=jnp.float32).reshape(32, 2)
+        data, n = grid.shard_rows(X)
+
+        def local_fn(w, sl):
+            return {"g": jnp.sum(sl["X"] * sl["w"][:, None], axis=0)}
+
+        def update_fn(w, merged):
+            return w - 0.01 * merged["g"] / n, {"gn": jnp.sum(merged["g"])}
+
+        return data, local_fn, update_fn
+
+    def test_steps_not_multiple_of_chunk(self):
+        grid = make_cpu_grid(4)
+        data, local_fn, update_fn = self._setup(grid)
+        w, hist = grid.fit(init_state=jnp.zeros((2,)), local_fn=local_fn,
+                           update_fn=update_fn, data=data, steps=11,
+                           scan_chunk=4)
+        assert len(hist) == 11
+        # same as one big chunk
+        w2, _ = grid.fit(init_state=jnp.zeros((2,)), local_fn=local_fn,
+                         update_fn=update_fn, data=data, steps=11,
+                         scan_chunk=64)
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w2))
+
+    def test_callback_streams_every_step(self):
+        grid = make_cpu_grid(4)
+        data, local_fn, update_fn = self._setup(grid)
+        seen = []
+        grid.fit(init_state=jnp.zeros((2,)), local_fn=local_fn,
+                 update_fn=update_fn, data=data, steps=10, scan_chunk=3,
+                 callback=lambda s, state, m: seen.append(s))
+        assert seen == list(range(10))
+
+    def test_zero_steps(self):
+        grid = make_cpu_grid(4)
+        data, local_fn, update_fn = self._setup(grid)
+        w0 = jnp.ones((2,))
+        w, hist = grid.fit(init_state=w0, local_fn=local_fn,
+                           update_fn=update_fn, data=data, steps=0)
+        assert hist == []
+        np.testing.assert_array_equal(np.asarray(w), np.asarray(w0))
+
+
+class TestCompileCache:
+    def test_repeat_fit_does_not_retrace(self):
+        """Repeated fits with the same step-fn signature share one jitted
+        runner and its traces (the paper's loop re-runs constantly;
+        retracing would dominate)."""
+        grid = make_cpu_grid(4)
+        X = jax.random.normal(KEY, (64, 3))
+        data, n = grid.shard_rows(X)
+
+        def local_fn(w, sl):
+            return {"g": sl["X"].T @ (sl["X"] @ w * sl["w"])}
+
+        def update_fn(w, merged):
+            return w - 0.01 * merged["g"] / n, {}
+
+        runner = grid.compiled_step(local_fn, update_fn)
+        w0 = jnp.zeros((3,))
+        for _ in range(3):
+            grid.fit(init_state=w0, local_fn=local_fn,
+                     update_fn=update_fn, data=data, steps=40,
+                     scan_chunk=32)
+        # same runner object is served for the same closures…
+        assert grid.compiled_step(local_fn, update_fn) is runner
+        # …and it compiled at most the two chunk lengths (32 and 8)
+        assert runner._cache_size() <= 2
+
+    def test_same_code_different_closures_share_runner(self):
+        """train_* re-creates its closures each call; signature keying
+        must still hit."""
+        grid = make_cpu_grid(4)
+        X, y, _ = datasets.regression(KEY, 200, 4)
+        train_linreg(grid, X, y, lr=0.1, steps=5)
+        n_before = len(grid._fit_cache)
+        train_linreg(grid, X, y, lr=0.1, steps=5)
+        assert len(grid._fit_cache) == n_before
+
+    def test_different_hyperparams_do_not_collide(self):
+        """Closures capturing different primitive values must get their
+        own runner (lr is baked into the trace as a constant)."""
+        grid = make_cpu_grid(4)
+        X, y, _ = datasets.regression(KEY, 200, 4)
+        r1 = train_linreg(grid, X, y, lr=0.1, steps=30)
+        r2 = train_linreg(grid, X, y, lr=0.01, steps=30)
+        assert float(jnp.max(jnp.abs(r1.w - r2.w))) > 1e-6
+
+    def test_default_arg_hyperparams_do_not_collide(self):
+        """Hyperparameters bound through default args (not closure
+        cells) must also distinguish cache keys."""
+        grid = make_cpu_grid(4)
+        X = jnp.ones((16, 2))
+        data, n = grid.shard_rows(X)
+
+        def local_fn(w, sl):
+            return {"g": jnp.sum(sl["X"] * sl["w"][:, None], axis=0)}
+
+        def make_update(lr):
+            def update_fn(w, merged, lr=lr):
+                return w - lr * merged["g"] / n, {}
+            return update_fn
+
+        w1, _ = grid.fit(init_state=jnp.zeros((2,)), local_fn=local_fn,
+                         update_fn=make_update(0.1), data=data, steps=3)
+        w2, _ = grid.fit(init_state=jnp.zeros((2,)), local_fn=local_fn,
+                         update_fn=make_update(0.01), data=data, steps=3)
+        assert float(jnp.max(jnp.abs(w1 - w2))) > 1e-8

@@ -50,6 +50,17 @@ def bench_step_engines(grid, X, y, Xk, steps: int = 50):
          f"{steps * 1e6 / us_py:.0f} steps/s "
          f"(scan {us_py / us_scan:.1f}x faster)")
 
+    # the merge-cadence row (config-driven): k local steps per host
+    # merge amortises the paper's host-communication term
+    if C.merge_every > 1:
+        us_cad = time_fn(lambda: train_linreg(grid, Xe, ye, lr=0.05,
+                                              steps=steps,
+                                              merge_every=C.merge_every),
+                         warmup=1, iters=3)
+        emit(f"linreg_fp32_scan_cadence{C.merge_every}_{steps}steps",
+             us_cad, f"{steps * 1e6 / us_cad:.0f} steps/s "
+             f"(1 merge per {C.merge_every} steps)")
+
     us_scan = time_fn(lambda: train_kmeans(grid, Xke, C.km_clusters,
                                            iters=steps),
                       warmup=1, iters=3)

@@ -2,7 +2,10 @@
 
 Trains logistic regression on a PIM grid of 64 virtual DPUs with the
 paper's full recipe — int8 fixed-point resident dataset, LUT sigmoid,
-hierarchical merge — and compares against the exact-float run.
+hierarchical merge — all through the compiled lax.scan step engine
+(engine="scan", the default), and compares against the exact-float run
+and against merge cadence 8 (eight vDPU-local steps per host merge —
+the PIM-Opt axis that amortises the paper's host-communication term).
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -24,9 +27,16 @@ pim = train_logreg(grid, X, y, lr=0.5, steps=150,
                    sigmoid="lut")         # insight I2: LUT sigmoid
 ref = train_logreg(grid, X, y, lr=0.5, steps=150,
                    precision="fp32", sigmoid="exact")
+cad = train_logreg(grid, X, y, lr=0.5, steps=150,
+                   precision="int8", sigmoid="lut",
+                   merge_every=8)         # 1 host merge per 8 local steps
 
 print(f"  PIM  (int8 + LUT sigmoid): accuracy = {accuracy(pim.w, X, y):.4f}")
 print(f"  ref  (fp32 + exact)      : accuracy = {accuracy(ref.w, X, y):.4f}")
+print(f"  PIM  (cadence 8, 1/8 the merges): accuracy = "
+      f"{accuracy(cad.w, X, y):.4f}")
 print(f"  final losses: pim={float(pim.history[-1]['loss']):.4f} "
-      f"ref={float(ref.history[-1]['loss']):.4f}")
-print("the paper's claim: fixed-point + LUT costs ~no accuracy. ✓")
+      f"ref={float(ref.history[-1]['loss']):.4f} "
+      f"cadence8={float(cad.history[-1]['loss']):.4f}")
+print("the paper's claim: fixed-point + LUT costs ~no accuracy, and "
+      "merging 8x less often doesn't either. ✓")

@@ -11,6 +11,11 @@ import dataclasses
 @dataclasses.dataclass(frozen=True)
 class PimMLConfig:
     n_vdpus: int = 256
+    # merge cadence: local update steps per host merge (PIM-Opt axis);
+    # 1 = the paper's merge-per-step algorithm.  Drives the cadence row
+    # of bench_mlalgos' step-engine table; dtree ignores it (discrete
+    # split commits need the globally merged histogram).
+    merge_every: int = 8
     # linear / logistic regression
     reg_rows: int = 65536
     reg_features: int = 64

@@ -1,6 +1,7 @@
 """The paper's four ML training workloads on the PimGrid engine."""
 
-from repro.core.mlalgos.linreg import train_linreg, linreg_predict  # noqa: F401
+from repro.core.mlalgos.linreg import (train_linreg, linreg_predict,  # noqa: F401
+                                       make_linreg_step)
 from repro.core.mlalgos.logreg import train_logreg, logreg_predict  # noqa: F401
 from repro.core.mlalgos.kmeans import train_kmeans, kmeans_assign_points  # noqa: F401
 from repro.core.mlalgos.dtree import train_dtree, dtree_predict  # noqa: F401

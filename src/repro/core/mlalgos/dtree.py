@@ -110,7 +110,22 @@ def _best_splits(H):
 
 def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                 max_depth: int = 5, n_bins: int = 32, n_classes: int = 2,
-                min_samples_split: int = 2) -> DTreeResult:
+                min_samples_split: int = 2,
+                merge_every: int = 1) -> DTreeResult:
+    """``merge_every`` is accepted for API uniformity with the other
+    mlalgos but the tree always merges every level (= every step).
+
+    Why the fallback: a tree level's "update" is a *discrete* argmax —
+    the host picks one (feature, threshold) per node from the globally
+    merged histogram.  vDPU-local updates would commit *divergent
+    topologies* (different split features per shard), and tree
+    structures cannot be averaged the way weight vectors or centroids
+    can, so there is no meaningful resync.  Cadence > 1 therefore runs
+    identically to cadence 1; the knob is validated and documented
+    rather than silently dropped.
+    """
+    if merge_every < 1:
+        raise ValueError(f"merge_every must be >= 1, got {merge_every}")
     Xbin, edges = quantize_features(X, n_bins)
     n, d = Xbin.shape
     data, _ = grid.shard_rows(Xbin, jnp.asarray(y, jnp.int32))

@@ -40,7 +40,13 @@ class KMeansResult:
 
 def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
                  iters: int = 20, precision: Precision = "fp32",
-                 seed: int = 0, engine: str = "scan") -> KMeansResult:
+                 seed: int = 0, engine: str = "scan",
+                 merge_every: int = 1) -> KMeansResult:
+    """``merge_every=m`` runs m vDPU-local Lloyd iterations between
+    centroid merges (each vDPU updates its own centroid copy from its
+    resident points; the merge averages the copies).  ``m=1`` is the
+    paper's exact merge-per-iteration algorithm, bit-exact with the
+    PR 1 engine."""
     n, d = X.shape
     key = jax.random.PRNGKey(seed)
     init_idx = jax.random.choice(key, n, (k,), replace=False)
@@ -78,7 +84,8 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
 
     centroids, history = grid.fit(init_state=c0, local_fn=local_fn,
                                   update_fn=update_fn, data=data,
-                                  steps=iters, engine=engine)
+                                  steps=iters, engine=engine,
+                                  merge_every=merge_every)
     return KMeansResult(centroids=centroids, history=history,
                         precision=precision)
 

@@ -39,10 +39,19 @@ def _quantize_dataset(X, y, bits):
     return Xq, yq
 
 
-def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
-                 lr: float = 0.1, steps: int = 100,
-                 precision: Precision = "fp32",
-                 l2: float = 0.0, engine: str = "scan") -> LinRegResult:
+def make_linreg_step(grid: PimGrid, X: jax.Array, y: jax.Array, *,
+                     lr: float = 0.1, precision: Precision = "fp32",
+                     l2: float = 0.0):
+    """Build the grid-engine pieces for one linreg problem.
+
+    Returns ``(data, n, local_fn, update_fn, w0)`` ready for
+    ``grid.fit``.  Exposed separately from :func:`train_linreg` so
+    benchmarks can build the closures *once* and sweep ``fit`` options
+    (engine, cadence) against stable compile-cache keys — re-building
+    per timed call would measure retracing, not step rate (the
+    quantized paths capture fresh scale arrays, so their keys never
+    repeat across builds).
+    """
     d = X.shape[1]
 
     if precision == "fp32":
@@ -89,9 +98,22 @@ def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
         return w - lr * g, {"loss": loss}
 
     w0 = jnp.zeros((d,), jnp.float32)
+    return data, n, local_fn, update_fn, w0
+
+
+def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
+                 lr: float = 0.1, steps: int = 100,
+                 precision: Precision = "fp32",
+                 l2: float = 0.0, engine: str = "scan",
+                 merge_every: int = 1) -> LinRegResult:
+    """``merge_every=k`` runs k vDPU-local GD steps between host merges
+    (PIM-Opt's minibatch-vs-full-batch axis); ``k=1`` is the paper's
+    merge-per-step loop, bit-exact with the PR 1 engine."""
+    data, n, local_fn, update_fn, w0 = make_linreg_step(
+        grid, X, y, lr=lr, precision=precision, l2=l2)
     w, history = grid.fit(init_state=w0, local_fn=local_fn,
                           update_fn=update_fn, data=data, steps=steps,
-                          engine=engine)
+                          engine=engine, merge_every=merge_every)
     return LinRegResult(w=w, history=history, precision=precision)
 
 

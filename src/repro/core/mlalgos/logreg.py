@@ -58,7 +58,10 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  precision: Precision = "fp32",
                  sigmoid: Sigmoid = "exact",
                  lut_entries: int = 1024,
-                 l2: float = 0.0, engine: str = "scan") -> LogRegResult:
+                 l2: float = 0.0, engine: str = "scan",
+                 merge_every: int = 1) -> LogRegResult:
+    """``merge_every=k`` runs k vDPU-local GD steps between host merges;
+    ``k=1`` is bit-exact with the PR 1 merge-per-step engine."""
     d = X.shape[1]
     sig = make_sigmoid(sigmoid, lut_entries)
 
@@ -107,7 +110,7 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
     w0 = jnp.zeros((d,), jnp.float32)
     w, history = grid.fit(init_state=w0, local_fn=local_fn,
                           update_fn=update_fn, data=data, steps=steps,
-                          engine=engine)
+                          engine=engine, merge_every=merge_every)
     return LogRegResult(w=w, history=history, precision=precision,
                         sigmoid=sigmoid)
 

@@ -51,6 +51,40 @@ CPU-centric bottleneck: the host dominates while the grid idles):
     lut_activation), so the body the scan compiles is the same code the
     TPU runs natively; ``engine="python"`` keeps the seed's per-step
     loop as the parity oracle.
+
+DESIGN — merge cadence (``merge_every``)
+----------------------------------------
+
+The paper's strong-scaling table shows the host merge dominating once
+per-DPU work shrinks; PIM-Opt (arXiv 2404.07164) makes the *cadence* of
+that merge a first-class axis.  ``fit(..., merge_every=k)`` runs ``k``
+local update steps per vDPU between merges:
+
+  * each vDPU carries its **own copy of the state** and applies
+    ``update_fn`` to its *local* partial statistics, scaled by
+    ``n_vdpus`` so the shard looks like the whole dataset to the
+    normalisation inside ``update_fn`` (the local-SGD view: a vDPU
+    optimises on its resident rows as if they were everything),
+  * after ``k`` local steps the per-vDPU states are **averaged** with
+    the same hierarchical reduction as ``map_reduce`` (vmap-lane sum →
+    ICI psum → pod psum, i.e. tasklet → rank → host) and the averaged
+    state is re-broadcast — one merge per ``k`` steps instead of one
+    per step,
+  * per-local-step metrics are averaged across vDPUs with the same
+    tree; combined with the ``n_vdpus`` pre-scaling this reproduces the
+    global normalisation exactly (``mean_v(V·m_v/n) = Σ_v m_v / n``),
+  * ``merge_every=1`` takes the *original* merge-per-step code path —
+    it is bit-exact with the PR 1 engine by construction, and serves as
+    the parity oracle for cadence sweeps,
+  * states must be float pytrees when ``merge_every > 1`` (averaging
+    integer state would truncate); metrics report the loss of the
+    *divergent local models*, which converges to the global loss as the
+    states re-sync each round.
+
+``steps`` always counts **local update steps**; a trailing
+``steps % k`` remainder runs as one short round (its runner is cached
+under its own ``merge_every`` key).  With ``merge_every=k`` the scanned
+unit is one merge *round*, so ``scan_chunk`` counts rounds, not steps.
 """
 
 from __future__ import annotations
@@ -200,6 +234,19 @@ class PimGrid:
         returns a pytree of summable statistics.  The reduction is the
         paper's host merge: vmapped-tasklet sum -> intra-pod psum -> pod
         psum.
+
+        Example — a masked global sum (padding rows carry ``w == 0`` and
+        contribute nothing):
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.pim import make_cpu_grid
+        >>> grid = make_cpu_grid(4)
+        >>> data, n = grid.shard_rows(jnp.arange(8.0)[:, None])
+        >>> out = grid.map_reduce(
+        ...     lambda w, sl: {"s": jnp.sum(sl["X"] * sl["w"][:, None])},
+        ...     None, data)
+        >>> float(out["s"])
+        28.0
         """
         if self.mesh is None:
             return _tree_sum_leading(jax.vmap(lambda d: local_fn(model, d))(data))
@@ -225,15 +272,105 @@ class PimGrid:
 
     # -- generic training loop -------------------------------------------
 
-    def compiled_step(self, local_fn: Callable, update_fn: Callable):
+    def _round(self, local_fn: Callable, update_fn: Callable, k: int,
+               state: Any, data: Any):
+        """One merge round at cadence ``k``: every vDPU runs ``k`` local
+        update steps on its own copy of ``state`` (no cross-shard
+        traffic), then the per-vDPU states and per-step metrics are
+        averaged hierarchically (vmap-lane sum -> ICI psum -> pod psum,
+        the same tree as ``map_reduce``).
+
+        Local partials are pre-scaled by ``n_vdpus`` so ``update_fn``'s
+        global normalisation sees shard statistics at dataset magnitude
+        (see the merge-cadence DESIGN note in the module docstring).
+
+        Returns ``(avg_state, metrics)`` with metric leaves of shape
+        ``(k, ...)`` — one entry per local step, averaged over vDPUs.
+        """
+        scale = float(self.n_vdpus)
+
+        def lanes(state, data):
+            def per_vdpu(sl):
+                def local_step(st, _):
+                    part = jax.tree.map(lambda x: x * scale,
+                                        local_fn(st, sl))
+                    return update_fn(st, part)
+                return jax.lax.scan(local_step, state, None, length=k)
+
+            states, metrics = jax.vmap(per_vdpu)(data)
+            return jax.tree.map(lambda x: jnp.sum(x, axis=0),
+                                (states, metrics))
+
+        if self.mesh is None:
+            states, metrics = lanes(state, data)
+        else:
+            axes = tuple(self.data_axes)
+
+            def shard_body(state, data):
+                part = lanes(state, data)
+                for ax in reversed(axes[1:]):
+                    part = jax.tree.map(
+                        lambda x, a=ax: jax.lax.psum(x, a), part)
+                return jax.tree.map(
+                    lambda x: jax.lax.psum(x, axes[0]), part)
+
+            data_specs = jax.tree.map(lambda _: P(axes), data)
+            states, metrics = shard_map(
+                shard_body, mesh=self.mesh,
+                in_specs=(P(), data_specs), out_specs=P(),
+                check_rep=False)(state, data)
+
+        inv = 1.0 / scale
+        return (jax.tree.map(lambda x: x * inv, states),
+                jax.tree.map(lambda x: x * inv, metrics))
+
+    def make_runner(self, local_fn: Callable, update_fn: Callable, *,
+                    merge_every: int = 1):
         """The cached jitted chunk runner for ``(local_fn, update_fn)``.
 
-        ``runner(state, data, length=L)`` scans L merge->update steps and
-        returns ``(state, stacked_metrics)``.  ``length`` is static, so a
-        fit sees at most two traces (chunk + remainder); repeated fits
-        with the same local_fn *signature* (same code, same captured
-        values — not necessarily the same closure objects) reuse the
-        cache entirely.
+        ``runner(state, data, length=L)`` scans L merge rounds and
+        returns ``(state, stacked_metrics)``.  At ``merge_every=1`` a
+        round is one merge->update step and metric leaves come back
+        shaped ``(L, ...)``; at cadence ``k > 1`` a round is ``k``
+        vDPU-local steps plus one state merge and metric leaves are
+        ``(L, k, ...)``.  ``length`` is static, so a fit sees at most
+        two traces per cadence (chunk + remainder).
+
+        Compile-cache keying rules: the runner is cached on the grid
+        keyed by
+
+          * the *signatures* of ``local_fn``/``update_fn`` — code object
+            plus captured closure-cell and default-arg values (primitives
+            by value, arrays/objects by identity).  ``train_*`` re-creates
+            its closures each call; same code + same captured values
+            still hit the cache, while a changed hyperparameter
+            (``lr=lr`` closure or default binding) forces a new trace,
+          * the trace-time ``kernels.dispatch`` flag — a runner traced
+            with Pallas kernels on never serves a ``use_kernels(False)``
+            fit,
+          * ``merge_every`` — each cadence compiles its own round body.
+
+        The cache is a bounded LRU (``_FIT_CACHE_MAX`` entries): paths
+        whose closures capture fresh arrays per call (the quantized
+        mlalgos) never repeat a key and would otherwise pin compiled
+        executables forever.
+
+        Example — repeated requests reuse the runner, a different
+        cadence gets its own:
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.pim import make_cpu_grid
+        >>> grid = make_cpu_grid(4)
+        >>> def local_fn(w, sl):
+        ...     return {"g": jnp.sum(sl["X"] * sl["w"][:, None], axis=0)}
+        >>> def update_fn(w, merged):
+        ...     return w - 0.1 * merged["g"], {}
+        >>> runner = grid.make_runner(local_fn, update_fn)
+        >>> grid.make_runner(local_fn, update_fn) is runner
+        True
+        >>> r4 = grid.make_runner(local_fn, update_fn, merge_every=4)
+        >>> r4 is runner
+        False
         """
         # The kernel-dispatch flag is read at trace time, so it is part of
         # the signature: a runner traced with kernels on must not serve a
@@ -241,8 +378,12 @@ class PimGrid:
         # core in the layering (it imports repro.core.*).
         from repro.kernels import dispatch as _dispatch
 
+        if merge_every < 1:
+            raise ValueError(
+                f"merge_every must be >= 1, got {merge_every}")
+
         key = (_fn_signature(local_fn), _fn_signature(update_fn),
-               _dispatch.kernels_enabled())
+               _dispatch.kernels_enabled(), merge_every)
         entry = self._fit_cache.get(key)
         if entry is not None:
             # LRU touch: never-repeating keys (quantized paths) must not
@@ -257,9 +398,16 @@ class PimGrid:
         @partial(jax.jit, static_argnames=("length",),
                  donate_argnums=donate)
         def runner(state, data, *, length: int):
-            def body(state, _):
-                merged = self.map_reduce(local_fn, state, data)
-                return update_fn(state, merged)
+            if merge_every == 1:
+                # the PR 1 merge-per-step body, unchanged — cadence 1 is
+                # bit-exact with the pre-cadence engine by construction
+                def body(state, _):
+                    merged = self.map_reduce(local_fn, state, data)
+                    return update_fn(state, merged)
+            else:
+                def body(state, _):
+                    return self._round(local_fn, update_fn, merge_every,
+                                       state, data)
 
             return jax.lax.scan(body, state, None, length=length)
 
@@ -273,40 +421,117 @@ class PimGrid:
         self._fit_cache[key] = (runner, local_fn, update_fn)
         return runner
 
+    def compiled_step(self, local_fn: Callable, update_fn: Callable):
+        """Pre-cadence alias for ``make_runner(..., merge_every=1)``."""
+        return self.make_runner(local_fn, update_fn)
+
     def fit(self, *, init_state: Any, local_fn: Callable,
             update_fn: Callable, data: Any, steps: int,
             callback: Callable | None = None,
-            scan_chunk: int = 32, engine: str = "scan"):
+            scan_chunk: int = 32, engine: str = "scan",
+            merge_every: int = 1):
         """Run the paper's iterative loop: local partials -> merge -> update.
 
         ``update_fn(state, merged) -> (state, metrics)`` runs "on the host"
-        (replicated).  Returns ``(state, [metrics per step])``.
+        (replicated).  Returns ``(state, [metrics per step])`` — always
+        one history entry per *local* step, whatever the cadence.
 
         ``engine="scan"`` (default) compiles the loop as chunked
         ``lax.scan`` (see DESIGN in the module docstring);
         ``engine="python"`` is the seed's one-dispatch-per-step loop,
         kept as the parity oracle and benchmark baseline.
-        """
-        if engine == "python":
-            @jax.jit
-            def one_step(state, data):
-                merged = self.map_reduce(local_fn, state, data)
-                return update_fn(state, merged)
 
-            history = []
-            state = init_state
-            for step in range(steps):
-                state, metrics = one_step(state, data)
-                history.append(metrics)
-                if callback is not None:
-                    callback(step, state, metrics)
-            return state, history
-        if engine != "scan":
+        ``merge_every=k`` runs ``k`` vDPU-local update steps between
+        hierarchical state merges (DESIGN — merge cadence).  ``k=1``
+        (default) is the PR 1 merge-per-step engine, bit-exact.  At
+        ``k > 1`` the scanned unit is one merge round, so ``scan_chunk``
+        counts rounds; state pytrees must be float (the merge averages
+        them).
+
+        Example — GD toward the global mean; cadence 4 pays 1/4 the
+        merges and still converges (local means average to the global
+        one):
+
+        >>> import jax.numpy as jnp
+        >>> from repro.core.pim import make_cpu_grid
+        >>> grid = make_cpu_grid(4)
+        >>> data, n = grid.shard_rows(jnp.arange(8.0)[:, None])
+        >>> def local_fn(w, sl):
+        ...     return {"g": jnp.sum((w - sl["X"]) * sl["w"][:, None],
+        ...                          axis=0)}
+        >>> def update_fn(w, merged):
+        ...     return w - 0.1 * merged["g"] / n, {"g0": merged["g"][0]}
+        >>> w, hist = grid.fit(init_state=jnp.zeros((1,)),
+        ...                    local_fn=local_fn, update_fn=update_fn,
+        ...                    data=data, steps=40)
+        >>> len(hist)
+        40
+        >>> bool(jnp.abs(w[0] - 3.5) < 0.1)
+        True
+        >>> w4, hist4 = grid.fit(init_state=jnp.zeros((1,)),
+        ...                      local_fn=local_fn, update_fn=update_fn,
+        ...                      data=data, steps=40, merge_every=4)
+        >>> len(hist4)
+        40
+        >>> bool(jnp.abs(w4[0] - 3.5) < 0.2)
+        True
+        """
+        if engine not in ("python", "scan"):
             raise ValueError(f"unknown engine {engine!r}")
         if scan_chunk < 1:
             raise ValueError(f"scan_chunk must be >= 1, got {scan_chunk}")
+        if merge_every < 1:
+            raise ValueError(
+                f"merge_every must be >= 1, got {merge_every}")
 
-        runner = self.compiled_step(local_fn, update_fn)
+        if engine == "python":
+            if merge_every == 1:
+                @jax.jit
+                def one_step(state, data):
+                    merged = self.map_reduce(local_fn, state, data)
+                    return update_fn(state, merged)
+
+                history = []
+                state = init_state
+                for step in range(steps):
+                    state, metrics = one_step(state, data)
+                    history.append(metrics)
+                    if callback is not None:
+                        callback(step, state, metrics)
+                return state, history
+
+            # cadence > 1: one dispatch per merge round (the cadence
+            # analogue of the seed loop — parity oracle for the scanned
+            # rounds below).  A round of one step is a merge-per-step
+            # round, so it uses the merged body — same semantics the
+            # scan path's remainder runner compiles.
+            round_fns: dict = {}
+            history = []
+            state = init_state
+            done = 0
+            while done < steps:
+                k = min(merge_every, steps - done)
+                fn = round_fns.get(k)
+                if fn is None:
+                    if k == 1:
+                        def fn(st, d):
+                            merged = self.map_reduce(local_fn, st, d)
+                            return update_fn(st, merged)
+                        fn = jax.jit(fn)
+                    else:
+                        fn = jax.jit(lambda st, d, _k=k: self._round(
+                            local_fn, update_fn, _k, st, d))
+                    round_fns[k] = fn
+                state, stacked = fn(state, data)
+                for j in range(k):
+                    metrics = jax.tree.map(
+                        lambda x, j=j: x[j] if k > 1 else x, stacked)
+                    history.append(metrics)
+                    if callback is not None:
+                        callback(done + j, state, metrics)
+                done += k
+            return state, history
+
         history = []
         state = init_state
         if steps > 0 and _donating_backend():
@@ -315,16 +540,53 @@ class PimGrid:
             state = jax.tree.map(
                 lambda x: x.copy() if isinstance(x, jax.Array) else x,
                 state)
-        done = 0
-        while done < steps:
-            length = min(scan_chunk, steps - done)
+
+        if merge_every == 1:
+            runner = self.make_runner(local_fn, update_fn)
+            done = 0
+            while done < steps:
+                length = min(scan_chunk, steps - done)
+                state, stacked = runner(state, data, length=length)
+                for i in range(length):
+                    metrics = jax.tree.map(lambda x, i=i: x[i], stacked)
+                    history.append(metrics)
+                    if callback is not None:
+                        callback(done + i, state, metrics)
+                done += length
+            return state, history
+
+        # cadence > 1: scan over merge rounds; metric leaves come back
+        # (length, k, ...) and flatten to one history entry per local
+        # step.  The steps % k remainder runs as one short round whose
+        # runner caches under its own merge_every key.
+        rounds, rem = divmod(steps, merge_every)
+        runner = self.make_runner(local_fn, update_fn,
+                                  merge_every=merge_every)
+        done_rounds = 0
+        while done_rounds < rounds:
+            length = min(scan_chunk, rounds - done_rounds)
             state, stacked = runner(state, data, length=length)
-            for i in range(length):
-                metrics = jax.tree.map(lambda x, i=i: x[i], stacked)
+            for r in range(length):
+                for j in range(merge_every):
+                    metrics = jax.tree.map(
+                        lambda x, r=r, j=j: x[r, j], stacked)
+                    history.append(metrics)
+                    if callback is not None:
+                        callback((done_rounds + r) * merge_every + j,
+                                 state, metrics)
+            done_rounds += length
+        if rem:
+            # rem == 1 is served by the cadence-1 (merge-per-step)
+            # runner, whose metric leaves are (1, ...) not (1, rem, ...)
+            rem_runner = self.make_runner(local_fn, update_fn,
+                                          merge_every=rem)
+            state, stacked = rem_runner(state, data, length=1)
+            for j in range(rem):
+                metrics = jax.tree.map(
+                    lambda x, j=j: x[0, j] if rem > 1 else x[0], stacked)
                 history.append(metrics)
                 if callback is not None:
-                    callback(done + i, state, metrics)
-            done += length
+                    callback(rounds * merge_every + j, state, metrics)
         return state, history
 
 

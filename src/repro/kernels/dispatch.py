@@ -32,6 +32,27 @@ All dispatch functions accept per-row weights where the underlying
 statistic must ignore PimGrid shard padding, and every kernel pads
 non-block-aligned shapes internally — callers never see alignment
 constraints.
+
+Interaction with the scan engine's compile cache: ``PimGrid.make_runner``
+reads ``kernels_enabled()`` at trace time and bakes it into its cache
+key, so a runner traced inside ``use_kernels(False)`` never serves a
+kernels-on fit (and vice versa).  Flip the flag *around* the ``train_*``
+call, never across an already-compiled runner.
+
+Example — the kernel path and the jnp reference agree exactly on an
+integer matmul (int8 operands, int32 accumulation, float32 out):
+
+>>> import jax.numpy as jnp
+>>> from repro.kernels import dispatch
+>>> a = jnp.ones((4, 8), jnp.int8)
+>>> b = jnp.ones((8, 2), jnp.int8)
+>>> out = dispatch.hybrid_matmul(a, b)
+>>> out.shape, out.dtype
+((4, 2), dtype('float32'))
+>>> with dispatch.use_kernels(False):        # pure-jnp reference
+...     ref = dispatch.hybrid_matmul(a, b)
+>>> bool(jnp.array_equal(out, ref))
+True
 """
 
 from __future__ import annotations
@@ -112,7 +133,19 @@ def hybrid_matmul(a: jax.Array, b: jax.Array, *,
 
 def kmeans_partials(x: jax.Array, centroids: jax.Array, w: jax.Array):
     """x: (N, D) f32, centroids: (K, D), w: (N,) 0/1 row mask ->
-    (sums (K, D), counts (K,), sse ()) — padding rows contribute nothing."""
+    (sums (K, D), counts (K,), sse ()) — padding rows contribute nothing.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.kernels import dispatch
+    >>> x = jnp.array([[0.0, 0.0], [4.0, 4.0], [9.9, 9.9]])
+    >>> c = jnp.array([[0.0, 0.0], [4.0, 4.0]])
+    >>> w = jnp.array([1.0, 1.0, 0.0])       # third row is shard padding
+    >>> sums, counts, sse = dispatch.kmeans_partials(x, c, w)
+    >>> [int(v) for v in counts]
+    [1, 1]
+    >>> float(sse)
+    0.0
+    """
     if kernels_enabled():
         return _km.kmeans_assign(x, centroids, w, interpret=INTERPRET)
     return _ref.kmeans_assign_ref(x, centroids, w)

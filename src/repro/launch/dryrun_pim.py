@@ -1,18 +1,27 @@
 import os
-os.environ.setdefault("XLA_FLAGS",
-                      "--xla_force_host_platform_device_count=512")
 
-"""Dry-run of the PAPER'S OWN workload at pod scale: one logistic-
-regression GD iteration on a PimGrid of 4,096 virtual DPUs spread over
-the production mesh (the paper's 2,524-DPU system, scaled up), with the
-int8 resident dataset (I1), LUT sigmoid (I2) and hierarchical
-ICI-then-DCN merge (I5).
+# must be set before the first jax init; override to smoke-test the
+# lowering on fewer fake devices (the default meshes need 256/512)
+os.environ.setdefault(
+    "XLA_FLAGS",
+    "--xla_force_host_platform_device_count="
+    + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
+
+"""Dry-run of the PAPER'S OWN workload at pod scale: logistic-regression
+GD on a PimGrid of 4,096 virtual DPUs spread over the production mesh
+(the paper's 2,524-DPU system, scaled up), with the int8 resident
+dataset (I1), LUT sigmoid (I2) and hierarchical ICI-then-DCN merge (I5).
 
   PYTHONPATH=src python -m repro.launch.dryrun_pim [--multi-pod]
+      [--merge-every K] [--chunk L] [--rows N]
 
-This is the most faithful large-scale artifact: the collective schedule
-in the compiled HLO *is* the paper's host-merge, mapped onto a TPU
-multi-pod (all-reduce@data groups then all-reduce@pod groups).
+Aligned with the scan step engine (PR 1/2): what lowers here is the
+grid's own cached chunk runner — ``PimGrid.make_runner`` scanning
+``--chunk`` merge rounds at cadence ``--merge-every`` — with the inner
+loop routed through ``kernels.dispatch`` exactly like the mlalgos.  The
+collective schedule in the compiled HLO *is* the paper's host-merge
+(all-reduce@data groups then all-reduce@pod groups), and at cadence k
+it appears once per k local steps instead of every step.
 """
 
 import argparse
@@ -24,12 +33,13 @@ import jax.numpy as jnp
 from repro.core.pim import PimGrid
 from repro.core import lut as lut_mod
 from repro.core import quantize as qz
+from repro.kernels import dispatch
 from repro.launch.mesh import make_production_mesh
 from repro.roofline import analysis as ra
 
 
 def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
-          features: int = 64):
+          features: int = 64, merge_every: int = 1, chunk: int = 8):
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = ("pod", "data") if multi_pod else ("data",)
     grid = PimGrid(n_vdpus=n_vdpus, mesh=mesh, data_axes=data_axes)
@@ -40,28 +50,34 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
 
     def local_fn(w, sl):
         wq = qz.quantize_symmetric(w * x_scale, bits=16)
-        z = qz.hybrid_dot(sl["X"], wq.values[:, None])[:, 0] * wq.scale
-        p = lut_mod.lut_lookup(table, z)
+        z = dispatch.hybrid_matmul(sl["X"], wq.values[:, None])[:, 0] \
+            * wq.scale
+        p = dispatch.lut_apply(table, z)
         r = (p - sl["y0"]) * sl["w"]
         rq = qz.quantize_symmetric(r, bits=16)
-        g = qz.hybrid_dot(sl["X"].T, rq.values[:, None])[:, 0] \
+        g = dispatch.hybrid_matmul(sl["X"].T, rq.values[:, None])[:, 0] \
             * (x_scale * rq.scale)
-        return {"g": g, "n": jnp.sum(sl["w"])}
+        return {"g": g, "loss": jnp.sum(r * r)}
 
-    def train_step(w, data):
-        merged = grid.map_reduce(local_fn, w, data)
-        return w - 0.5 * merged["g"] / jnp.maximum(merged["n"], 1.0)
+    def update_fn(w, merged):
+        return w - 0.5 * merged["g"] / rows, {"loss": merged["loss"] / rows}
+
+    # the scan engine's own cached chunk runner — the artifact the fit
+    # hot path dispatches, scanning `chunk` merge rounds per host call
+    runner = grid.make_runner(local_fn, update_fn,
+                              merge_every=merge_every)
 
     data_spec = {
-        "X": jax.ShapeDtypeStruct((n_vdpus, per, features), jnp.int8),
-        "y0": jax.ShapeDtypeStruct((n_vdpus, per), jnp.float32),
-        "w": jax.ShapeDtypeStruct((n_vdpus, per), jnp.float32),
+        "X": jax.ShapeDtypeStruct((n_vdpus, per, features), jnp.int8,
+                                  sharding=grid.data_sharding()),
+        "y0": jax.ShapeDtypeStruct((n_vdpus, per), jnp.float32,
+                                   sharding=grid.data_sharding()),
+        "w": jax.ShapeDtypeStruct((n_vdpus, per), jnp.float32,
+                                  sharding=grid.data_sharding()),
     }
-    w_spec = jax.ShapeDtypeStruct((features,), jnp.float32)
-    in_sh = (grid.replicated_sharding(),
-             {k: grid.data_sharding() for k in data_spec})
-    lowered = jax.jit(train_step, in_shardings=in_sh).lower(
-        w_spec, data_spec)
+    w_spec = jax.ShapeDtypeStruct((features,), jnp.float32,
+                                  sharding=grid.replicated_sharding())
+    lowered = runner.lower(w_spec, data_spec, length=chunk)
     return lowered, lowered.compile(), mesh
 
 
@@ -69,18 +85,27 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rows", type=int, default=1 << 24)
+    ap.add_argument("--merge-every", type=int, default=1,
+                    help="vDPU-local steps per hierarchical merge")
+    ap.add_argument("--chunk", type=int, default=8,
+                    help="merge rounds per scanned host dispatch")
     args = ap.parse_args()
 
-    lowered, compiled, mesh = build(args.multi_pod, rows=args.rows)
+    lowered, compiled, mesh = build(args.multi_pod, rows=args.rows,
+                                    merge_every=args.merge_every,
+                                    chunk=args.chunk)
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
+    if isinstance(cost, (list, tuple)):      # one entry per program in
+        cost = cost[0] if cost else {}       # newer jax versions
     parsed = ra.analyze_hlo(compiled.as_text())
     n_chips = 512 if args.multi_pod else 256
     terms = ra.roofline_terms(parsed, cost, n_chips=n_chips)
     tag = "pod2x16x16" if args.multi_pod else "pod16x16"
     out = {
-        "arch": "pim-ml(logreg,int8+lut)", "mesh": tag,
+        "arch": "pim-ml(logreg,int8+lut,scan-engine)", "mesh": tag,
         "rows": args.rows, "n_vdpus": 4096,
+        "merge_every": args.merge_every, "scan_chunk": args.chunk,
         "memory_gb_per_device": round(
             (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
             / 2 ** 30, 3),

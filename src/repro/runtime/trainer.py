@@ -49,6 +49,13 @@ class TrainerConfig:
     max_restarts: int = 3
     straggler_factor: float = 2.0
     log_every: int = 10
+    # Merge cadence of the step engine driving this trainer (see
+    # repro.core.pim — merge-cadence DESIGN).  Between merges the
+    # model state is shard-divergent and step metrics are local, so
+    # metric flushes / finite checks / checkpoints only fire at merge
+    # boundaries (steps where (step+1) % merge_every == 0); log/ckpt
+    # boundaries that land mid-round are deferred to the next merge.
+    merge_every: int = 1
 
 
 class Trainer:
@@ -98,10 +105,23 @@ class Trainer:
                 dt = time.perf_counter() - t0
                 self._track_time(dt)
                 pending.append((step, metrics, dt, self.straggler_steps))
-                at_ckpt = (self.ckpt is not None
-                           and step % self.cfg.ckpt_every == 0
-                           and step > self.start_step)
-                at_log = step % self.cfg.log_every == 0
+                # a boundary that lands mid merge-round defers to the
+                # next merge (pending keeps accumulating): state is only
+                # globally meaningful — and safe to checkpoint — once
+                # the vDPU states have been re-synced
+                at_merge = ((step + 1) % self.cfg.merge_every == 0
+                            or step == end - 1)
+                # the ckpt multiple this window covers must itself be
+                # past start_step — otherwise cadence > 1 would fire a
+                # near-initial checkpoint at the first merge boundary
+                # (the window [step-m+1, step] covering multiple 0)
+                at_ckpt = (self.ckpt is not None and at_merge
+                           and step % self.cfg.ckpt_every
+                           < self.cfg.merge_every
+                           and step - step % self.cfg.ckpt_every
+                           > self.start_step)
+                at_log = at_merge and step % self.cfg.log_every \
+                    < self.cfg.merge_every
                 if at_ckpt or at_log or step == end - 1:
                     # materialize + finite-check everything accumulated
                     # since the last boundary (raises before a checkpoint

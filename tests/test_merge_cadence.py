@@ -1,0 +1,292 @@
+"""Merge cadence (``fit(merge_every=k)``) semantics.
+
+Three contracts pin the feature:
+  * ``merge_every=1`` is bit-exact with the PR 1 merge-per-step engine
+    for all four mlalgos (it takes the original code path),
+  * ``merge_every=k>1`` matches a hand-rolled local-SGD oracle
+    (k scaled local steps per vDPU, then state averaging) and converges
+    within tolerance of cadence 1 on linreg/logreg,
+  * sweeping ``merge_every`` re-uses the scan engine's compile cache
+    (one runner per cadence, no growth on repeat sweeps).
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import (train_linreg, train_logreg, train_kmeans,
+                                train_dtree)
+from repro.core.mlalgos.linreg import closed_form
+from repro.core.mlalgos.logreg import accuracy
+from repro.runtime import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+
+
+class TestCadenceOneBitExact:
+    """merge_every=1 must equal the PR 1 engine (python-loop oracle)."""
+
+    def test_linreg(self):
+        X, y, _ = datasets.regression(KEY, 400, 8)
+        grid = make_cpu_grid(8)
+        r_cad = train_linreg(grid, X, y, lr=0.05, steps=40, merge_every=1)
+        r_pr1 = train_linreg(grid, X, y, lr=0.05, steps=40,
+                             engine="python")
+        np.testing.assert_array_equal(np.asarray(r_cad.w),
+                                      np.asarray(r_pr1.w))
+        np.testing.assert_array_equal(
+            np.asarray(r_cad.history[-1]["loss"]),
+            np.asarray(r_pr1.history[-1]["loss"]))
+
+    def test_logreg(self):
+        X, y, _ = datasets.binary_classification(KEY, 400, 6)
+        grid = make_cpu_grid(8)
+        r_cad = train_logreg(grid, X, y, lr=0.5, steps=30, merge_every=1)
+        r_pr1 = train_logreg(grid, X, y, lr=0.5, steps=30,
+                             engine="python")
+        np.testing.assert_array_equal(np.asarray(r_cad.w),
+                                      np.asarray(r_pr1.w))
+
+    def test_kmeans(self):
+        X, _, _ = datasets.blobs(KEY, 500, 4, k=3, spread=0.3)
+        grid = make_cpu_grid(8)
+        r_cad = train_kmeans(grid, X, 3, iters=8, merge_every=1)
+        r_pr1 = train_kmeans(grid, X, 3, iters=8, engine="python")
+        np.testing.assert_array_equal(np.asarray(r_cad.centroids),
+                                      np.asarray(r_pr1.centroids))
+
+    def test_dtree_cadence_is_documented_noop(self):
+        """The tree always merges every level (discrete split commits
+        cannot be averaged) — any cadence must give the same tree."""
+        X, y = datasets.mixture_classification(KEY, 600, 6, 2)
+        grid = make_cpu_grid(8)
+        r1 = train_dtree(grid, X, y, max_depth=3, merge_every=1)
+        r4 = train_dtree(grid, X, y, max_depth=3, merge_every=4)
+        np.testing.assert_array_equal(np.asarray(r1.tree.feature),
+                                      np.asarray(r4.tree.feature))
+        np.testing.assert_array_equal(np.asarray(r1.tree.threshold),
+                                      np.asarray(r4.tree.threshold))
+        np.testing.assert_array_equal(np.asarray(r1.tree.leaf_value),
+                                      np.asarray(r4.tree.leaf_value))
+        assert r1.history == r4.history
+
+
+class TestLocalSGDOracle:
+    """Cadence k>1 must equal the hand-rolled local-SGD recurrence:
+    per vDPU, k GD steps on n_vdpus-scaled shard gradients, then an
+    average of the per-vDPU weights."""
+
+    def test_linreg_k3_matches_numpy_oracle(self):
+        V, per, d, lr, k = 2, 4, 2, 0.05, 3
+        X = np.asarray(jax.random.normal(KEY, (V * per, d)), np.float64)
+        y = X @ np.array([1.0, -1.0])
+        n = V * per
+
+        w_oracle = np.zeros((d,))
+        for _ in range(2):                       # two merge rounds
+            locals_ = []
+            for v in range(V):
+                Xv = X[v * per:(v + 1) * per]
+                yv = y[v * per:(v + 1) * per]
+                wv = w_oracle.copy()
+                for _ in range(k):
+                    g = Xv.T @ (Xv @ wv - yv) * V     # n_vdpus pre-scale
+                    wv = wv - lr * g / n
+                locals_.append(wv)
+            w_oracle = np.mean(locals_, axis=0)       # hierarchical avg
+
+        grid = make_cpu_grid(V)
+        res = train_linreg(grid, jnp.asarray(X, jnp.float32),
+                           jnp.asarray(y, jnp.float32), lr=lr,
+                           steps=2 * k, merge_every=k)
+        np.testing.assert_allclose(np.asarray(res.w), w_oracle,
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_scan_matches_python_engine_with_remainder(self):
+        """steps % k != 0: the trailing short round must match the
+        per-round python dispatch loop bit-exactly."""
+        X, y, _ = datasets.regression(KEY, 300, 5)
+        grid = make_cpu_grid(4)
+        r_scan = train_linreg(grid, X, y, lr=0.05, steps=12,
+                              merge_every=5)
+        r_py = train_linreg(grid, X, y, lr=0.05, steps=12,
+                            merge_every=5, engine="python")
+        np.testing.assert_array_equal(np.asarray(r_scan.w),
+                                      np.asarray(r_py.w))
+        assert len(r_scan.history) == len(r_py.history) == 12
+        np.testing.assert_array_equal(
+            np.asarray(r_scan.history[-1]["loss"]),
+            np.asarray(r_py.history[-1]["loss"]))
+
+    def test_remainder_of_one_step(self):
+        """steps % k == 1: the trailing round is a single merge-per-step
+        dispatch — it must not crash and must match the python engine
+        (regression: the (1, rem, ...) metric unstacking assumed
+        rem > 1)."""
+        X, y, _ = datasets.regression(KEY, 200, 4)
+        grid = make_cpu_grid(4)
+        r_scan = train_linreg(grid, X, y, lr=0.05, steps=5, merge_every=4)
+        r_py = train_linreg(grid, X, y, lr=0.05, steps=5, merge_every=4,
+                            engine="python")
+        assert len(r_scan.history) == len(r_py.history) == 5
+        np.testing.assert_array_equal(np.asarray(r_scan.w),
+                                      np.asarray(r_py.w))
+
+    def test_callback_sees_every_local_step(self):
+        X, y, _ = datasets.regression(KEY, 200, 4)
+        grid = make_cpu_grid(4)
+        seen = []
+        data, n, = None, None
+        from repro.core.mlalgos import make_linreg_step
+        data, n, lf, uf, w0 = make_linreg_step(grid, X, y, lr=0.05)
+        grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                 steps=10, merge_every=4,
+                 callback=lambda s, st, m: seen.append(s))
+        assert seen == list(range(10))
+
+
+class TestAccuracyVsCadence:
+    """Amortising the merge must not cost convergence (the PIM-Opt
+    claim): cadence 4 lands within tolerance of cadence 1."""
+
+    def test_linreg_converges_within_tolerance(self):
+        X, y, _ = datasets.regression(KEY, 800, 8)
+        w_star = np.asarray(closed_form(X, y))
+        grid = make_cpu_grid(8)
+        errs = {}
+        for k in (1, 4):
+            res = train_linreg(grid, X, y, lr=0.05, steps=160,
+                               merge_every=k)
+            errs[k] = float(np.linalg.norm(np.asarray(res.w) - w_star))
+        assert errs[4] <= 1.5 * errs[1] + 0.05, errs
+
+    def test_logreg_accuracy_within_tolerance(self):
+        X, y, _ = datasets.binary_classification(KEY, 800, 8)
+        grid = make_cpu_grid(8)
+        accs = {}
+        for k in (1, 4):
+            res = train_logreg(grid, X, y, lr=0.5, steps=120,
+                               merge_every=k)
+            accs[k] = accuracy(res.w, X, y)
+        assert accs[4] >= accs[1] - 0.02, accs
+
+
+class TestCompileCacheCadence:
+    def test_cadence_sweep_reuses_cache(self):
+        """Each cadence compiles one runner; repeating the sweep must
+        not grow the cache or re-create runners."""
+        grid = make_cpu_grid(4)
+        X = jax.random.normal(KEY, (64, 3))
+        data, n = grid.shard_rows(X)
+
+        def local_fn(w, sl):
+            return {"g": sl["X"].T @ (sl["X"] @ w * sl["w"])}
+
+        def update_fn(w, merged):
+            return w - 0.01 * merged["g"] / n, {}
+
+        def sweep():
+            out = {}
+            for k in (1, 2, 4):
+                grid.fit(init_state=jnp.zeros((3,)), local_fn=local_fn,
+                         update_fn=update_fn, data=data, steps=8,
+                         merge_every=k)
+                out[k] = grid.make_runner(local_fn, update_fn,
+                                          merge_every=k)
+            return out
+
+        first = sweep()
+        size_after_first = len(grid._fit_cache)
+        second = sweep()
+        assert len(grid._fit_cache) == size_after_first
+        for k in (1, 2, 4):
+            assert first[k] is second[k]
+        assert len({id(r) for r in first.values()}) == 3
+
+    def test_runner_traces_bounded(self):
+        """A cadence fit compiles at most chunk + remainder lengths."""
+        grid = make_cpu_grid(4)
+        X = jax.random.normal(KEY, (32, 2))
+        data, n = grid.shard_rows(X)
+
+        def local_fn(w, sl):
+            return {"g": jnp.sum(sl["X"] * sl["w"][:, None], axis=0)}
+
+        def update_fn(w, merged):
+            return w - 0.01 * merged["g"] / n, {}
+
+        for _ in range(3):
+            grid.fit(init_state=jnp.zeros((2,)), local_fn=local_fn,
+                     update_fn=update_fn, data=data, steps=20,
+                     merge_every=4, scan_chunk=3)
+        runner = grid.make_runner(local_fn, update_fn, merge_every=4)
+        assert runner._cache_size() <= 2
+
+
+class TestValidation:
+    def test_fit_rejects_nonpositive_cadence(self):
+        grid = make_cpu_grid(4)
+        data, n = grid.shard_rows(jnp.zeros((8, 2)))
+        with pytest.raises(ValueError):
+            grid.fit(init_state=jnp.zeros((2,)),
+                     local_fn=lambda w, sl: {"g": jnp.zeros((2,))},
+                     update_fn=lambda w, m: (w, {}),
+                     data=data, steps=1, merge_every=0)
+
+    def test_make_runner_rejects_nonpositive_cadence(self):
+        grid = make_cpu_grid(4)
+        with pytest.raises(ValueError):
+            grid.make_runner(lambda w, sl: w, lambda w, m: (w, {}),
+                             merge_every=0)
+
+    def test_dtree_rejects_nonpositive_cadence(self):
+        X, y = datasets.mixture_classification(KEY, 100, 4, 2)
+        grid = make_cpu_grid(4)
+        with pytest.raises(ValueError):
+            train_dtree(grid, X, y, max_depth=2, merge_every=0)
+
+
+class TestTrainerCadence:
+    """The fault-tolerant Trainer defers metric flush / finite check to
+    merge boundaries: mid-round metrics are shard-local."""
+
+    def _mk(self, merge_every):
+        def step_fn(state, batch):
+            w = state["w"] - 0.1 * batch["g"]
+            return {"w": w}, {"loss": jnp.sum(w ** 2)}
+
+        cfg = TrainerConfig(log_every=1, merge_every=merge_every)
+        return Trainer(step_fn, {"w": jnp.ones((2,))},
+                       lambda s: {"g": jnp.ones((2,))}, cfg)
+
+    def test_flush_only_at_merge_boundaries(self):
+        tr = self._mk(merge_every=3)
+        seen = []
+        tr.run(7, callback=lambda step, m: seen.append(step))
+        # merge boundaries: steps 2, 5 ((step+1) % 3 == 0) + final step
+        assert seen == [2, 5, 6]
+        # every step still lands in history, in order
+        assert [e["step"] for e in tr.history] == list(range(7))
+
+    def test_no_spurious_early_checkpoint(self, tmp_path):
+        """cadence > 1 must not fire a near-initial checkpoint at the
+        first merge boundary: the ckpt multiple a flush window covers
+        must itself be past start_step (regression)."""
+        def step_fn(state, batch):
+            return {"w": state["w"] - 0.1}, {"loss": jnp.zeros(())}
+
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                            merge_every=8, log_every=1000)
+        tr = Trainer(step_fn, {"w": jnp.ones(())}, lambda s: {}, cfg)
+        tr.run(20)
+        tr.ckpt.wait()
+        # only the unconditional end-of-run save — no step-7 checkpoint
+        assert tr.ckpt.steps() == [19]
+
+    def test_default_cadence_keeps_pr1_behaviour(self):
+        tr = self._mk(merge_every=1)
+        seen = []
+        tr.run(3, callback=lambda step, m: seen.append(step))
+        assert seen == [0, 1, 2]

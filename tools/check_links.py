@@ -1,0 +1,53 @@
+"""Markdown link checker for the docs CI job.
+
+Verifies that every relative link target in the given markdown files
+exists on disk (anchors are stripped; external http(s)/mailto links are
+skipped — CI must not depend on the network).
+
+    python tools/check_links.py README.md docs/*.md
+"""
+
+import re
+import sys
+from pathlib import Path
+
+LINK_RE = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+SKIP_PREFIXES = ("http://", "https://", "mailto:", "#")
+
+
+def check(md_path: Path) -> list:
+    errors = []
+    text = md_path.read_text()
+    # fenced code blocks are not prose links (JSON examples etc.)
+    text = re.sub(r"```.*?```", "", text, flags=re.S)
+    for target in LINK_RE.findall(text):
+        if target.startswith(SKIP_PREFIXES):
+            continue
+        rel = target.split("#", 1)[0]
+        if not rel:
+            continue
+        if not (md_path.parent / rel).exists():
+            errors.append(f"{md_path}: broken link -> {target}")
+    return errors
+
+
+def main(argv) -> int:
+    if not argv:
+        print("usage: check_links.py FILE.md [FILE.md ...]")
+        return 2
+    errors = []
+    for name in argv:
+        p = Path(name)
+        if not p.exists():
+            errors.append(f"{name}: file not found")
+            continue
+        errors.extend(check(p))
+    for e in errors:
+        print(e)
+    if not errors:
+        print(f"ok: {len(argv)} files, all relative links resolve")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))

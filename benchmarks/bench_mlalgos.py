@@ -61,6 +61,26 @@ def bench_step_engines(grid, X, y, Xk, steps: int = 50):
              us_cad, f"{steps * 1e6 / us_cad:.0f} steps/s "
              f"(1 merge per {C.merge_every} steps)")
 
+    # the merge-pipeline row (config-driven): overlap and/or compress
+    # the merge itself (see PimGrid.fit / configs.pim_ml)
+    if C.overlap_merge or C.merge_compression_bits:
+        from repro.distributed.compression import CompressionConfig
+        cmp = (CompressionConfig(bits=C.merge_compression_bits)
+               if C.merge_compression_bits else None)
+        us_pipe = time_fn(
+            lambda: train_linreg(grid, Xe, ye, lr=0.05, steps=steps,
+                                 merge_every=C.merge_every,
+                                 overlap_merge=C.overlap_merge,
+                                 merge_compression=cmp),
+            warmup=1, iters=3)
+        tag = "+".join([s for s, on in (
+            ("overlap", C.overlap_merge),
+            (f"efq{C.merge_compression_bits}",
+             C.merge_compression_bits)) if on])
+        emit(f"linreg_fp32_scan_{tag}_{steps}steps", us_pipe,
+             f"{steps * 1e6 / us_pipe:.0f} steps/s "
+             f"(merge pipeline: {tag})")
+
     us_scan = time_fn(lambda: train_kmeans(grid, Xke, C.km_clusters,
                                            iters=steps),
                       warmup=1, iters=3)

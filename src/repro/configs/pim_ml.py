@@ -16,6 +16,13 @@ class PimMLConfig:
     # of bench_mlalgos' step-engine table; dtree ignores it (discrete
     # split commits need the globally merged histogram).
     merge_every: int = 8
+    # merge pipeline (paper I5/I1 on the merge itself): overlap the
+    # hierarchical reduction with the next round's local compute
+    # (one-round staleness), and/or quantize the float leaves crossing
+    # the host hop to `merge_compression_bits` with error feedback.
+    # 0 bits = exact merges; dtree ignores both (see train_dtree).
+    overlap_merge: bool = False
+    merge_compression_bits: int = 0
     # linear / logistic regression
     reg_rows: int = 65536
     reg_features: int = 64

@@ -111,7 +111,8 @@ def _best_splits(H):
 def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                 max_depth: int = 5, n_bins: int = 32, n_classes: int = 2,
                 min_samples_split: int = 2,
-                merge_every: int = 1) -> DTreeResult:
+                merge_every: int = 1, overlap_merge: bool = False,
+                merge_compression=None) -> DTreeResult:
     """``merge_every`` is accepted for API uniformity with the other
     mlalgos but the tree always merges every level (= every step).
 
@@ -123,6 +124,16 @@ def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
     can, so there is no meaningful resync.  Cadence > 1 therefore runs
     identically to cadence 1; the knob is validated and documented
     rather than silently dropped.
+
+    ``overlap_merge`` / ``merge_compression`` are likewise accepted but
+    inert, for the same discreteness reason on both axes: the level's
+    split commit *consumes* the merged histogram (there is no
+    independent next-level compute to overlap it with — re-routing rows
+    needs the committed splits), and the histogram is count data whose
+    argmax must be exact — the compression layer's integer-leaf policy
+    (``distributed.compression``) would route it past the quantizer
+    anyway.  (``CompressionConfig`` itself validates its width at
+    construction, so a typo'd config fails loudly everywhere.)
     """
     if merge_every < 1:
         raise ValueError(f"merge_every must be >= 1, got {merge_every}")

@@ -41,12 +41,17 @@ class KMeansResult:
 def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
                  iters: int = 20, precision: Precision = "fp32",
                  seed: int = 0, engine: str = "scan",
-                 merge_every: int = 1) -> KMeansResult:
+                 merge_every: int = 1, overlap_merge: bool = False,
+                 merge_compression=None,
+                 merge_state: dict | None = None) -> KMeansResult:
     """``merge_every=m`` runs m vDPU-local Lloyd iterations between
     centroid merges (each vDPU updates its own centroid copy from its
     resident points; the merge averages the copies).  ``m=1`` is the
     paper's exact merge-per-iteration algorithm, bit-exact with the
-    PR 1 engine."""
+    PR 1 engine.  ``overlap_merge``/``merge_compression`` select the
+    overlapped / compressed merge pipeline; the int8 wire quantizes the
+    float cluster sums/counts with error feedback (counts survive
+    because EF carries the rounding residual into the next merge)."""
     n, d = X.shape
     key = jax.random.PRNGKey(seed)
     init_idx = jax.random.choice(key, n, (k,), replace=False)
@@ -85,7 +90,10 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
     centroids, history = grid.fit(init_state=c0, local_fn=local_fn,
                                   update_fn=update_fn, data=data,
                                   steps=iters, engine=engine,
-                                  merge_every=merge_every)
+                                  merge_every=merge_every,
+                                  overlap_merge=overlap_merge,
+                                  merge_compression=merge_compression,
+                                  merge_state=merge_state)
     return KMeansResult(centroids=centroids, history=history,
                         precision=precision)
 

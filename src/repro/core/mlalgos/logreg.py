@@ -59,9 +59,13 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  sigmoid: Sigmoid = "exact",
                  lut_entries: int = 1024,
                  l2: float = 0.0, engine: str = "scan",
-                 merge_every: int = 1) -> LogRegResult:
+                 merge_every: int = 1, overlap_merge: bool = False,
+                 merge_compression=None,
+                 merge_state: dict | None = None) -> LogRegResult:
     """``merge_every=k`` runs k vDPU-local GD steps between host merges;
-    ``k=1`` is bit-exact with the PR 1 merge-per-step engine."""
+    ``k=1`` is bit-exact with the PR 1 merge-per-step engine.
+    ``overlap_merge``/``merge_compression`` select the overlapped /
+    compressed merge pipeline (``PimGrid.fit``); both off is exact."""
     d = X.shape[1]
     sig = make_sigmoid(sigmoid, lut_entries)
 
@@ -110,7 +114,10 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
     w0 = jnp.zeros((d,), jnp.float32)
     w, history = grid.fit(init_state=w0, local_fn=local_fn,
                           update_fn=update_fn, data=data, steps=steps,
-                          engine=engine, merge_every=merge_every)
+                          engine=engine, merge_every=merge_every,
+                          overlap_merge=overlap_merge,
+                          merge_compression=merge_compression,
+                          merge_state=merge_state)
     return LogRegResult(w=w, history=history, precision=precision,
                         sigmoid=sigmoid)
 

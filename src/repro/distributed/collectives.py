@@ -32,6 +32,36 @@ def hierarchical_psum(x, fast_axes: Sequence[str], slow_axis: str | None):
     return x
 
 
+def lane_sum(tree, *, scale: float | None = None):
+    """Sum each leaf over its leading (vmap-lane / vDPU) axis, emitted as
+    a ones-vector contraction for float leaves.
+
+    The tasklet-level merge of the paper is a reduction over co-resident
+    vDPU lanes.  ``jnp.sum(x, 0)`` lowers to a VPU reduce; contracting
+    with a ones vector is the same sum expressed as a matmul, which the
+    MXU executes (the same trick ``kmeans_assign``/``split_hist`` use to
+    turn scatters into one-hot matmuls) and which XLA:CPU's dot path
+    handles measurably faster than its reduce path at 1024+ lanes.  Used
+    by the overlapped merge pipeline; the exact (bit-reproducible)
+    legacy paths keep ``jnp.sum``.  Integer leaves stay on ``jnp.sum``
+    (exact, and the MXU int path needs no help at these sizes).
+
+    ``scale`` optionally folds a constant (e.g. 1/n_vdpus for a state
+    average) into the contraction vector for free.
+    """
+    def one_leaf(x):
+        if not jnp.issubdtype(x.dtype, jnp.inexact):
+            s = jnp.sum(x, axis=0)
+            return s if scale is None else s * scale
+        ones = jnp.full((x.shape[0],), 1.0 if scale is None else scale,
+                        x.dtype)
+        return jax.lax.dot_general(
+            ones, x, (((0,), (0,)), ((), ())),
+            preferred_element_type=x.dtype)
+
+    return jax.tree.map(one_leaf, tree)
+
+
 def quantized_psum(x: jax.Array, axis: str, *, bits: int = 8
                    ) -> jax.Array:
     """All-reduce with fixed-point compression on the wire.

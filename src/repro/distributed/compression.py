@@ -1,10 +1,20 @@
-"""Gradient compression state machine (int8/int4-style fixed point with
-error feedback, plus top-k sparsification) for the slow inter-pod hop.
+"""Gradient/state compression state machine (int8/int4-style fixed point
+with error feedback, plus top-k sparsification) for the slow inter-pod hop.
 
 This is the framework-level wrapper around ``core.quantize.ef_quantize``
 and ``collectives.quantized_psum_ef``: it owns a per-leaf error buffer
-pytree that rides in the optimizer state, so compressed training is a
-drop-in flag on the Trainer.
+pytree that rides in the optimizer state (or the PimGrid scan carry), so
+compressed training is a drop-in flag on the Trainer and on
+``PimGrid.fit(merge_compression=...)``.
+
+Leaf policy (paper I1 applied to the wire): only *inexact* (float) leaves
+are quantized.  Integer-dtype leaves — k-means assignment counts, dtree
+bin histograms, anything already fixed point — pass through the exact
+reduction unchanged: quantizing an int32 count as if it were fp32 both
+wastes the exactness the integer representation already paid for and
+corrupts discrete statistics that downstream argmax/threshold logic
+consumes.  ``_compressible`` is the single predicate all entry points
+share.
 """
 
 from __future__ import annotations
@@ -25,9 +35,33 @@ class CompressionConfig:
     slow_axis: Optional[str] = "pod"
     fast_axes: Tuple[str, ...] = ("data",)
 
+    def __post_init__(self):
+        # bits=1 has qmax = 2**0 - 1 = 0: the quantizer would divide by
+        # zero and silently NaN the state.  2..16 are the widths the
+        # paper's fixed-point scheme supports (int32 psum accumulation).
+        if not 2 <= self.bits <= 16:
+            raise ValueError(
+                f"CompressionConfig.bits must be in [2, 16], got "
+                f"{self.bits}")
+
+
+def _compressible(leaf) -> bool:
+    """Only float leaves ride the quantized wire; integer statistics
+    (counts, histograms) stay on the exact path.  Accepts arrays or
+    ShapeDtypeStructs (wire accounting runs on specs)."""
+    dtype = getattr(leaf, "dtype", None)
+    if dtype is None:
+        dtype = jnp.asarray(leaf).dtype
+    return jnp.issubdtype(dtype, jnp.inexact)
+
 
 def init_error_state(grads: Any) -> Any:
-    return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+    """Zero error-feedback buffer.  Integer leaves get a zero placeholder
+    of their own dtype (they never accumulate error — kept so the buffer
+    pytree stays congruent with the reduced tree)."""
+    return jax.tree.map(
+        lambda g: jnp.zeros_like(g, jnp.float32) if _compressible(g)
+        else jnp.zeros_like(g), grads)
 
 
 def compressed_reduce(grads: Any, error: Any, cfg: CompressionConfig
@@ -36,25 +70,86 @@ def compressed_reduce(grads: Any, error: Any, cfg: CompressionConfig
 
     Returns (reduced_grads, new_error).  Must run inside shard_map (axis
     names bound).  With ``slow_axis=None`` falls back to exact psum.
+    Integer-dtype leaves always take the exact psum on the slow hop —
+    see the module docstring for why.
     """
     grads = jax.tree.map(
         lambda g: jax.lax.psum(g, tuple(cfg.fast_axes)), grads)
     if cfg.slow_axis is None:
         return grads, error
-    if not cfg.error_feedback:
-        out = jax.tree.map(
-            lambda g: coll.quantized_psum(g, cfg.slow_axis, bits=cfg.bits),
-            grads)
-        return out, error
 
     flat_g, treedef = jax.tree.flatten(grads)
     flat_e = treedef.flatten_up_to(error)
     outs, new_errs = [], []
     for g, e in zip(flat_g, flat_e):
-        o, ne = coll.quantized_psum_ef(g, e, cfg.slow_axis, bits=cfg.bits)
-        outs.append(o)
-        new_errs.append(ne)
+        if not _compressible(g):
+            outs.append(jax.lax.psum(g, cfg.slow_axis))
+            new_errs.append(e)
+        elif cfg.error_feedback:
+            o, ne = coll.quantized_psum_ef(g, e, cfg.slow_axis,
+                                           bits=cfg.bits)
+            outs.append(o)
+            new_errs.append(ne)
+        else:
+            outs.append(coll.quantized_psum(g, cfg.slow_axis,
+                                            bits=cfg.bits))
+            new_errs.append(e)
     return treedef.unflatten(outs), treedef.unflatten(new_errs)
+
+
+def ef_compress_tree(tree: Any, error: Any, cfg: CompressionConfig
+                     ) -> Tuple[Any, Any]:
+    """Single-device emulation of the compressed host hop.
+
+    Where ``compressed_reduce`` needs bound mesh axis names, a
+    ``mesh=None`` PimGrid has already lane-summed its partials — the
+    "wire" is the tree itself.  Quantize-dequantize each float leaf at
+    ``cfg.bits`` with error feedback (the residual is carried into the
+    next round's input), passing integer leaves through untouched.
+    Returns (dequantized_tree, new_error) — numerically the same
+    round-trip the quantized psum performs on a real slow axis.
+    """
+    from repro.core import quantize as qz
+
+    flat, treedef = jax.tree.flatten(tree)
+    flat_e = treedef.flatten_up_to(error)
+    outs, new_errs = [], []
+    for x, e in zip(flat, flat_e):
+        if not _compressible(x):
+            outs.append(x)
+            new_errs.append(e)
+        elif cfg.error_feedback:
+            q, ne = qz.ef_quantize(x, e, bits=cfg.bits)
+            outs.append(q.dequantize(x.dtype))
+            new_errs.append(ne)
+        else:
+            outs.append(qz.quantize_symmetric(
+                x, bits=cfg.bits).dequantize(x.dtype))
+            new_errs.append(e)
+    return treedef.unflatten(outs), treedef.unflatten(new_errs)
+
+
+def wire_bytes(tree: Any, cfg: Optional[CompressionConfig]) -> int:
+    """Bytes one merge round moves over the host hop for ``tree``.
+
+    Float leaves cost ``ceil(bits/8)`` bytes per element plus 4 bytes for
+    the shared scale when compressed, else their full itemsize; integer
+    leaves always cross at native width.  This is the analytic quantity
+    ``BENCH_scaling.json`` reports as ``merge_bytes`` — on TPU it is the
+    DCN traffic of one merge, on the CPU container it is the modeled
+    wire cost (the emulated hop moves no real bytes).
+    """
+    total = 0
+    for leaf in jax.tree.leaves(tree):
+        leaf = jnp.asarray(leaf) if not hasattr(leaf, "dtype") else leaf
+        size = 1
+        for d in leaf.shape:
+            size *= int(d)
+        if cfg is not None and _compressible(leaf):
+            total += size * ((cfg.bits + 7) // 8) + 4
+        else:
+            total += size * leaf.dtype.itemsize
+    return total
 
 
 def topk_sparsify(g: jax.Array, frac: float, error: jax.Array

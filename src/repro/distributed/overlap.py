@@ -1,15 +1,31 @@
 """Compute/communication overlap — the paper's insight I5: the host merge
 is tolerable when overlapped with DPU compute.
 
-TPU realization: split the per-step batch into microbatches and emit the
-gradient reduction of microbatch *i* interleaved with the forward+backward
-of microbatch *i+1* inside one ``lax.scan``.  XLA's latency-hiding
-scheduler turns the interleaved psums into async collectives that run
-behind the next microbatch's compute (visible in the dry-run HLO as
-``all-reduce-start``/``all-reduce-done`` pairs straddling dots).
+Two realizations of the same idea live here:
 
-``microbatched_grads`` is the generic engine; the Trainer uses it when
-``grad_accum_microbatches > 1``.
+* ``microbatched_grads`` — *within* a step: split the per-step batch into
+  microbatches and emit the gradient reduction of microbatch *i*
+  interleaved with the forward+backward of microbatch *i+1* inside one
+  ``lax.scan``.  The Trainer uses it when ``grad_accum_microbatches > 1``.
+* ``double_buffered_body`` — *across* merge rounds: the scan-body
+  combinator behind ``PimGrid.fit(overlap_merge=True)``.  The carry
+  holds two buffers — the live state and the previous round's
+  un-reduced partials — so each scan iteration emits the hierarchical
+  reduction of round *i* alongside round *i+1*'s local compute.  The
+  two are data-independent by construction (the reduction reads the
+  *pending* buffer, the dots read the state), which is exactly the
+  precondition XLA's latency-hiding scheduler needs to turn the merge
+  into async collectives running behind the dots (visible in the
+  dry-run HLO as ``all-reduce-start``/``all-reduce-done`` pairs
+  straddling dots; on backends without async collectives the sync
+  all-reduce is still scheduled among the dots).
+
+The price of the cross-round pipeline is one round of gradient
+staleness: the merge applied at round *i* was computed from the state of
+round *i-1* (plus a one-round fill bubble at the start).  That is the
+classic pipelined-SGD trade — convergence is preserved within tolerance
+at the step sizes the mlalgos use, and ``tests/test_overlap_compression``
+pins it against the exact path.
 """
 
 from __future__ import annotations
@@ -18,6 +34,40 @@ from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
+
+
+def double_buffered_body(merge_fn: Callable, compute_fn: Callable,
+                         commit_fn: Callable) -> Callable:
+    """Build the overlapped-merge scan body.
+
+    Args:
+      merge_fn: ``(pending, ef) -> (merged, ef')`` — the hierarchical
+        (optionally compressed) reduction of the previous round's
+        partials.  Collective side of the pipeline.
+      compute_fn: ``state -> (fresh_partials, metrics | None)`` — this
+        round's local compute (the dots).  Must not depend on
+        ``merge_fn``'s output; that independence *is* the overlap.
+      commit_fn: ``(state, merged) -> (state', metrics)`` — applies the
+        merged statistics (the host-side update).
+
+    Returns a ``lax.scan`` body over carry ``(state, pending, ef)``.
+    Metrics come from ``compute_fn`` when it produces them (the
+    cadence-k local phase reports its own per-step metrics) and from
+    ``commit_fn`` otherwise (the cadence-1 update derives them from the
+    merged partials).  The merge is emitted before the dots so
+    schedulers that preserve emission order issue the collective first —
+    async backends then hide it behind the dots entirely.
+    """
+    def body(carry, _):
+        state, pending, ef = carry
+        merged, ef = merge_fn(pending, ef)
+        fresh, compute_metrics = compute_fn(state)
+        new_state, commit_metrics = commit_fn(state, merged)
+        metrics = (compute_metrics if compute_metrics is not None
+                   else commit_metrics)
+        return (new_state, fresh, ef), metrics
+
+    return body
 
 
 def microbatched_grads(loss_fn: Callable, params: Any, batch: Any, *,

@@ -33,6 +33,14 @@ statistic must ignore PimGrid shard padding, and every kernel pads
 non-block-aligned shapes internally — callers never see alignment
 constraints.
 
+Block shapes are no longer fixed constants: every kernel call asks
+``kernels.autotune.block_shapes`` for its tile sizes, keyed on
+``(kernel, dtype, shape-bucket, backend)``.  Measured entries from the
+on-disk autotune cache win; otherwise a per-backend heuristic applies
+(MXU-aligned VMEM-bounded tiles on TPU, fewest-grid-steps blocks under
+interpret mode, where the kernel body runs once per grid step in
+Python).  See ``kernels/autotune.py``.
+
 Interaction with the scan engine's compile cache: ``PimGrid.make_runner``
 reads ``kernels_enabled()`` at trace time and bakes it into its cache
 key, so a runner traced inside ``use_kernels(False)`` never serves a
@@ -64,6 +72,7 @@ import jax.numpy as jnp
 
 from repro.core import lut as lut_mod
 from repro.core import quantize as qz
+from repro.kernels import autotune as _at
 from repro.kernels import fxp_matmul as _fxp
 from repro.kernels import kmeans_assign as _km
 from repro.kernels import lut_activation as _lut
@@ -112,6 +121,10 @@ def hybrid_matmul(a: jax.Array, b: jax.Array, *,
     K = a.shape[-1]
     k_chunk = min(k_chunk, K)
     n_chunks = -(-K // k_chunk)
+    # limbs are int16-typed (the low limb is unsigned [0, 256)); the
+    # block-shape table is keyed on what the kernel actually sees
+    blocks = _at.block_shapes("fxp_matmul", jnp.int16,
+                              (a.shape[0], k_chunk, b.shape[-1]))
     out = None
     for wa, la in qz.int8_limbs(a):
         for wb, lb in qz.int8_limbs(b):
@@ -120,7 +133,7 @@ def hybrid_matmul(a: jax.Array, b: jax.Array, *,
                 part = _fxp.fxp_matmul(
                     la[:, c * k_chunk:(c + 1) * k_chunk],
                     lb[c * k_chunk:(c + 1) * k_chunk],
-                    interpret=INTERPRET).astype(jnp.float32)
+                    interpret=INTERPRET, **blocks).astype(jnp.float32)
                 acc = part if acc is None else acc + part
             term = (wa * wb) * acc
             out = term if out is None else out + term
@@ -147,7 +160,11 @@ def kmeans_partials(x: jax.Array, centroids: jax.Array, w: jax.Array):
     0.0
     """
     if kernels_enabled():
-        return _km.kmeans_assign(x, centroids, w, interpret=INTERPRET)
+        blocks = _at.block_shapes(
+            "kmeans_assign", x.dtype,
+            (x.shape[0], x.shape[1], centroids.shape[0]))
+        return _km.kmeans_assign(x, centroids, w, interpret=INTERPRET,
+                                 **blocks)
     return _ref.kmeans_assign_ref(x, centroids, w)
 
 
@@ -160,9 +177,12 @@ def level_histogram(node_idx: jax.Array, xbin: jax.Array, y: jax.Array,
                     n_classes: int) -> jax.Array:
     """H[node, feature, bin, class] weighted counts for one tree level."""
     if kernels_enabled():
+        blocks = _at.block_shapes(
+            "split_hist", jnp.float32,
+            (xbin.shape[0], xbin.shape[1], n_nodes * n_bins * n_classes))
         return _sh.split_hist(node_idx, xbin, y, w, n_nodes=n_nodes,
                               n_bins=n_bins, n_classes=n_classes,
-                              interpret=INTERPRET)
+                              interpret=INTERPRET, **blocks)
     return _ref.split_hist_ref(node_idx, xbin, y, n_nodes, n_bins,
                                n_classes, w)
 

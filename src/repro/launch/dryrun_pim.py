@@ -14,6 +14,7 @@ dataset (I1), LUT sigmoid (I2) and hierarchical ICI-then-DCN merge (I5).
 
   PYTHONPATH=src python -m repro.launch.dryrun_pim [--multi-pod]
       [--merge-every K] [--chunk L] [--rows N]
+      [--overlap-merge] [--compress-bits B]
 
 Aligned with the scan step engine (PR 1/2): what lowers here is the
 grid's own cached chunk runner — ``PimGrid.make_runner`` scanning
@@ -22,6 +23,17 @@ loop routed through ``kernels.dispatch`` exactly like the mlalgos.  The
 collective schedule in the compiled HLO *is* the paper's host-merge
 (all-reduce@data groups then all-reduce@pod groups), and at cadence k
 it appears once per k local steps instead of every step.
+
+``--overlap-merge`` lowers the double-buffered pipeline instead and
+then *verifies the overlap in the compiled HLO*
+(``roofline.analysis.merge_overlap_report``): on async-collective
+backends the ``all-reduce-start``/``all-reduce-done`` pairs must
+straddle local-compute dots; on sync backends (XLA:CPU emits plain
+``all-reduce``) dots scheduled after the merge all-reduce prove the
+reduction is independent of this round's compute — the structural
+precondition the latency-hiding scheduler needs.  The run fails if the
+pipeline did not decouple the merge from the dots.  ``--compress-bits``
+adds the int8/int16 error-feedback wire on the slow hop.
 """
 
 import argparse
@@ -39,7 +51,8 @@ from repro.roofline import analysis as ra
 
 
 def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
-          features: int = 64, merge_every: int = 1, chunk: int = 8):
+          features: int = 64, merge_every: int = 1, chunk: int = 8,
+          overlap: bool = False, compress_bits: int = 0):
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = ("pod", "data") if multi_pod else ("data",)
     grid = PimGrid(n_vdpus=n_vdpus, mesh=mesh, data_axes=data_axes)
@@ -62,11 +75,6 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     def update_fn(w, merged):
         return w - 0.5 * merged["g"] / rows, {"loss": merged["loss"] / rows}
 
-    # the scan engine's own cached chunk runner — the artifact the fit
-    # hot path dispatches, scanning `chunk` merge rounds per host call
-    runner = grid.make_runner(local_fn, update_fn,
-                              merge_every=merge_every)
-
     data_spec = {
         "X": jax.ShapeDtypeStruct((n_vdpus, per, features), jnp.int8,
                                   sharding=grid.data_sharding()),
@@ -77,7 +85,52 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     }
     w_spec = jax.ShapeDtypeStruct((features,), jnp.float32,
                                   sharding=grid.replicated_sharding())
-    lowered = runner.lower(w_spec, data_spec, length=chunk)
+
+    compression = None
+    if compress_bits:
+        from repro.distributed.compression import CompressionConfig
+        compression = CompressionConfig(bits=compress_bits)
+
+    if not overlap and compression is None:
+        # the scan engine's own cached chunk runner — the artifact the
+        # fit hot path dispatches, scanning `chunk` merge rounds
+        runner = grid.make_runner(local_fn, update_fn,
+                                  merge_every=merge_every)
+        lowered = runner.lower(w_spec, data_spec, length=chunk)
+        return lowered, lowered.compile(), mesh
+
+    # pipeline modes: lower the overlapped/compressed runner on its own
+    # carry layout — (state[, pending][, ef]); see pim._fit_pipeline
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    state_wire = merge_every > 1
+    rs = grid._pipeline_runners(local_fn, update_fn,
+                                merge_every=merge_every, overlap=overlap,
+                                compression=compression,
+                                state_wire=state_wire)
+    runner = rs["runner"]
+    wire = grid.merge_wire_spec(local_fn, update_fn, w_spec, data_spec,
+                                merge_every=merge_every)
+    lanes_sharding = grid.data_sharding()
+    pending_spec = jax.tree.map(
+        lambda s: jax.ShapeDtypeStruct((n_vdpus,) + tuple(s.shape),
+                                       s.dtype, sharding=lanes_sharding),
+        wire)
+    if state_wire:
+        # delayed-delta pending: (per-lane phase-end states, start anchor)
+        pending_spec = (pending_spec, w_spec)
+    ef_spec = None
+    if compression is not None:
+        hop_sharding = NamedSharding(mesh, P(data_axes[0]))
+        ef_spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                (grid._hop_size,) + tuple(s.shape), s.dtype,
+                sharding=hop_sharding),
+            wire)
+    if overlap:
+        carry = (w_spec, pending_spec, ef_spec)
+    else:
+        carry = (w_spec, ef_spec)
+    lowered = runner.lower(carry, data_spec, length=chunk)
     return lowered, lowered.compile(), mesh
 
 
@@ -89,29 +142,57 @@ def main():
                     help="vDPU-local steps per hierarchical merge")
     ap.add_argument("--chunk", type=int, default=8,
                     help="merge rounds per scanned host dispatch")
+    ap.add_argument("--overlap-merge", action="store_true",
+                    help="lower the double-buffered merge pipeline and "
+                         "verify the collective/dot schedule overlaps")
+    ap.add_argument("--compress-bits", type=int, default=0,
+                    help="error-feedback fixed-point width on the slow "
+                         "hop (0 = exact merges)")
     args = ap.parse_args()
 
     lowered, compiled, mesh = build(args.multi_pod, rows=args.rows,
                                     merge_every=args.merge_every,
-                                    chunk=args.chunk)
+                                    chunk=args.chunk,
+                                    overlap=args.overlap_merge,
+                                    compress_bits=args.compress_bits)
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, (list, tuple)):      # one entry per program in
         cost = cost[0] if cost else {}       # newer jax versions
-    parsed = ra.analyze_hlo(compiled.as_text())
+    hlo_text = compiled.as_text()
+    parsed = ra.analyze_hlo(hlo_text)
     n_chips = 512 if args.multi_pod else 256
     terms = ra.roofline_terms(parsed, cost, n_chips=n_chips)
     tag = "pod2x16x16" if args.multi_pod else "pod16x16"
+    arch = "pim-ml(logreg,int8+lut,scan-engine"
+    if args.overlap_merge:
+        arch += ",overlap"
+    if args.compress_bits:
+        arch += f",efq{args.compress_bits}"
+    arch += ")"
     out = {
-        "arch": "pim-ml(logreg,int8+lut,scan-engine)", "mesh": tag,
+        "arch": arch, "mesh": tag,
         "rows": args.rows, "n_vdpus": 4096,
         "merge_every": args.merge_every, "scan_chunk": args.chunk,
+        "overlap_merge": args.overlap_merge,
+        "compress_bits": args.compress_bits,
         "memory_gb_per_device": round(
             (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
             / 2 ** 30, 3),
         "roofline": terms,
         "collectives": parsed.summary()["collective_by_group"],
     }
+    if args.overlap_merge:
+        report = ra.merge_overlap_report(hlo_text)
+        out["merge_overlap"] = report
+        if not report["overlapped"]:
+            # a hard failure, not an assert: this gate must hold under
+            # `python -O` too
+            raise SystemExit(
+                "overlap_merge lowered a schedule where every dot "
+                "precedes the merge all-reduce — pipeline not "
+                f"decoupled: {report}")
+        print("merge overlap verified:", json.dumps(report))
     path = os.path.join(os.path.dirname(__file__), "..", "..", "..",
                         "experiments", "dryrun", f"pim-ml_{tag}.json")
     os.makedirs(os.path.dirname(path), exist_ok=True)

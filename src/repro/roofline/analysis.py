@@ -359,6 +359,95 @@ def analyze_hlo(text: str, pod_group_threshold: int = 2) -> ParsedHLO:
     return parsed
 
 
+def merge_overlap_report(text: str) -> dict:
+    """Did the compiled module schedule the merge collectives so they can
+    run behind local compute?  (The HLO-level acceptance check for
+    ``PimGrid.fit(overlap_merge=True)`` — see ``launch.dryrun_pim``.)
+
+    Looks inside every while body (the scanned rounds) at the *scheduled
+    instruction order*, which is a valid topological order of the data
+    dependencies:
+
+    * on backends with async collectives (TPU/GPU), an
+      ``all-reduce-start`` whose matching ``all-reduce-done`` has dot
+      ops between them is literally overlapped — the dots execute while
+      the reduction is in flight;
+    * on sync-collective backends (XLA:CPU emits plain ``all-reduce``),
+      a dot scheduled *after* an all-reduce in the same body proves the
+      reduction does not depend on that dot — the structural
+      independence the double-buffered pipeline creates, and exactly
+      what a latency-hiding scheduler needs.  (A serial merge->update->
+      compute chain can never schedule a dot after the all-reduce: every
+      dot feeds the next round's reduction.)
+
+    Dots nested in fusions count at the fusion's schedule position.
+    """
+    comps, entry = parse_computations(text)
+
+    def has_dot(comp_name: str, seen=None) -> bool:
+        seen = seen or set()
+        if comp_name in seen:
+            return False
+        seen.add(comp_name)
+        comp = comps.get(comp_name)
+        if comp is None:
+            return False
+        for op in comp.ops:
+            if op.opcode == "dot":
+                return True
+            if op.opcode == "fusion":
+                callee = op.attr_comp("calls")
+                if callee and has_dot(callee, seen):
+                    return True
+        return False
+
+    bodies = []
+    for comp in comps.values():
+        for op in comp.ops:
+            if op.opcode == "while":
+                body = op.attr_comp("body")
+                if body:
+                    bodies.append(body)
+
+    report = {"while_bodies": len(bodies), "async_pairs": 0,
+              "async_pairs_straddling_dots": 0, "sync_all_reduces": 0,
+              "dots_after_sync_all_reduce": 0, "overlapped": False}
+    for body in bodies:
+        comp = comps.get(body)
+        if comp is None:
+            continue
+        events = []               # (pos, kind) kind: start/done/sync/dot
+        for pos, op in enumerate(comp.ops):
+            oc = op.opcode
+            if oc == "all-reduce-start":
+                events.append((pos, "start", op.name))
+            elif oc == "all-reduce-done":
+                events.append((pos, "done", op.operands()[:1]))
+            elif oc == "all-reduce":
+                events.append((pos, "sync", op.name))
+            elif oc == "dot" or (oc == "fusion" and
+                                 has_dot(op.attr_comp("calls") or "")):
+                events.append((pos, "dot", op.name))
+        starts = [e for e in events if e[1] == "start"]
+        dones = [e for e in events if e[1] == "done"]
+        syncs = [e for e in events if e[1] == "sync"]
+        dots = [e[0] for e in events if e[1] == "dot"]
+        report["async_pairs"] += len(starts)
+        report["sync_all_reduces"] += len(syncs)
+        for s in starts:
+            # pair each start with the first later done
+            later = [d for d in dones if d[0] > s[0]]
+            if later and any(s[0] < p < later[0][0] for p in dots):
+                report["async_pairs_straddling_dots"] += 1
+        for s in syncs:
+            report["dots_after_sync_all_reduce"] += sum(
+                1 for p in dots if p > s[0])
+    report["overlapped"] = bool(
+        report["async_pairs_straddling_dots"]
+        or report["dots_after_sync_all_reduce"])
+    return report
+
+
 def _group_spans_pods(op: Op, n_devices: int, pod_size: int = 256) -> bool:
     """A replica group crosses pods if it mixes device ids < pod_size and
     >= pod_size.  For iota-form groups [G,S]<=[..perm..] we approximate:

@@ -56,21 +56,51 @@ class TrainerConfig:
     # boundaries (steps where (step+1) % merge_every == 0); log/ckpt
     # boundaries that land mid-round are deferred to the next merge.
     merge_every: int = 1
+    # Merge compression of the driving engine (CompressionConfig or
+    # None).  Recorded in every checkpoint's extra metadata: the
+    # error-feedback buffer in a checkpoint is only meaningful under
+    # the compression it was produced with, so restore refuses a
+    # mismatch instead of silently resuming with a stale/incompatible
+    # residual.
+    merge_compression: object = None
 
 
 class Trainer:
     """Drives ``step_fn(state, batch) -> (state, metrics)`` with fault
     tolerance.  ``state`` is any pytree (params + opt state + extras);
-    ``batch_fn(step) -> batch`` must be deterministic in ``step``."""
+    ``batch_fn(step) -> batch`` must be deterministic in ``step``.
+
+    ``merge_state`` is the compressed-merge continuation holder from
+    ``PimGrid.fit`` (``{"error": <EF pytree>}``): when given, the
+    error-feedback buffer is checkpointed *next to* the model state and
+    restored into the same holder on resume — a compressed run that
+    restarts without its residual would re-pay the quantization bias it
+    had already amortised.  The checkpointed tree is then
+    ``{"model": state, "merge_error": error}``; checkpoints written
+    without a holder keep the bare-state layout (backward compatible).
+
+    Resume requires the holder's ``"error"`` to be seeded with a
+    *correctly-shaped* buffer (zeros are fine —
+    ``PimGrid.init_merge_error(grid.merge_wire_spec(...))`` builds one):
+    checkpoint restore is template-driven, so a restarting process that
+    passes an empty holder against a compressed checkpoint gets a clear
+    error saying exactly that instead of a structure-mismatch crash.
+    The reverse migration is handled: a seeded holder meeting a
+    *bare-layout* checkpoint (written before compression was enabled)
+    restores the model and keeps the seeded buffer as the fresh
+    residual.
+    """
 
     def __init__(self, step_fn: Callable, init_state: Any,
                  batch_fn: Callable[[int], Any],
                  config: TrainerConfig = TrainerConfig(),
-                 state_placer: Optional[Callable] = None):
+                 state_placer: Optional[Callable] = None,
+                 merge_state: Optional[dict] = None):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.cfg = config
         self.state = init_state
+        self.merge_state = merge_state
         self.start_step = 0
         self._ewma = None
         self._restarts = 0
@@ -81,12 +111,96 @@ class Trainer:
         if config.ckpt_dir:
             self.ckpt = CheckpointManager(
                 config.ckpt_dir, keep=config.ckpt_keep)
-            resumed = self.ckpt.restore_latest(init_state,
-                                               placer=state_placer)
+            resumed = self._restore_latest(init_state, state_placer)
             if resumed is not None:
-                step, state, _ = resumed
+                step, state, extra = resumed
+                saved_cmp = extra.get("merge_compression")
+                if saved_cmp is not None and \
+                        saved_cmp != self._compression_tag():
+                    raise ValueError(
+                        f"checkpoint written under merge compression "
+                        f"{saved_cmp!r} but trainer configured with "
+                        f"{self._compression_tag()!r} — the EF residual "
+                        f"is not transferable across compression "
+                        f"settings")
                 self.state = state
                 self.start_step = step + 1
+
+    def _compression_tag(self) -> Optional[str]:
+        cmp = self.cfg.merge_compression
+        return repr(cmp) if cmp is not None else None
+
+    def _ckpt_is_wrapped(self) -> bool:
+        """Does the latest checkpoint on disk carry the compressed-merge
+        {'model', 'merge_error'} layout?  Read from its manifest so
+        layout drift is diagnosed from facts, not guesses."""
+        import json as _json
+        import os as _os
+        step = self.ckpt.latest_step()
+        if step is None:
+            return False
+        path = _os.path.join(self.ckpt.dir, f"step_{step:010d}",
+                             "manifest.json")
+        try:
+            with open(path) as f:
+                names = _json.load(f).get("names", [])
+        except (OSError, ValueError):
+            return False
+        return any(n.startswith("['merge_error']") for n in names)
+
+    def _restore_latest(self, init_state, placer):
+        """Template-driven restore, robust to holder/checkpoint layout
+        drift.  Returns ``(step, unwrapped_state, extra)`` or None."""
+        seeded = (self.merge_state is not None
+                  and self.merge_state.get("error") is not None)
+        try:
+            resumed = self.ckpt.restore_latest(self._wrap(init_state),
+                                               placer=placer)
+            if resumed is None:
+                return None
+            step, tree, extra = resumed
+            return step, self._unwrap(tree), extra
+        except ValueError as e:
+            if seeded and not self._ckpt_is_wrapped():
+                # seeded holder meeting a bare-layout checkpoint
+                # (written before compression): restore the model,
+                # keep the seeded buffer as the fresh residual
+                resumed = self.ckpt.restore_latest(init_state,
+                                                   placer=placer)
+                if resumed is None:
+                    raise
+                return resumed
+            if not seeded and self._ckpt_is_wrapped():
+                raise ValueError(
+                    "checkpoint has the compressed-merge layout "
+                    "({'model', 'merge_error'}) but merge_state carries "
+                    "no seeded 'error' buffer — restore is template-"
+                    "driven, so pass merge_state={'error': "
+                    "grid.init_merge_error(grid.merge_wire_spec(...))} "
+                    "(zeros are fine) to resume") from e
+            raise                  # genuine structure mismatch
+
+    def _wrap(self, state):
+        """Checkpoint tree: bare state, or {model, merge_error} when a
+        compressed-merge holder rides along."""
+        if self.merge_state is not None and \
+                self.merge_state.get("error") is not None:
+            return {"model": state, "merge_error":
+                    self.merge_state["error"]}
+        return state
+
+    def _unwrap(self, tree):
+        if self.merge_state is not None and \
+                self.merge_state.get("error") is not None:
+            self.merge_state["error"] = tree["merge_error"]
+            return tree["model"]
+        return tree
+
+    def _save(self, step: int):
+        self.ckpt.save(step, self._wrap(self.state),
+                       extra={"data_step": step,
+                              "merge_compression":
+                              self._compression_tag()})
 
     # -- main loop ----------------------------------------------------------
 
@@ -131,8 +245,7 @@ class Trainer:
                     if callback and at_log:
                         callback(step, flushed[-1])
                     if at_ckpt:
-                        self.ckpt.save(step, self.state,
-                                       extra={"data_step": step})
+                        self._save(step)
                 step += 1
             except (FloatingPointError, RuntimeError) as e:  # failure path
                 pending = []
@@ -140,7 +253,10 @@ class Trainer:
                 if self.ckpt is None or self._restarts > \
                         self.cfg.max_restarts:
                     raise
-                resumed = self.ckpt.restore_latest(self.state)
+                # layout-robust restore (same path as construction):
+                # a seeded run resumed over bare pre-compression
+                # checkpoints must also *recover* through them
+                resumed = self._restore_latest(self.state, None)
                 if resumed is None:
                     raise RuntimeError(
                         f"step {step} failed ({e}) with no checkpoint"
@@ -148,7 +264,7 @@ class Trainer:
                 ck_step, self.state, _ = resumed
                 step = ck_step + 1          # replay from checkpoint
         if self.ckpt:
-            self.ckpt.save(end - 1, self.state, extra={"data_step": end - 1})
+            self._save(end - 1)
             self.ckpt.wait()
         return {"final_step": end, "restarts": self._restarts,
                 "stragglers": self.straggler_steps,

@@ -1,0 +1,173 @@
+"""Kernel block-shape autotuning (``kernels.autotune``): heuristics,
+shape bucketing, the on-disk measured cache, and dispatch integration."""
+
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import autotune as at
+from repro.kernels import dispatch
+from repro.kernels import fxp_matmul as _fxp
+from repro.kernels import kmeans_assign as _km
+from repro.kernels.ops import INTERPRET
+
+
+@pytest.fixture
+def tmp_cache(tmp_path, monkeypatch):
+    path = str(tmp_path / "autotune.json")
+    monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", path)
+    at.reset_cache_for_tests()
+    yield path
+    at.reset_cache_for_tests()
+
+
+class TestBuckets:
+    def test_shape_bucket_pow2(self):
+        assert at.shape_bucket((300, 130, 70)) == (512, 256, 128)
+        assert at.shape_bucket((1, 128)) == (1, 128)
+
+    def test_nearby_shapes_share_keys(self):
+        k1 = at.table_key("fxp_matmul", jnp.int8, (300, 130, 70), "cpu")
+        k2 = at.table_key("fxp_matmul", jnp.int8, (400, 200, 100), "cpu")
+        assert k1 == k2
+
+    def test_backend_in_key(self):
+        k_cpu = at.table_key("fxp_matmul", jnp.int8, (64, 64, 64), "cpu")
+        k_tpu = at.table_key("fxp_matmul", jnp.int8, (64, 64, 64), "tpu")
+        assert k_cpu != k_tpu
+
+
+class TestHeuristics:
+    def test_interpret_prefers_single_block(self):
+        """interpret mode runs the kernel body per grid step in Python —
+        the heuristic collapses small problems into one block."""
+        b = at.block_shapes("fxp_matmul", jnp.int8, (64, 128, 32),
+                            backend="cpu")
+        assert b == {"block_m": 64, "block_n": 32, "block_k": 128}
+        b = at.block_shapes("kmeans_assign", jnp.float32, (5000, 16, 8),
+                            backend="cpu")
+        assert b == {"block_n": 5000}
+
+    def test_interpret_chunks_oversized_k(self):
+        b = at.block_shapes("fxp_matmul", jnp.int8,
+                            (4096, 1 << 20, 4096), backend="cpu")
+        assert b["block_m"] == 4096 and b["block_n"] == 4096
+        assert b["block_k"] < 1 << 20
+
+    def test_tpu_blocks_aligned_and_capped(self):
+        b = at.block_shapes("fxp_matmul", jnp.int8, (1000, 4096, 2000),
+                            backend="tpu")
+        # minor dims multiples of 128, int8 sublane 32, legacy caps hold
+        assert b["block_n"] % 128 == 0 and b["block_k"] % 128 == 0
+        assert b["block_m"] % 32 == 0
+        assert b["block_m"] <= 256 and b["block_k"] <= 512
+
+    def test_blocks_never_exceed_shape(self):
+        for backend in ("cpu", "tpu"):
+            b = at.block_shapes("fxp_matmul", jnp.int8, (3, 5, 2),
+                                backend=backend)
+            assert b["block_m"] <= 3 and b["block_k"] <= 5 \
+                and b["block_n"] <= 2
+
+    def test_split_hist_onehot_budget(self):
+        """the kernel materializes a (bn, F, nodes*bins*classes) one-hot
+        per step — bn must shrink as that product grows."""
+        small = at.block_shapes("split_hist", jnp.float32,
+                                (1 << 16, 16, 64), backend="cpu")
+        big = at.block_shapes("split_hist", jnp.float32,
+                              (1 << 16, 16, 1 << 14), backend="cpu")
+        assert big["block_n"] < small["block_n"]
+
+
+class TestMeasuredCache:
+    def test_autotune_persists_and_wins(self, tmp_cache):
+        best = at.autotune("fxp_matmul", (64, 128, 32))
+        # on disk
+        with open(tmp_cache) as f:
+            data = json.load(f)
+        assert len(data["entries"]) == 1
+        (key, entry), = data["entries"].items()
+        assert entry["blocks"] == best
+        # a fresh in-memory cache reads the measured entry back
+        at.reset_cache_for_tests()
+        assert at.block_shapes("fxp_matmul", jnp.int16,
+                               (64, 128, 32)) == best
+
+    def test_measured_entry_clamped_to_smaller_call(self, tmp_cache):
+        at._store(at.table_key("fxp_matmul", jnp.int8, (60, 120, 30)),
+                  {"block_m": 64, "block_n": 32, "block_k": 128}, 1.0)
+        b = at.block_shapes("fxp_matmul", jnp.int8, (40, 100, 20))
+        assert b["block_m"] <= 40 and b["block_k"] <= 100 \
+            and b["block_n"] <= 20
+
+    def test_missing_cache_file_falls_back(self, tmp_cache):
+        # no file written yet -> heuristic, no crash
+        b = at.block_shapes("kmeans_assign", jnp.float32, (100, 4, 3))
+        assert b["block_n"] == 100
+
+    def test_corrupt_cache_ignored(self, tmp_cache):
+        with open(tmp_cache, "w") as f:
+            f.write("{not json")
+        at.reset_cache_for_tests()
+        b = at.block_shapes("fxp_matmul", jnp.int8, (8, 8, 8))
+        assert b["block_m"] == 8
+
+    def test_autotune_kmeans_smoke(self, tmp_cache):
+        best = at.autotune("kmeans_assign", (256, 8, 4))
+        assert 1 <= best["block_n"] <= 256
+
+    def test_fresh_process_store_merges_disk_entries(self, tmp_cache):
+        """Regression: a process whose first cache touch is autotune()
+        (in-memory cache never loaded) must merge with the on-disk
+        entries, not overwrite them."""
+        at._store("other|int8|64x64x64|cpu",
+                  {"block_m": 8, "block_n": 8, "block_k": 8}, 1.0)
+        at.reset_cache_for_tests()       # simulate a fresh process
+        at.autotune("kmeans_assign", (64, 4, 2))
+        with open(tmp_cache) as f:
+            entries = json.load(f)["entries"]
+        assert "other|int8|64x64x64|cpu" in entries
+        assert any(k.startswith("kmeans_assign|") for k in entries)
+
+
+class TestKernelsUnderTunedBlocks:
+    """Any block shape the table hands out must stay numerically exact —
+    padding/tiling is an implementation detail."""
+
+    def test_fxp_matmul_odd_shapes(self):
+        rng = np.random.default_rng(0)
+        a = jnp.asarray(rng.integers(-100, 100, (33, 57)), jnp.int8)
+        b = jnp.asarray(rng.integers(-100, 100, (57, 19)), jnp.int8)
+        want = np.asarray(a, np.int32) @ np.asarray(b, np.int32)
+        for blocks in ({"block_m": 33, "block_n": 19, "block_k": 57},
+                       {"block_m": 8, "block_n": 8, "block_k": 16},
+                       {"block_m": 16, "block_n": 4, "block_k": 57}):
+            out = _fxp.fxp_matmul(a, b, interpret=True, **blocks)
+            np.testing.assert_array_equal(np.asarray(out), want)
+
+    def test_kmeans_assign_block_sweep(self):
+        rng = np.random.default_rng(1)
+        x = jnp.asarray(rng.normal(size=(100, 5)), jnp.float32)
+        c = jnp.asarray(rng.normal(size=(4, 5)), jnp.float32)
+        w = jnp.ones((100,), jnp.float32)
+        ref = _km.kmeans_assign(x, c, w, interpret=True, block_n=100)
+        for bn in (7, 32, 64):
+            out = _km.kmeans_assign(x, c, w, interpret=True, block_n=bn)
+            for r, o in zip(ref, out):
+                np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                           rtol=1e-5, atol=1e-5)
+
+    def test_dispatch_parity_with_table(self, tmp_cache):
+        """hybrid_matmul through the (heuristic) table still matches the
+        pure-jnp reference bit-for-bit."""
+        rng = np.random.default_rng(2)
+        a = jnp.asarray(rng.integers(-30000, 30000, (47, 83)), jnp.int16)
+        b = jnp.asarray(rng.integers(-30000, 30000, (83, 11)), jnp.int16)
+        out = dispatch.hybrid_matmul(a, b)
+        with dispatch.use_kernels(False):
+            ref = dispatch.hybrid_matmul(a, b)
+        np.testing.assert_array_equal(np.asarray(out), np.asarray(ref))

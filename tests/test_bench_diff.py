@@ -1,0 +1,97 @@
+"""tools/bench_diff.py — the CI gate over BENCH_scaling.json artifacts."""
+
+import importlib.util
+import os
+
+import pytest
+
+_SPEC = importlib.util.spec_from_file_location(
+    "bench_diff", os.path.join(os.path.dirname(__file__), "..",
+                               "tools", "bench_diff.py"))
+bench_diff = importlib.util.module_from_spec(_SPEC)
+_SPEC.loader.exec_module(bench_diff)
+
+
+def _artifact(cells=None, *, smoke=True, schema="bench_scaling/v2"):
+    config = {
+        "backend": "cpu", "smoke": smoke, "rows": 2048, "features": 16,
+        "timed_steps": 16, "n_vdpus": [1, 4], "merge_every": [1, 4],
+        "precisions": ["fp32"], "pipelines": ["baseline", "overlap"],
+        "pipeline_precisions": ["fp32"],
+    }
+    if cells is None:
+        cells = [
+            {"n_vdpus": v, "precision": "fp32", "merge_every": k,
+             "pipeline": p, "steps_per_s": 100.0}
+            for v in (1, 4) for k in (1, 4)
+            for p in ("baseline", "overlap")]
+    return {"schema": schema, "config": config, "throughput": cells,
+            "accuracy_vs_cadence": [], "accuracy_vs_pipeline": []}
+
+
+class TestDiff:
+    def test_identical_passes(self):
+        art = _artifact()
+        assert bench_diff.diff(art, art) == []
+
+    def test_schema_mismatch_flagged(self):
+        fresh = _artifact()
+        committed = _artifact(schema="bench_scaling/v1")
+        findings = bench_diff.diff(fresh, committed)
+        assert any("schema mismatch" in f for f in findings)
+
+    def test_missing_cell_flagged(self):
+        fresh = _artifact()
+        dropped = fresh["throughput"][:-1]     # lose (4, fp32, 4, overlap)
+        fresh = dict(fresh, throughput=dropped)
+        findings = bench_diff.diff(fresh, _artifact())
+        assert any("missing throughput cell" in f for f in findings)
+        assert any("pipeline=overlap" in f for f in findings)
+
+    def test_missing_section_flagged(self):
+        fresh = _artifact()
+        del fresh["accuracy_vs_pipeline"]
+        findings = bench_diff.diff(fresh, _artifact())
+        assert any("missing section" in f for f in findings)
+
+    def test_regression_flagged_when_comparable(self):
+        fresh = _artifact()
+        fresh["throughput"][0] = dict(fresh["throughput"][0],
+                                      steps_per_s=10.0)   # 10x slower
+        findings = bench_diff.diff(fresh, _artifact())
+        assert any("regression" in f for f in findings)
+
+    def test_small_slowdown_tolerated(self):
+        fresh = _artifact()
+        fresh["throughput"][0] = dict(fresh["throughput"][0],
+                                      steps_per_s=60.0)   # 1.7x slower
+        assert bench_diff.diff(fresh, _artifact()) == []
+
+    def test_incomparable_configs_skip_regression(self, capsys):
+        fresh = _artifact()
+        fresh["throughput"][0] = dict(fresh["throughput"][0],
+                                      steps_per_s=1.0)
+        committed = _artifact(smoke=False)     # full-size reference
+        findings = bench_diff.diff(fresh, committed)
+        assert findings == []
+        assert "skipped" in capsys.readouterr().out
+
+    def test_baseline_only_precisions_not_required_to_sweep_pipelines(self):
+        """int16/int8 cells only exist for the baseline pipeline; the
+        completeness check must honor config.pipeline_precisions."""
+        art = _artifact()
+        art["config"]["precisions"] = ["fp32", "int8"]
+        art["throughput"] += [
+            {"n_vdpus": v, "precision": "int8", "merge_every": k,
+             "pipeline": "baseline", "steps_per_s": 5.0}
+            for v in (1, 4) for k in (1, 4)]
+        assert bench_diff.diff(art, art) == []
+
+    def test_cli_exit_codes(self, tmp_path, capsys):
+        import json
+        good = tmp_path / "good.json"
+        good.write_text(json.dumps(_artifact()))
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps(_artifact(schema="bench_scaling/v1")))
+        assert bench_diff.main([str(good), str(good)]) == 0
+        assert bench_diff.main([str(good), str(bad)]) == 1

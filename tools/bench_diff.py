@@ -1,0 +1,137 @@
+#!/usr/bin/env python3
+"""Compare a fresh BENCH_scaling.json against the committed artifact.
+
+CI runs the smoke sweep on every PR; this tool makes that artifact a
+*gate* instead of a dashboard: it fails the job when the sweep silently
+lost cells (a sweep axis stopped being exercised) or when a directly
+comparable cell regressed more than ``--max-regression`` in throughput.
+
+Checks, in order:
+
+1. **schema** — both files must carry the same ``schema`` tag
+   (``bench_scaling/v2``) and the fresh file must have every top-level
+   section the committed one has.
+2. **completeness** — the fresh file must contain one throughput cell
+   for every point of the cross-product its *own* config promises
+   (n_vdpus x precision x merge_every, with the pipeline axis applied
+   to the precisions ``config.pipeline_precisions`` names).  A missing
+   cell means a sweep loop silently skipped work.
+3. **regression** — for cells whose key (n_vdpus, precision,
+   merge_every, pipeline) exists in both files *and* whose configs are
+   comparable (same backend, rows, features, smoke flag), fresh
+   ``steps_per_s`` must be at least ``1/max_regression`` of committed.
+   Smoke sweeps against the committed full-size artifact are not
+   comparable — the regression check is then skipped with a note
+   (schema/completeness still apply), so CI always validates structure
+   and validates performance when it can.
+
+Usage::
+
+    python tools/bench_diff.py FRESH.json COMMITTED.json
+    python tools/bench_diff.py FRESH.json COMMITTED.json --max-regression 2.0
+
+Exit code 0 = pass, 1 = findings.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def _cell_key(cell: dict):
+    return (cell.get("n_vdpus"), cell.get("precision"),
+            cell.get("merge_every"), cell.get("pipeline", "baseline"))
+
+
+def expected_keys(config: dict):
+    """The cross-product of throughput cells a config promises."""
+    pipelines = config.get("pipelines", ["baseline"])
+    pipe_precisions = set(config.get("pipeline_precisions",
+                                     config.get("precisions", [])))
+    keys = set()
+    for v in config.get("n_vdpus", []):
+        for prec in config.get("precisions", []):
+            pnames = pipelines if prec in pipe_precisions else ["baseline"]
+            for k in config.get("merge_every", []):
+                for p in pnames:
+                    keys.add((v, prec, k, p))
+    return keys
+
+
+def comparable(fresh_cfg: dict, committed_cfg: dict) -> bool:
+    """Absolute throughput is only meaningful within one workload size
+    and backend (docs/BENCHMARKS.md: compare like with like)."""
+    return all(fresh_cfg.get(k) == committed_cfg.get(k)
+               for k in ("backend", "rows", "features", "smoke",
+                         "timed_steps"))
+
+
+def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
+         ) -> list:
+    """Returns a list of human-readable findings (empty = pass)."""
+    findings = []
+
+    f_schema = fresh.get("schema")
+    c_schema = committed.get("schema")
+    if f_schema != c_schema:
+        findings.append(
+            f"schema mismatch: fresh={f_schema!r} committed={c_schema!r}")
+    for section in committed:
+        if section not in fresh:
+            findings.append(f"missing section {section!r}")
+
+    f_cells = {_cell_key(c): c for c in fresh.get("throughput", [])}
+    missing = expected_keys(fresh.get("config", {})) - set(f_cells)
+    for key in sorted(missing, key=str):
+        findings.append(
+            "missing throughput cell (n_vdpus={}, precision={}, "
+            "merge_every={}, pipeline={})".format(*key))
+
+    if not comparable(fresh.get("config", {}),
+                      committed.get("config", {})):
+        print("bench_diff: configs not comparable (different workload "
+              "size/backend) — regression check skipped", flush=True)
+        return findings
+
+    c_cells = {_cell_key(c): c for c in committed.get("throughput", [])}
+    for key in sorted(set(f_cells) & set(c_cells), key=str):
+        fresh_sps = f_cells[key].get("steps_per_s", 0.0)
+        committed_sps = c_cells[key].get("steps_per_s", 0.0)
+        if committed_sps > 0 and \
+                fresh_sps * max_regression < committed_sps:
+            findings.append(
+                "throughput regression >{:.1f}x at (n_vdpus={}, "
+                "precision={}, merge_every={}, pipeline={}): "
+                "{:.1f} -> {:.1f} steps/s".format(
+                    max_regression, *key, committed_sps, fresh_sps))
+    return findings
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("fresh", help="freshly generated BENCH_scaling.json")
+    ap.add_argument("committed", help="committed reference artifact")
+    ap.add_argument("--max-regression", type=float, default=2.0,
+                    help="fail when fresh throughput is more than this "
+                         "factor below committed (default 2.0)")
+    args = ap.parse_args(argv)
+
+    with open(args.fresh) as f:
+        fresh = json.load(f)
+    with open(args.committed) as f:
+        committed = json.load(f)
+
+    findings = diff(fresh, committed, max_regression=args.max_regression)
+    if findings:
+        for item in findings:
+            print(f"bench_diff: FAIL {item}", flush=True)
+        return 1
+    n = len(fresh.get("throughput", []))
+    print(f"bench_diff: OK ({n} cells checked)", flush=True)
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

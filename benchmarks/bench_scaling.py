@@ -1,8 +1,8 @@
 """Paper Table: strong scaling (1 -> 2,524 DPUs) x merge cadence x
-precision x merge pipeline.
+precision x merge pipeline x merge plan.
 
 Reproduces the paper's strong-scaling evaluation on the vDPU grid, with
-three extra axes the follow-ups make first-class:
+four extra axes the follow-ups make first-class:
 
   * ``merge_every`` — local steps between host merges (PIM-Opt,
     arXiv 2404.07164).  The paper's observation is that the host merge
@@ -19,9 +19,18 @@ three extra axes the follow-ups make first-class:
     the cadence fit is meaningful on this backend; cadence alone
     amortises the merge, the pipeline axis is the first that *shrinks*
     it.
+  * ``plan``        — the composed ``distributed.merge_plan`` axis
+    (PR 4): ``avg`` (the default plan — identical to the base cells),
+    ``slowmo`` (SlowMo outer momentum at the merge boundary),
+    ``topk`` (top-k error-feedback sparsified wire: merge_bytes drops
+    below the dense int8 row) and ``adaptive`` (host-side cadence
+    controller; its ``merge_every`` column is the *starting* cadence —
+    the controller may grow it mid-fit).  Swept for fp32 cells at the
+    baseline pipeline over ``plan_n_vdpus``.
 
-One sweep produces the tables plus the accuracy-vs-cadence curves, in a
-single ``BENCH_scaling.json`` (schema bench_scaling/v2, documented in
+One sweep produces the tables plus the accuracy-vs-cadence /
+accuracy-vs-pipeline / accuracy-vs-plan curves, in a single
+``BENCH_scaling.json`` (schema bench_scaling/v3, documented in
 docs/BENCHMARKS.md).
 
 Merge-fraction model: the measured per-local-step time at cadence k is
@@ -64,18 +73,41 @@ from repro.core.mlalgos import make_linreg_step, train_linreg, train_logreg
 from repro.core.mlalgos.linreg import closed_form
 from repro.core.mlalgos.logreg import accuracy
 from repro.distributed import compression as comp
+from repro.distributed.merge_plan import (MergePlan, SlowMo,
+                                          AdaptiveCadence)
 
 VDPUS_FULL = (1, 4, 16, 64, 256, 1024, 2048)
 VDPUS_SMOKE = (1, 4, 16)
+# the plan axis costs one extra cadence sweep per plan, so the full
+# sweep samples it at a small and a merge-dominated grid size
+PLAN_VDPUS_FULL = (64, 1024)
 CADENCES = (1, 4, 16)
 PRECISIONS = ("fp32", "int16", "int8")
 # (name, overlap_merge, compression bits); swept for fp32 cells
 PIPELINES = (("baseline", False, 0), ("overlap", True, 0),
              ("int8", False, 8), ("overlap+int8", True, 8))
+# composed merge plans (PR 4), swept for fp32 cells at the baseline
+# pipeline; "avg" is the base cells' plan label
+PLANS = ("slowmo", "topk", "adaptive")
+TOPK_FRAC = 0.125
 
 
 def _compression(bits: int):
     return comp.CompressionConfig(bits=bits) if bits else None
+
+
+def _plan(pname: str, k: int) -> MergePlan:
+    if pname == "slowmo":
+        return MergePlan(cadence=k, outer=SlowMo(beta=0.5))
+    if pname == "topk":
+        return MergePlan(cadence=k, compression=comp.CompressionConfig(
+            bits=8, top_k_frac=TOPK_FRAC))
+    if pname == "adaptive":
+        return MergePlan(cadence=k, outer=AdaptiveCadence(k_max=32))
+    if pname in ("avg", "int8"):
+        return MergePlan(cadence=k, compression=_compression(
+            8 if pname == "int8" else 0))
+    raise ValueError(pname)
 
 
 def _fit_merge_model(cadences, us_per_step):
@@ -101,11 +133,13 @@ def _fit_merge_model(cadences, us_per_step):
 
 
 def throughput_sweep(vdpus, precisions, cadences, X, y, *,
-                     timed_steps, warmup, iters):
-    """linreg steps/s per (n_vdpus, precision, merge_every, pipeline)
-    cell, plus the per-cell merge-fraction from the cadence fit, the
-    analytic wire bytes, and — for overlap cells — the share of the
-    baseline merge the pipeline hid."""
+                     timed_steps, warmup, iters, plan_vdpus=()):
+    """linreg steps/s per (n_vdpus, precision, merge_every, pipeline,
+    plan) cell, plus the per-cell merge-fraction from the cadence fit,
+    the analytic wire bytes, and — for overlap cells — the share of the
+    baseline merge the pipeline hid.  fp32 cells at grid sizes in
+    ``plan_vdpus`` additionally sweep the composed merge plans
+    (slowmo / topk / adaptive) at the baseline pipeline."""
     cells = []
     for v in vdpus:
         grid = make_cpu_grid(v)
@@ -154,6 +188,7 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                     cell = {
                         "algo": "linreg", "n_vdpus": v, "precision": prec,
                         "merge_every": k, "pipeline": pname,
+                        "plan": "avg",
                         "us_per_step": round(us_step, 2),
                         "steps_per_s": round(1e6 / us_step, 1),
                         "merge_fraction": round(min(frac, 1.0), 4),
@@ -171,6 +206,59 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                           f"{cell['steps_per_s']:9.1f} steps/s  "
                           f"merge {100 * cell['merge_fraction']:5.1f}%"
                           f"  wire {cell['merge_bytes']:5d}B{note}",
+                          flush=True)
+            if prec != "fp32" or v not in plan_vdpus:
+                continue
+            # ---- the composed-plan axis (baseline pipeline) ----
+            for pname in PLANS:
+                per_k = {}
+                for k in cadences:
+                    us = time_fn(
+                        lambda k=k: grid.fit(
+                            init_state=w0, local_fn=local_fn,
+                            update_fn=update_fn, data=data,
+                            steps=timed_steps,
+                            merge_plan=_plan(pname, k)),
+                        warmup=warmup, iters=iters)
+                    per_k[k] = us / timed_steps
+                t_local, t_merge, r2, valid = _fit_merge_model(
+                    list(per_k), list(per_k.values()))
+                # the adaptive controller re-decides k mid-fit, so the
+                # u(k) model does not apply to its cells
+                if pname == "adaptive":
+                    valid = False
+                for k, us_step in per_k.items():
+                    # adaptive plans always run the state wire (the EF
+                    # buffer must keep one shape while k changes), so
+                    # their k=1 cells must be costed on the state tree,
+                    # not the cadence-1 partials wire
+                    wire_k = max(k, 2) if pname == "adaptive" else k
+                    wire = grid.merge_wire_spec(
+                        local_fn, update_fn, w0, data,
+                        merge_every=wire_k)
+                    frac = (t_merge / k) / us_step \
+                        if valid and us_step > 0 else 0.0
+                    cell = {
+                        "algo": "linreg", "n_vdpus": v,
+                        "precision": prec, "merge_every": k,
+                        "pipeline": "baseline", "plan": pname,
+                        "us_per_step": round(us_step, 2),
+                        "steps_per_s": round(1e6 / us_step, 1),
+                        "merge_fraction": round(min(frac, 1.0), 4),
+                        "merge_bytes": comp.wire_bytes(
+                            wire, _plan(pname, k).compression),
+                        "merge_fraction_overlapped": 0.0,
+                        "t_local_us_per_step": round(t_local, 2),
+                        "t_merge_us_per_round": round(t_merge, 2),
+                        "cadence_fit_r2": r2,
+                        "cadence_fit_valid": valid,
+                    }
+                    cells.append(cell)
+                    note = "" if valid else "  (fit invalid)"
+                    print(f"linreg v={v:5d} {prec:5s} plan:{pname:9s}"
+                          f"k={k:2d}  "
+                          f"{cell['steps_per_s']:9.1f} steps/s  "
+                          f"wire {cell['merge_bytes']:5d}B{note}",
                           flush=True)
     return cells
 
@@ -237,6 +325,41 @@ def pipeline_accuracy_sweep(v, key, *, rows, features, steps,
     return curves
 
 
+def plan_accuracy_sweep(v, key, *, rows, features, steps, merge_every):
+    """Accuracy-vs-plan at fixed grid/cadence, with the analytic wire
+    bytes per merge round beside each row: the acceptance question is
+    whether top-k lands *below the int8 row's bytes at comparable
+    accuracy* (error feedback carries the dropped mass), and whether
+    SlowMo / adaptive cadence stay within convergence tolerance."""
+    curves = []
+    Xr, yr, _ = datasets.regression(key, rows, features)
+    w_star = closed_form(Xr, yr)
+    Xc, yc, _ = datasets.binary_classification(key, rows, features)
+    grid = make_cpu_grid(v)
+    for pname in ("avg", "int8") + PLANS:
+        plan = _plan(pname, merge_every)
+        lin = train_linreg(grid, Xr, yr, lr=0.05, steps=steps,
+                           merge_plan=plan)
+        log = train_logreg(grid, Xc, yc, lr=0.5, steps=steps,
+                           merge_plan=plan)
+        data, n, lf, uf, w0 = make_linreg_step(grid, Xr, yr, lr=0.05)
+        wire = grid.merge_wire_spec(lf, uf, w0, data,
+                                    merge_every=merge_every)
+        entry = {
+            "n_vdpus": v, "merge_every": merge_every, "steps": steps,
+            "plan": pname,
+            "merge_bytes": comp.wire_bytes(wire, plan.compression),
+            "linreg_w_err": float(
+                np.linalg.norm(np.asarray(lin.w - w_star))),
+            "logreg_accuracy": accuracy(log.w, Xc, yc),
+        }
+        curves.append(entry)
+        print(f"plan-accuracy {pname:9s}  wire {entry['merge_bytes']:5d}B"
+              f"  linreg_w_err={entry['linreg_w_err']:.4f}  "
+              f"logreg_acc={entry['logreg_accuracy']:.4f}", flush=True)
+    return curves
+
+
 def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
     key = jax.random.PRNGKey(0)
     vdpus = VDPUS_SMOKE if smoke else VDPUS_FULL
@@ -245,10 +368,12 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
     timed_steps = 16                       # divisible by every cadence
     warmup, iters = (1, 2) if smoke else (1, 3)
 
+    plan_vdpus = vdpus if smoke else PLAN_VDPUS_FULL
+
     X, y, _ = datasets.regression(key, rows, features)
     cells = throughput_sweep(vdpus, PRECISIONS, CADENCES, X, y,
                              timed_steps=timed_steps, warmup=warmup,
-                             iters=iters)
+                             iters=iters, plan_vdpus=plan_vdpus)
     acc_v = 16 if smoke else 64
     acc_steps = 60 if smoke else 200
     curves = accuracy_sweep(acc_v, CADENCES, key,
@@ -257,9 +382,12 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
     pipe_curves = pipeline_accuracy_sweep(
         acc_v, key, rows=rows, features=features, steps=acc_steps,
         merge_every=4)
+    plan_curves = plan_accuracy_sweep(
+        acc_v, key, rows=rows, features=features, steps=acc_steps,
+        merge_every=4)
 
     result = {
-        "schema": "bench_scaling/v2",
+        "schema": "bench_scaling/v3",
         "config": {
             "backend": jax.default_backend(),
             "smoke": smoke,
@@ -270,17 +398,23 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
             "precisions": list(PRECISIONS),
             "pipelines": [p[0] for p in PIPELINES],
             "pipeline_precisions": ["fp32"],
+            "plans": list(PLANS),
+            "plan_n_vdpus": list(plan_vdpus),
+            "plan_precisions": ["fp32"],
+            "topk_frac": TOPK_FRAC,
             "accuracy_n_vdpus": acc_v, "accuracy_steps": acc_steps,
         },
         "throughput": cells,
         "accuracy_vs_cadence": curves,
         "accuracy_vs_pipeline": pipe_curves,
+        "accuracy_vs_plan": plan_curves,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {os.path.abspath(out)} "
           f"({len(cells)} throughput cells, {len(curves)} accuracy rows, "
-          f"{len(pipe_curves)} pipeline rows)",
+          f"{len(pipe_curves)} pipeline rows, {len(plan_curves)} plan "
+          f"rows)",
           flush=True)
     return result
 

@@ -23,6 +23,19 @@ class PimMLConfig:
     # 0 bits = exact merges; dtree ignores both (see train_dtree).
     overlap_merge: bool = False
     merge_compression_bits: int = 0
+    # top-k sparsified merges on the same error-feedback machinery:
+    # keep only this fraction of each float wire leaf per round
+    # (0.0 = dense).  Values cross at merge_compression_bits (or raw
+    # when 0 bits); indices cross exact.
+    merge_top_k_frac: float = 0.0
+    # outer optimizer at the merge boundary: "avg" (plain average,
+    # bit-exact with the pre-plan engine), "slowmo" (slow momentum,
+    # PIM-Opt / SlowMo), or "adaptive" (host-side cadence controller
+    # growing merge_every as merged deltas stabilize).
+    merge_outer: str = "avg"
+    slowmo_beta: float = 0.5
+    slowmo_outer_lr: float = 1.0
+    adaptive_k_max: int = 16
     # linear / logistic regression
     reg_rows: int = 65536
     reg_features: int = 64
@@ -38,6 +51,33 @@ class PimMLConfig:
     dt_classes: int = 4
     dt_depth: int = 6
     dt_bins: int = 32
+
+
+    def merge_plan(self):
+        """The config's merge knobs as a composed
+        ``repro.distributed.merge_plan.MergePlan`` (the canonical
+        ``fit(merge_plan=...)`` spelling)."""
+        from repro.distributed.compression import CompressionConfig
+        from repro.distributed.merge_plan import (
+            MergePlan, AverageCommit, SlowMo, AdaptiveCadence)
+
+        compression = None
+        if self.merge_compression_bits or self.merge_top_k_frac:
+            compression = CompressionConfig(
+                bits=self.merge_compression_bits or None,
+                top_k_frac=self.merge_top_k_frac or None)
+        outers = {"avg": AverageCommit(),
+                  "slowmo": SlowMo(beta=self.slowmo_beta,
+                                   outer_lr=self.slowmo_outer_lr),
+                  "adaptive": AdaptiveCadence(k_max=self.adaptive_k_max)}
+        if self.merge_outer not in outers:
+            raise ValueError(
+                f"merge_outer must be one of {sorted(outers)}, got "
+                f"{self.merge_outer!r}")
+        outer = outers[self.merge_outer]
+        return MergePlan(cadence=self.merge_every,
+                         overlap=self.overlap_merge,
+                         compression=compression, outer=outer)
 
 
 CONFIG = PimMLConfig()

@@ -112,9 +112,11 @@ def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                 max_depth: int = 5, n_bins: int = 32, n_classes: int = 2,
                 min_samples_split: int = 2,
                 merge_every: int = 1, overlap_merge: bool = False,
-                merge_compression=None) -> DTreeResult:
-    """``merge_every`` is accepted for API uniformity with the other
-    mlalgos but the tree always merges every level (= every step).
+                merge_compression=None,
+                merge_plan=None) -> DTreeResult:
+    """``merge_every`` (and the composed ``merge_plan`` spelling) is
+    accepted for API uniformity with the other mlalgos but the tree
+    always merges every level (= every step).
 
     Why the fallback: a tree level's "update" is a *discrete* argmax —
     the host picks one (feature, threshold) per node from the globally
@@ -122,8 +124,9 @@ def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
     topologies* (different split features per shard), and tree
     structures cannot be averaged the way weight vectors or centroids
     can, so there is no meaningful resync.  Cadence > 1 therefore runs
-    identically to cadence 1; the knob is validated and documented
-    rather than silently dropped.
+    identically to cadence 1; the knob is validated and **warned about**
+    (a structured :class:`~repro.distributed.merge_plan.
+    MergeFallbackWarning`, once per fit) rather than silently dropped.
 
     ``overlap_merge`` / ``merge_compression`` are likewise accepted but
     inert, for the same discreteness reason on both axes: the level's
@@ -135,8 +138,28 @@ def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
     anyway.  (``CompressionConfig`` itself validates its width at
     construction, so a typo'd config fails loudly everywhere.)
     """
+    from repro.distributed import merge_plan as mp
+
     if merge_every < 1:
         raise ValueError(f"merge_every must be >= 1, got {merge_every}")
+    plan = mp.MergePlan.resolve(
+        merge_plan, merge_every=merge_every,
+        overlap_merge=overlap_merge,
+        merge_compression=merge_compression)
+    if plan.cadence > 1 or not plan.is_exact_default:
+        knobs = []
+        if plan.cadence > 1:
+            knobs.append(f"merge_every={plan.cadence}")
+        if plan.overlap:
+            knobs.append("overlap_merge")
+        if plan.compression is not None:
+            knobs.append("merge_compression")
+        if type(plan.outer).__name__ != "AverageCommit":
+            knobs.append(f"outer={type(plan.outer).__name__}")
+        mp.warn_fallback(
+            "train_dtree", " + ".join(knobs),
+            "discrete split commits cannot be averaged across vDPUs "
+            "(the level's argmax consumes the exact merged histogram)")
     Xbin, edges = quantize_features(X, n_bins)
     n, d = Xbin.shape
     data, _ = grid.shard_rows(Xbin, jnp.asarray(y, jnp.int32))

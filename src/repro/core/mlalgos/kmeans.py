@@ -43,7 +43,8 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
                  seed: int = 0, engine: str = "scan",
                  merge_every: int = 1, overlap_merge: bool = False,
                  merge_compression=None,
-                 merge_state: dict | None = None) -> KMeansResult:
+                 merge_state: dict | None = None,
+                 merge_plan=None) -> KMeansResult:
     """``merge_every=m`` runs m vDPU-local Lloyd iterations between
     centroid merges (each vDPU updates its own centroid copy from its
     resident points; the merge averages the copies).  ``m=1`` is the
@@ -93,7 +94,8 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
                                   merge_every=merge_every,
                                   overlap_merge=overlap_merge,
                                   merge_compression=merge_compression,
-                                  merge_state=merge_state)
+                                  merge_state=merge_state,
+                                  merge_plan=merge_plan)
     return KMeansResult(centroids=centroids, history=history,
                         precision=precision)
 

@@ -107,13 +107,16 @@ def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  l2: float = 0.0, engine: str = "scan",
                  merge_every: int = 1, overlap_merge: bool = False,
                  merge_compression=None,
-                 merge_state: dict | None = None) -> LinRegResult:
+                 merge_state: dict | None = None,
+                 merge_plan=None) -> LinRegResult:
     """``merge_every=k`` runs k vDPU-local GD steps between host merges
     (PIM-Opt's minibatch-vs-full-batch axis); ``k=1`` is the paper's
     merge-per-step loop, bit-exact with the PR 1 engine.
-    ``overlap_merge``/``merge_compression`` select the double-buffered /
-    int8-error-feedback merge pipeline (see ``PimGrid.fit``); both off
-    reproduces the exact engine bit-for-bit."""
+    ``merge_plan`` is the canonical composed spelling (cadence ×
+    overlap × compression × outer optimizer — see
+    ``distributed.merge_plan``); ``overlap_merge``/``merge_compression``
+    remain as thin constructors for it.  All knobs off reproduces the
+    exact engine bit-for-bit."""
     data, n, local_fn, update_fn, w0 = make_linreg_step(
         grid, X, y, lr=lr, precision=precision, l2=l2)
     w, history = grid.fit(init_state=w0, local_fn=local_fn,
@@ -121,7 +124,8 @@ def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                           engine=engine, merge_every=merge_every,
                           overlap_merge=overlap_merge,
                           merge_compression=merge_compression,
-                          merge_state=merge_state)
+                          merge_state=merge_state,
+                          merge_plan=merge_plan)
     return LinRegResult(w=w, history=history, precision=precision)
 
 

@@ -61,11 +61,14 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  l2: float = 0.0, engine: str = "scan",
                  merge_every: int = 1, overlap_merge: bool = False,
                  merge_compression=None,
-                 merge_state: dict | None = None) -> LogRegResult:
+                 merge_state: dict | None = None,
+                 merge_plan=None) -> LogRegResult:
     """``merge_every=k`` runs k vDPU-local GD steps between host merges;
     ``k=1`` is bit-exact with the PR 1 merge-per-step engine.
-    ``overlap_merge``/``merge_compression`` select the overlapped /
-    compressed merge pipeline (``PimGrid.fit``); both off is exact."""
+    ``merge_plan`` composes the full merge configuration
+    (``distributed.merge_plan``); ``overlap_merge``/
+    ``merge_compression`` are its legacy constructors.  All off is
+    exact."""
     d = X.shape[1]
     sig = make_sigmoid(sigmoid, lut_entries)
 
@@ -117,7 +120,8 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                           engine=engine, merge_every=merge_every,
                           overlap_merge=overlap_merge,
                           merge_compression=merge_compression,
-                          merge_state=merge_state)
+                          merge_state=merge_state,
+                          merge_plan=merge_plan)
     return LogRegResult(w=w, history=history, precision=precision,
                         sigmoid=sigmoid)
 

@@ -86,61 +86,24 @@ local update steps per vDPU between merges:
 under its own ``merge_every`` key).  With ``merge_every=k`` the scanned
 unit is one merge *round*, so ``scan_chunk`` counts rounds, not steps.
 
-DESIGN — the overlapped + compressed merge pipeline
----------------------------------------------------
+DESIGN — merge plans (``merge_plan``)
+-------------------------------------
 
-Cadence amortises the merge; these two axes shrink and hide it (paper
-I5: the merge is tolerable *when overlapped with compute*; I1: fixed
-point is what the wire should carry).  Both are opt-in flags on ``fit``
-and default to off — ``overlap_merge=False, merge_compression=None`` is
-bit-exact with the cadence engine by construction (it runs the same
-code path).
-
-* ``overlap_merge=True`` — **double-buffered chunk dispatch**.  The
-  scan carry grows a second buffer: the previous round's *un-reduced*
-  partials.  Each scan iteration emits the hierarchical reduction of
-  round ``i`` (reading the pending buffer) alongside round ``i+1``'s
-  local compute (reading the state) — data-independent by construction,
-  which is the precondition for XLA's latency-hiding scheduler to run
-  the merge as async collectives behind the dots
-  (``distributed.overlap.double_buffered_body`` is the combinator;
-  ``launch.dryrun_pim --overlap-merge`` verifies the schedule in the
-  compiled HLO).  The price is one round of staleness: the merge
-  applied at round ``i`` was computed at round ``i-1``'s state.  At
-  cadence 1 a prologue computes the first partials (so the first
-  update is exact) and the final fresh partials are discarded; at
-  cadence ``k`` the merge is a *delayed-delta* outer step — pending
-  carries ``(phase-end lanes, phase-start anchor)`` and the commit is
-  ``anchor += avg(lanes) - start`` (a replacement commit would split
-  the scan into two interleaved half-rate chains; the delta commit
-  keeps one chain advancing every round).  The pipeline primes with
-  one real uncommitted phase (recomputed by round 1 — the bounded
-  startup transient) and drains by committing the last pending delta.
-  Lane sums on this path are emitted as ones-vector
-  contractions (``distributed.collectives.lane_sum``) — the reduction
-  runs on the MXU like the kernels' one-hot matmuls.  Metric merges
-  stay on the eager path (scalar-sized; keeps history aligned to
-  steps).
-* ``merge_compression=CompressionConfig(bits=8)`` — **compressed
-  merges**.  Float leaves crossing the host hop are fixed-point
-  quantized with error feedback: the quantization residual of round
-  ``i`` is added to round ``i+1``'s input, keeping compressed SGD
-  within O(1) of exact (see ``core.quantize.ef_quantize``).  The error
-  buffer is part of the scan carry — it must survive across chunks,
-  ``fit`` calls, and Trainer restarts, so ``fit`` accepts/returns it
-  via an optional ``merge_state`` holder and the Trainer checkpoints
-  it next to the model state.  Integer-dtype leaves (counts,
-  histograms) always cross exact.  On a mesh the compressed hop is the
-  slow axis (``data_axes[0]``) via ``quantized_psum_ef`` with a
-  per-participant error slice; at ``mesh=None`` the already-summed
-  tree round-trips through the same quantizer
-  (``distributed.compression.ef_compress_tree``) so CPU tests exercise
-  identical numerics.
+Everything beyond the exact default — the overlapped double-buffered
+merge, int8/top-k error-feedback wire compression, SlowMo outer
+momentum, adaptive cadence — composes as a
+``repro.distributed.merge_plan.MergePlan`` and is implemented there.
+``fit(merge_plan=...)`` is the canonical spelling; the legacy
+``merge_every= / overlap_merge= / merge_compression=`` kwargs are thin
+constructors for the equivalent plan.  A default plan (all knobs off)
+runs the engine in this file unchanged — bit-exact with the pre-plan
+releases by construction.
 """
 
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from functools import partial
 from typing import Any, Callable, Sequence
 
@@ -151,49 +114,8 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
 
-_FIT_CACHE_MAX = 64
-
-
-def _donating_backend() -> bool:
-    """Whether jit buffer donation is real here.  Single source of truth
-    for the donate_argnums decision and fit's defensive init_state copy —
-    the two must stay in lockstep or callers hit use-after-donate."""
-    return jax.default_backend() in ("gpu", "tpu")
-
-
 def _tree_sum_leading(tree):
     return jax.tree.map(lambda x: jnp.sum(x, axis=0), tree)
-
-
-def _fn_signature(fn) -> tuple:
-    """Cache key for a step function: code identity + closure contents.
-
-    ``train_*`` re-creates its closures on every call, so keying the
-    compile cache on function *identity* would never hit.  Two closures
-    with the same code object and the same captured values (primitives by
-    value, everything else by object identity) trace to the same jaxpr,
-    so they can share a compiled runner.  Callers must keep the closure
-    alive while the key is in use (the cache stores the functions next to
-    the runner) so ``id()`` keys cannot be recycled.
-    """
-    code = getattr(fn, "__code__", None)
-    if code is None:
-        return (fn,)
-
-    def value_key(v):
-        if isinstance(v, (int, float, bool, str, bytes, type(None))):
-            return v
-        return id(v)
-
-    cells = ()
-    if fn.__closure__:
-        cells = tuple(value_key(c.cell_contents) for c in fn.__closure__)
-    # default args are trace-time constants too (the `lr=lr` binding
-    # pattern) — they must distinguish keys exactly like closure cells
-    defaults = tuple(value_key(v) for v in (fn.__defaults__ or ()))
-    kwdefaults = tuple(sorted(
-        (k, value_key(v)) for k, v in (fn.__kwdefaults__ or {}).items()))
-    return (code, cells, defaults, kwdefaults)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -321,366 +243,29 @@ class PimGrid:
             check_rep=False,
         )(model, data)
 
-    # -- generic training loop -------------------------------------------
-
-    def _round(self, local_fn: Callable, update_fn: Callable, k: int,
-               state: Any, data: Any):
-        """One merge round at cadence ``k``: every vDPU runs ``k`` local
-        update steps on its own copy of ``state`` (no cross-shard
-        traffic), then the per-vDPU states and per-step metrics are
-        averaged hierarchically (vmap-lane sum -> ICI psum -> pod psum,
-        the same tree as ``map_reduce``).
-
-        Local partials are pre-scaled by ``n_vdpus`` so ``update_fn``'s
-        global normalisation sees shard statistics at dataset magnitude
-        (see the merge-cadence DESIGN note in the module docstring).
-
-        Returns ``(avg_state, metrics)`` with metric leaves of shape
-        ``(k, ...)`` — one entry per local step, averaged over vDPUs.
-        """
-        scale = float(self.n_vdpus)
-
-        def lanes(state, data):
-            def per_vdpu(sl):
-                def local_step(st, _):
-                    part = jax.tree.map(lambda x: x * scale,
-                                        local_fn(st, sl))
-                    return update_fn(st, part)
-                return jax.lax.scan(local_step, state, None, length=k)
-
-            states, metrics = jax.vmap(per_vdpu)(data)
-            return jax.tree.map(lambda x: jnp.sum(x, axis=0),
-                                (states, metrics))
-
-        if self.mesh is None:
-            states, metrics = lanes(state, data)
-        else:
-            axes = tuple(self.data_axes)
-
-            def shard_body(state, data):
-                part = lanes(state, data)
-                for ax in reversed(axes[1:]):
-                    part = jax.tree.map(
-                        lambda x, a=ax: jax.lax.psum(x, a), part)
-                return jax.tree.map(
-                    lambda x: jax.lax.psum(x, axes[0]), part)
-
-            data_specs = jax.tree.map(lambda _: P(axes), data)
-            states, metrics = shard_map(
-                shard_body, mesh=self.mesh,
-                in_specs=(P(), data_specs), out_specs=P(),
-                check_rep=False)(state, data)
-
-        inv = 1.0 / scale
-        return (jax.tree.map(lambda x: x * inv, states),
-                jax.tree.map(lambda x: x * inv, metrics))
-
-    # -- overlapped / compressed merge pipeline --------------------------
-
-    @property
-    def _hop_size(self) -> int:
-        """Participants on the compressible slow hop (= size of
-        ``data_axes[0]``; 1 without a mesh).  The error-feedback buffer
-        carries one slice per participant on its leading axis."""
-        if self.mesh is None:
-            return 1
-        return int(self.mesh.shape[self.data_axes[0]])
+    # -- merge-plan delegation ------------------------------------------
+    #
+    # The merge machinery (cadence rounds, the overlapped/compressed
+    # pipeline, outer optimizers, adaptive cadence) lives in
+    # ``repro.distributed.merge_plan`` — imported lazily because that
+    # layer sits above core (it duck-types this grid).  The thin
+    # wrappers below keep the public wire-layout API on the grid.
 
     def merge_wire_spec(self, local_fn: Callable, update_fn: Callable,
                         state: Any, data: Any, *, merge_every: int = 1):
         """ShapeDtypeStruct tree of what crosses the host hop per merge
-        round: the partial-statistics tree at cadence 1, the state tree
-        at cadence ``k > 1`` (metrics merge eagerly/exactly and are not
-        part of the compressible wire).  Used to size error-feedback
-        buffers and to compute ``merge_bytes`` analytically."""
-        if merge_every == 1:
-            sl = jax.tree.map(
-                lambda x: jax.ShapeDtypeStruct(tuple(x.shape)[1:],
-                                               x.dtype), data)
-            return jax.eval_shape(local_fn, state, sl)
-        return jax.eval_shape(lambda s: s, state)
+        round — see ``distributed.merge_plan.wire_spec``."""
+        from repro.distributed import merge_plan as mp
+        return mp.wire_spec(self, local_fn, update_fn, state, data,
+                            merge_every=merge_every)
 
     def init_merge_error(self, wire_spec: Any) -> Any:
-        """Zero error-feedback buffer for a wire tree: one slice per
-        slow-hop participant on the leading axis, float leaves only
-        accumulate error (integer leaves keep a congruent zero
-        placeholder).  Sharded over the slow axis when a mesh is
-        present."""
-        hop = self._hop_size
+        """Zero error-feedback buffer for a wire tree — see
+        ``distributed.merge_plan.init_merge_error``."""
+        from repro.distributed import merge_plan as mp
+        return mp.init_merge_error(self, wire_spec)
 
-        def z(x):
-            return jnp.zeros((hop,) + tuple(x.shape), x.dtype)
-
-        ef = jax.tree.map(z, wire_spec)
-        if self.mesh is not None:
-            spec = NamedSharding(self.mesh, P(self.data_axes[0]))
-            ef = jax.tree.map(lambda x: jax.device_put(x, spec), ef)
-        return ef
-
-    def _ef_spec(self):
-        """shard_map PartitionSpec for an error-feedback leaf (leading
-        hop axis over the slow mesh axis)."""
-        return P(self.data_axes[0])
-
-    def _merge_pending(self, pending: Any, ef: Any, compression,
-                       scale: float | None):
-        """Hierarchically reduce a per-lane tree: MXU-shaped lane sum ->
-        fast-axis psums -> (optionally compressed, error-fed) slow hop.
-
-        Must run where the grid's axis names are bound — inside
-        shard_map when a mesh is present, plainly at ``mesh=None``
-        (where the slow hop is emulated by an EF quantize round-trip).
-        ``ef`` is the hop-participant-leading error tree (local slice
-        shape ``(1, ...)`` inside shard_map); returns (merged, ef').
-        """
-        from repro.distributed import collectives as coll
-        from repro.distributed import compression as comp
-
-        part = coll.lane_sum(pending, scale=scale)
-        if self.mesh is None:
-            if compression is None:
-                return part, ef
-            sq = jax.tree.map(lambda e: e[0], ef)
-            merged, new = comp.ef_compress_tree(part, sq, compression)
-            return merged, jax.tree.map(lambda e: e[None], new)
-
-        axes = tuple(self.data_axes)
-        for ax in reversed(axes[1:]):
-            part = jax.tree.map(lambda x, a=ax: jax.lax.psum(x, a), part)
-        slow = axes[0]
-        if compression is None:
-            return (jax.tree.map(lambda x: jax.lax.psum(x, slow), part),
-                    ef)
-        flat, td = jax.tree.flatten(part)
-        flat_e = td.flatten_up_to(ef)
-        outs, new_e = [], []
-        for x, e in zip(flat, flat_e):
-            # comp._compressible is the single wire-policy predicate —
-            # integer statistics always cross the slow hop exact
-            if not comp._compressible(x):
-                outs.append(jax.lax.psum(x, slow))
-                new_e.append(e)
-            elif compression.error_feedback:
-                o, ne = coll.quantized_psum_ef(x, e[0], slow,
-                                               bits=compression.bits)
-                outs.append(o)
-                new_e.append(ne[None])
-            else:
-                outs.append(coll.quantized_psum(x, slow,
-                                                bits=compression.bits))
-                new_e.append(e)
-        return td.unflatten(outs), td.unflatten(new_e)
-
-    def _pipeline_fns(self, local_fn: Callable, update_fn: Callable, *,
-                      merge_every: int, compression, state_wire: bool):
-        """The mode-specific pieces the overlap/compression runners are
-        assembled from: ``(merge_fn, compute_fn, commit_fn, prologue)``.
-
-        * cadence 1 (``state_wire=False``): the wire carries the partial
-          statistics; ``compute_fn`` is the vmapped ``local_fn``,
-          ``commit_fn`` is ``update_fn`` (metrics derive from the merged
-          partials).
-        * cadence k / state wire: the wire carries the per-vDPU end
-          states of a k-step local phase; metrics are lane-averaged on
-          the eager exact path inside ``compute_fn`` and the commit is
-          the identity hand-over of the averaged state.
-        """
-        axes = tuple(self.data_axes) if self.mesh is not None else None
-
-        def data_specs(data_like):
-            return jax.tree.map(lambda _: P(axes), data_like)
-
-        if not state_wire:
-            # ---- cadence-1 / partials wire ----
-            def compute_local(state, data):
-                return jax.vmap(lambda d: local_fn(state, d))(data)
-
-            def compute_fn(state, data):
-                if self.mesh is None:
-                    return compute_local(state, data), None
-                fresh = shard_map(
-                    compute_local, mesh=self.mesh,
-                    in_specs=(P(), data_specs(data)),
-                    out_specs=P(axes), check_rep=False)(state, data)
-                return fresh, None
-
-            def merge_fn(pending, ef):
-                if self.mesh is None:
-                    return self._merge_pending(pending, ef, compression,
-                                               None)
-                espec = jax.tree.map(lambda _: self._ef_spec(), ef)
-                return shard_map(
-                    lambda p, e: self._merge_pending(p, e, compression,
-                                                     None),
-                    mesh=self.mesh,
-                    in_specs=(jax.tree.map(lambda _: P(axes), pending),
-                              espec),
-                    out_specs=(jax.tree.map(lambda _: P(), pending),
-                               espec),
-                    check_rep=False)(pending, ef)
-
-            commit_fn = update_fn
-            prologue = compute_fn
-            return merge_fn, compute_fn, commit_fn, prologue
-
-        # ---- cadence-k / state wire ----
-        #
-        # The pipelined cadence round is a *delayed-delta* outer step:
-        # pending carries ``(per-lane phase-end states, the anchor the
-        # phase started from)``, the merge averages the end states, and
-        # the commit applies the averaged *delta* to the live anchor —
-        # ``anchor += avg(lanes) - start``.  A replacement commit
-        # (``anchor = avg``) would decouple the scan into two
-        # interleaved half-rate chains (the compute reads the
-        # pre-commit anchor, so anchors would repeat and every phase
-        # would run and merge twice); the delta commit keeps one chain
-        # that advances every round, one round stale.
-        scale = float(self.n_vdpus)
-        inv = 1.0 / scale
-
-        def phase_local(state, data):
-            """k local steps per lane from the shared state; returns
-            (per-lane end states, lane-averaged per-step metrics)."""
-            def per_vdpu(sl):
-                def local_step(st, _):
-                    part = jax.tree.map(lambda x: x * scale,
-                                        local_fn(st, sl))
-                    return update_fn(st, part)
-                return jax.lax.scan(local_step, state, None,
-                                    length=merge_every)
-
-            states, metrics = jax.vmap(per_vdpu)(data)
-            metrics, _ = self._merge_pending(metrics, None, None, inv)
-            return states, metrics
-
-        def compute_fn(state, data):
-            if self.mesh is None:
-                lanes, metrics = phase_local(state, data)
-            else:
-                lanes, metrics = shard_map(
-                    phase_local, mesh=self.mesh,
-                    in_specs=(P(), data_specs(data)),
-                    out_specs=(P(axes), P()), check_rep=False)(state,
-                                                               data)
-            return (lanes, state), metrics
-
-        def merge_fn(pending, ef):
-            lanes, start = pending
-            if self.mesh is None:
-                avg, ef = self._merge_pending(lanes, ef, compression,
-                                              inv)
-            else:
-                espec = jax.tree.map(lambda _: self._ef_spec(), ef)
-                avg, ef = shard_map(
-                    lambda p, e: self._merge_pending(p, e, compression,
-                                                     inv),
-                    mesh=self.mesh,
-                    in_specs=(jax.tree.map(lambda _: P(axes), lanes),
-                              espec),
-                    out_specs=(jax.tree.map(lambda _: P(), lanes),
-                               espec),
-                    check_rep=False)(lanes, ef)
-            return (avg, start), ef
-
-        def commit_fn(state, merged):
-            avg, start = merged
-            new = jax.tree.map(lambda s, a, st: s + (a - st),
-                               state, avg, start)
-            return new, None
-
-        def prologue(state, data):
-            """Pipeline fill: one real (uncommitted) phase primes the
-            pending buffer.  Its lanes are recomputed by round 1's
-            ``compute_fn`` (the one-time startup transient: the first
-            phase runs twice and its delta commits twice — bounded,
-            and the anchor then advances every round)."""
-            return compute_fn(state, data)
-
-        return merge_fn, compute_fn, commit_fn, prologue
-
-    def _pipeline_runners(self, local_fn: Callable, update_fn: Callable,
-                          *, merge_every: int, overlap: bool,
-                          compression, state_wire: bool) -> dict:
-        """Build (and cache) the jitted pieces for one overlap ×
-        compression mode: ``runner`` (scanned chunk), ``round`` (one
-        dispatch, the python-engine oracle), ``prologue`` and ``drain``
-        where the mode needs them.  Cached next to the default runners
-        under a key extended with the pipeline flags."""
-        from repro.kernels import dispatch as _dispatch
-        from repro.distributed.overlap import double_buffered_body
-
-        key = (_fn_signature(local_fn), _fn_signature(update_fn),
-               _dispatch.kernels_enabled(), merge_every, overlap,
-               compression, state_wire)
-        entry = self._fit_cache.get(key)
-        if entry is not None:
-            self._fit_cache[key] = self._fit_cache.pop(key)
-            return entry[0]
-
-        merge_fn, compute_fn, commit_fn, prologue = self._pipeline_fns(
-            local_fn, update_fn, merge_every=merge_every,
-            compression=compression, state_wire=state_wire)
-        donate = (0,) if _donating_backend() else ()
-
-        if overlap:
-            def body_of(data):
-                return double_buffered_body(
-                    lambda p, e: merge_fn(p, e),
-                    lambda st: compute_fn(st, data),
-                    commit_fn)
-
-            @partial(jax.jit, static_argnames=("length",),
-                     donate_argnums=donate)
-            def runner(carry, data, *, length: int):
-                return jax.lax.scan(body_of(data), carry, None,
-                                    length=length)
-
-            @jax.jit
-            def round_fn(carry, data):
-                return body_of(data)(carry, None)
-
-            @jax.jit
-            def prologue_fn(state, data):
-                return prologue(state, data)[0]
-
-            @jax.jit
-            def drain_fn(carry):
-                state, pending, ef = carry
-                merged, ef = merge_fn(pending, ef)
-                new_state, _ = commit_fn(state, merged)
-                return new_state, ef
-
-            runners = {"runner": runner, "round": round_fn,
-                       "prologue": prologue_fn, "drain": drain_fn}
-        else:
-            def body_of(data):
-                def body(carry, _):
-                    state, ef = carry
-                    fresh, compute_metrics = compute_fn(state, data)
-                    merged, ef = merge_fn(fresh, ef)
-                    new_state, commit_metrics = commit_fn(state, merged)
-                    metrics = (compute_metrics
-                               if compute_metrics is not None
-                               else commit_metrics)
-                    return (new_state, ef), metrics
-                return body
-
-            @partial(jax.jit, static_argnames=("length",),
-                     donate_argnums=donate)
-            def runner(carry, data, *, length: int):
-                return jax.lax.scan(body_of(data), carry, None,
-                                    length=length)
-
-            @jax.jit
-            def round_fn(carry, data):
-                return body_of(data)(carry, None)
-
-            runners = {"runner": runner, "round": round_fn}
-
-        while len(self._fit_cache) >= _FIT_CACHE_MAX:
-            self._fit_cache.pop(next(iter(self._fit_cache)))
-        self._fit_cache[key] = (runners, local_fn, update_fn)
-        return runners
+    # -- generic training loop -------------------------------------------
 
     def make_runner(self, local_fn: Callable, update_fn: Callable, *,
                     merge_every: int = 1):
@@ -708,10 +293,10 @@ class PimGrid:
             fit,
           * ``merge_every`` — each cadence compiles its own round body.
 
-        The cache is a bounded LRU (``_FIT_CACHE_MAX`` entries): paths
-        whose closures capture fresh arrays per call (the quantized
-        mlalgos) never repeat a key and would otherwise pin compiled
-        executables forever.
+        The cache is a bounded LRU (``merge_plan._FIT_CACHE_MAX``
+        entries): paths whose closures capture fresh arrays per call
+        (the quantized mlalgos) never repeat a key and would otherwise
+        pin compiled executables forever.
 
         Example — repeated requests reuse the runner, a different
         cadence gets its own:
@@ -732,26 +317,24 @@ class PimGrid:
         """
         # The kernel-dispatch flag is read at trace time, so it is part of
         # the signature: a runner traced with kernels on must not serve a
-        # use_kernels(False) fit.  Imported lazily — dispatch sits above
-        # core in the layering (it imports repro.core.*).
+        # use_kernels(False) fit.  Imported lazily — dispatch and
+        # merge_plan sit above core in the layering.
         from repro.kernels import dispatch as _dispatch
+        from repro.distributed import merge_plan as mp
 
         if merge_every < 1:
             raise ValueError(
                 f"merge_every must be >= 1, got {merge_every}")
 
-        key = (_fn_signature(local_fn), _fn_signature(update_fn),
+        key = (mp.fn_signature(local_fn), mp.fn_signature(update_fn),
                _dispatch.kernels_enabled(), merge_every)
-        entry = self._fit_cache.get(key)
-        if entry is not None:
-            # LRU touch: never-repeating keys (quantized paths) must not
-            # push the long-lived hot runners out of the FIFO window
-            self._fit_cache[key] = self._fit_cache.pop(key)
-            return entry[0]
+        cached = mp.cache_get(self, key)
+        if cached is not None:
+            return cached
 
         # Donation is a no-op (with a warning) on CPU — only request
         # it where the runtime can actually alias the carry.
-        donate = (0,) if _donating_backend() else ()
+        donate = (0,) if mp.donating_backend() else ()
 
         @partial(jax.jit, static_argnames=("length",),
                  donate_argnums=donate)
@@ -764,23 +347,20 @@ class PimGrid:
                     return update_fn(state, merged)
             else:
                 def body(state, _):
-                    return self._round(local_fn, update_fn, merge_every,
-                                       state, data)
+                    return mp.cadence_round(self, local_fn, update_fn,
+                                            merge_every, state, data)
 
             return jax.lax.scan(body, state, None, length=length)
 
-        # the functions ride along so the id()-based cells in the key
-        # stay alive (no id recycling while the entry exists); bounded
-        # FIFO — quantized paths capture fresh scale arrays per call, so
-        # their keys never repeat and would otherwise accumulate runners
-        # (and their compiled executables) forever
-        while len(self._fit_cache) >= _FIT_CACHE_MAX:
-            self._fit_cache.pop(next(iter(self._fit_cache)))
-        self._fit_cache[key] = (runner, local_fn, update_fn)
+        mp.cache_put(self, key, runner, local_fn, update_fn)
         return runner
 
     def compiled_step(self, local_fn: Callable, update_fn: Callable):
-        """Pre-cadence alias for ``make_runner(..., merge_every=1)``."""
+        """Deprecated pre-cadence alias — use :meth:`make_runner`."""
+        warnings.warn(
+            "PimGrid.compiled_step is deprecated; use "
+            "PimGrid.make_runner(local_fn, update_fn) instead",
+            DeprecationWarning, stacklevel=2)
         return self.make_runner(local_fn, update_fn)
 
     def fit(self, *, init_state: Any, local_fn: Callable,
@@ -788,7 +368,8 @@ class PimGrid:
             callback: Callable | None = None,
             scan_chunk: int = 32, engine: str = "scan",
             merge_every: int = 1, overlap_merge: bool = False,
-            merge_compression=None, merge_state: dict | None = None):
+            merge_compression=None, merge_state: dict | None = None,
+            merge_plan=None):
         """Run the paper's iterative loop: local partials -> merge -> update.
 
         ``update_fn(state, merged) -> (state, metrics)`` runs "on the host"
@@ -800,6 +381,17 @@ class PimGrid:
         ``engine="python"`` is the seed's one-dispatch-per-step loop,
         kept as the parity oracle and benchmark baseline.
 
+        ``merge_plan`` is the canonical way to configure the merge: a
+        ``repro.distributed.merge_plan.MergePlan`` composing cadence ×
+        overlap × compression × outer optimizer (SlowMo, adaptive
+        cadence).  The legacy kwargs are thin constructors for it:
+        ``merge_every=k`` ≡ ``MergePlan(cadence=k)``,
+        ``overlap_merge=True`` ≡ ``MergePlan(overlap=True)``,
+        ``merge_compression=cfg`` ≡ ``MergePlan(compression=cfg)`` —
+        pass one spelling or the other, not both.  ``merge_plan=None``
+        with the legacy kwargs at their defaults runs the exact engine
+        in this file (bit-exact with the pre-plan releases).
+
         ``merge_every=k`` runs ``k`` vDPU-local update steps between
         hierarchical state merges (DESIGN — merge cadence).  ``k=1``
         (default) is the PR 1 merge-per-step engine, bit-exact.  At
@@ -807,21 +399,14 @@ class PimGrid:
         counts rounds; state pytrees must be float (the merge averages
         them).
 
-        ``overlap_merge=True`` double-buffers the merge: the reduction
-        of round *i* is emitted alongside round *i+1*'s local compute at
-        the cost of one round of staleness (DESIGN — the overlapped +
-        compressed merge pipeline).  ``merge_compression=
-        CompressionConfig(bits=8)`` quantizes the float leaves crossing
-        the host hop with error feedback; the error buffer rides in the
-        scan carry and — when a ``merge_state`` dict is passed — is read
-        from ``merge_state["error"]`` at entry and written back at exit
-        so it can continue across ``fit`` calls and Trainer restarts.
-        Both default off; ``overlap_merge=False, merge_compression=None``
-        takes the unmodified cadence-engine code path (bit-exact with
-        PR 2 by construction).  With compression at cadence ``k > 1``
-        a ``steps % k`` remainder runs as one short *state-wire* round
-        (states averaged, even for a remainder of one step) so the
-        error buffer stays congruent with the cadence rounds.
+        Non-default plans (overlap, compression, SlowMo outer momentum,
+        adaptive cadence) are driven by
+        ``distributed.merge_plan.run_fit`` — see that module's DESIGN
+        notes for the pipeline, carry layouts and the error-feedback /
+        momentum buffers.  When a ``merge_state`` dict is passed, those
+        buffers are read from it at entry (``"error"``, ``"momentum"``)
+        and written back at exit so they continue across ``fit`` calls
+        and Trainer restarts.
 
         Example — GD toward the global mean; cadence 4 pays 1/4 the
         merges and still converges (local means average to the global
@@ -851,6 +436,8 @@ class PimGrid:
         >>> bool(jnp.abs(w4[0] - 3.5) < 0.2)
         True
         """
+        from repro.distributed import merge_plan as mp
+
         if engine not in ("python", "scan"):
             raise ValueError(f"unknown engine {engine!r}")
         if scan_chunk < 1:
@@ -859,13 +446,19 @@ class PimGrid:
             raise ValueError(
                 f"merge_every must be >= 1, got {merge_every}")
 
-        if overlap_merge or merge_compression is not None:
-            return self._fit_pipeline(
-                init_state=init_state, local_fn=local_fn,
+        plan = mp.MergePlan.resolve(
+            merge_plan, merge_every=merge_every,
+            overlap_merge=overlap_merge,
+            merge_compression=merge_compression)
+
+        if not plan.is_exact_default:
+            return mp.run_fit(
+                self, plan, init_state=init_state, local_fn=local_fn,
                 update_fn=update_fn, data=data, steps=steps,
                 callback=callback, scan_chunk=scan_chunk, engine=engine,
-                merge_every=merge_every, overlap=bool(overlap_merge),
-                compression=merge_compression, merge_state=merge_state)
+                merge_state=merge_state)
+
+        merge_every = plan.cadence
 
         if engine == "python":
             if merge_every == 1:
@@ -902,8 +495,9 @@ class PimGrid:
                             return update_fn(st, merged)
                         fn = jax.jit(fn)
                     else:
-                        fn = jax.jit(lambda st, d, _k=k: self._round(
-                            local_fn, update_fn, _k, st, d))
+                        fn = jax.jit(
+                            lambda st, d, _k=k: mp.cadence_round(
+                                self, local_fn, update_fn, _k, st, d))
                     round_fns[k] = fn
                 state, stacked = fn(state, data)
                 for j in range(k):
@@ -917,7 +511,7 @@ class PimGrid:
 
         history = []
         state = init_state
-        if steps > 0 and _donating_backend():
+        if steps > 0 and mp.donating_backend():
             # the runner donates its carry argument — copy so the
             # caller's init_state buffers survive the first chunk
             state = jax.tree.map(
@@ -970,130 +564,6 @@ class PimGrid:
                 history.append(metrics)
                 if callback is not None:
                     callback(rounds * merge_every + j, state, metrics)
-        return state, history
-
-    def _fit_pipeline(self, *, init_state, local_fn, update_fn, data,
-                      steps, callback, scan_chunk, engine, merge_every,
-                      overlap, compression, merge_state):
-        """fit() driver for the overlapped / compressed merge modes.
-
-        Carry layouts (see DESIGN — overlapped + compressed pipeline):
-          * non-overlap: ``(state, ef)``,
-          * overlap:     ``(state, pending, ef)`` — ``pending`` is the
-            previous round's un-reduced per-lane partials (cadence 1)
-            or ``(per-lane phase-end states, phase-start anchor)``
-            (cadence k; the start rides along so the commit can apply
-            the averaged *delta* to the live anchor).
-        ``ef`` is ``None`` without compression (an empty pytree, so the
-        carry structure is uniform).  Both engines drive the same jitted
-        pieces: ``engine="scan"`` scans chunks of rounds,
-        ``engine="python"`` dispatches the identical round body once per
-        round (the parity oracle for the pipeline paths).
-        """
-        def copy_tree(t):
-            return jax.tree.map(
-                lambda x: x.copy() if isinstance(x, jax.Array) else x, t)
-
-        state = init_state
-        history: list = []
-        if steps > 0 and _donating_backend():
-            state = copy_tree(state)
-
-        ef = None
-        if compression is not None:
-            ef = merge_state.get("error") if merge_state else None
-            if ef is None:
-                wire = self.merge_wire_spec(
-                    local_fn, update_fn, state, data,
-                    merge_every=merge_every)
-                ef = self.init_merge_error(wire)
-            elif steps > 0 and _donating_backend():
-                ef = copy_tree(ef)
-
-        done = 0
-
-        def emit(metrics, live_state):
-            nonlocal done
-            history.append(metrics)
-            if callback is not None:
-                callback(done, live_state, metrics)
-            done += 1
-
-        if merge_every == 1:
-            rs = self._pipeline_runners(
-                local_fn, update_fn, merge_every=1, overlap=overlap,
-                compression=compression, state_wire=False)
-            if overlap:
-                carry = (state, rs["prologue"](state, data), ef) \
-                    if steps > 0 else (state, None, ef)
-            else:
-                carry = (state, ef)
-            if engine == "python":
-                for _ in range(steps):
-                    carry, metrics = rs["round"](carry, data)
-                    emit(metrics, carry[0])
-            else:
-                remaining = steps
-                while remaining > 0:
-                    length = min(scan_chunk, remaining)
-                    carry, stacked = rs["runner"](carry, data,
-                                                  length=length)
-                    for i in range(length):
-                        emit(jax.tree.map(lambda x, i=i: x[i], stacked),
-                             carry[0])
-                    remaining -= length
-            state = carry[0]
-            ef = carry[-1]
-        else:
-            rounds, rem = divmod(steps, merge_every)
-            if rounds:
-                rs = self._pipeline_runners(
-                    local_fn, update_fn, merge_every=merge_every,
-                    overlap=overlap, compression=compression,
-                    state_wire=True)
-                if overlap:
-                    carry = (state, rs["prologue"](state, data), ef)
-                else:
-                    carry = (state, ef)
-                if engine == "python":
-                    for _ in range(rounds):
-                        carry, stacked = rs["round"](carry, data)
-                        for j in range(merge_every):
-                            emit(jax.tree.map(
-                                lambda x, j=j: x[j], stacked), carry[0])
-                else:
-                    done_rounds = 0
-                    while done_rounds < rounds:
-                        length = min(scan_chunk, rounds - done_rounds)
-                        carry, stacked = rs["runner"](carry, data,
-                                                      length=length)
-                        for r in range(length):
-                            for j in range(merge_every):
-                                emit(jax.tree.map(
-                                    lambda x, r=r, j=j: x[r, j],
-                                    stacked), carry[0])
-                        done_rounds += length
-                if overlap:
-                    # drain: the last phase's states are still pending —
-                    # commit their delta so no round's work is dropped
-                    state, ef = rs["drain"](carry)
-                else:
-                    state, ef = carry
-            if rem:
-                # trailing short round, never overlapped (the pipeline is
-                # already drained) and on the state wire whatever ``rem``
-                # is, so the EF tree stays congruent with the full rounds
-                rs_rem = self._pipeline_runners(
-                    local_fn, update_fn, merge_every=rem, overlap=False,
-                    compression=compression, state_wire=True)
-                (state, ef), stacked = rs_rem["runner"](
-                    (state, ef), data, length=1)
-                for j in range(rem):
-                    emit(jax.tree.map(lambda x, j=j: x[0, j], stacked),
-                         state)
-
-        if merge_state is not None and compression is not None:
-            merge_state["error"] = ef
         return state, history
 
 

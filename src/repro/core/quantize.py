@@ -296,3 +296,23 @@ def ef_quantize(grad: jax.Array, error: jax.Array, bits: int = 8
 def quantize_dequantize(x: jax.Array, bits: int = 8) -> jax.Array:
     """Round-trip helper (used in tests/benchmarks for accuracy tables)."""
     return quantize_symmetric(x, bits=bits).dequantize(x.dtype)
+
+
+def topk_keep(x: jax.Array, frac: float) -> jax.Array:
+    """Zero all but the ``max(1, floor(size*frac))`` largest-|.| entries.
+
+    This is THE top-k selection both compression layers share —
+    ``distributed.compression.topk_sparsify`` (the mesh=None wire
+    emulation) and ``distributed.collectives.sparse_psum_ef`` (the mesh
+    collective) must keep identical numerics or the CPU tests stop
+    covering the mesh path.  Selection is by index (``lax.top_k``), not
+    by threshold comparison: a threshold mask keeps every tied entry,
+    so e.g. an all-zero input would keep the whole leaf and the
+    modeled ``wire_bytes`` (exactly k values + indices) would silently
+    under-count the traffic.  Exactly k entries survive, always.
+    """
+    flat = x.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    _, idx = jax.lax.top_k(jnp.abs(flat), k)
+    mask = jnp.zeros(flat.shape, x.dtype).at[idx].set(1)
+    return (flat * mask).reshape(x.shape)

@@ -1,6 +1,12 @@
 """Distribution substrate: mesh axes, logical sharding rules, hierarchical
-and quantized collectives, compute/comm overlap."""
+and quantized collectives, compute/comm overlap, and the composable
+merge-plan subsystem (cadence × overlap × compression × outer
+optimizer) driving ``PimGrid.fit``."""
 
 from repro.distributed.sharding import (  # noqa: F401
     LogicalRules, shard_hint, use_rules, current_rules, logical_to_spec,
+)
+from repro.distributed.merge_plan import (  # noqa: F401
+    MergePlan, OuterOptimizer, AverageCommit, SlowMo, AdaptiveCadence,
+    MergeFallbackWarning,
 )

@@ -94,6 +94,41 @@ def quantized_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
     return (total.astype(jnp.float32) * scale).astype(x.dtype), new_error
 
 
+def sparse_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
+                   frac: float, bits: Optional[int] = 8,
+                   error_feedback: bool = True
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Top-k sparsified (optionally fixed-point) all-reduce with error
+    feedback — the communication-sparsification axis of PIM-Opt on the
+    slow hop.
+
+    Each participant keeps the largest-|.| ``frac`` of its (error-fed)
+    entries as a dense carrier (static shapes; on the wire this is the
+    kept values plus exact indices — see ``compression.wire_bytes``),
+    optionally quantizes the kept values at ``bits`` (``None`` = raw
+    float), and psums the carriers.  The dropped mass and any
+    quantization residual become this participant's next-round error.
+    Selection is ``core.quantize.topk_keep`` — exactly k survivors, the
+    same definition the ``mesh=None`` emulation uses, so CPU tests keep
+    covering this path's numerics.
+    """
+    target = x + error if error_feedback else x
+    kept = qz.topk_keep(target, frac)
+    if bits is None:
+        local_wire = kept
+        total = jax.lax.psum(kept, axis)
+    else:
+        qmax = 2 ** (bits - 1) - 1
+        amax = jax.lax.pmax(jnp.max(jnp.abs(kept)), axis)
+        scale = jnp.maximum(amax, 1e-12) / qmax
+        q = jnp.clip(jnp.round(kept / scale), -qmax - 1, qmax)
+        local_wire = (q * scale).astype(x.dtype)
+        total = (jax.lax.psum(q.astype(jnp.int32), axis)
+                 .astype(jnp.float32) * scale).astype(x.dtype)
+    new_error = (target - local_wire) if error_feedback else error
+    return total, new_error
+
+
 def hierarchical_grad_reduce(grads, *, fast_axes: Sequence[str],
                              slow_axis: Optional[str],
                              compress_bits: int = 0):

@@ -30,8 +30,17 @@ from repro.distributed import collectives as coll
 
 @dataclasses.dataclass(frozen=True)
 class CompressionConfig:
-    bits: int = 8                  # fixed-point width on the wire
+    # fixed-point width of float values on the wire; None = values cross
+    # at native float width (only legal with top_k_frac — there must be
+    # *something* to compress)
+    bits: Optional[int] = 8
     error_feedback: bool = True
+    # keep only the largest-|.| fraction of each float leaf per merge
+    # round (top-k sparsification on the same EF machinery: dropped
+    # entries become next round's residual).  On the wire the kept
+    # entries cost their value (at ``bits`` or native width) plus a
+    # 4-byte exact index each; None = dense.
+    top_k_frac: Optional[float] = None
     slow_axis: Optional[str] = "pod"
     fast_axes: Tuple[str, ...] = ("data",)
 
@@ -39,10 +48,21 @@ class CompressionConfig:
         # bits=1 has qmax = 2**0 - 1 = 0: the quantizer would divide by
         # zero and silently NaN the state.  2..16 are the widths the
         # paper's fixed-point scheme supports (int32 psum accumulation).
-        if not 2 <= self.bits <= 16:
+        if self.bits is None:
+            if self.top_k_frac is None:
+                raise ValueError(
+                    "CompressionConfig.bits=None (raw float values) is "
+                    "only meaningful with top_k_frac — otherwise nothing "
+                    "is compressed")
+        elif not 2 <= self.bits <= 16:
             raise ValueError(
-                f"CompressionConfig.bits must be in [2, 16], got "
-                f"{self.bits}")
+                f"CompressionConfig.bits must be in [2, 16] (or None "
+                f"with top_k_frac), got {self.bits}")
+        if self.top_k_frac is not None and \
+                not 0.0 < self.top_k_frac <= 1.0:
+            raise ValueError(
+                f"CompressionConfig.top_k_frac must be in (0, 1], got "
+                f"{self.top_k_frac}")
 
 
 def _compressible(leaf) -> bool:
@@ -85,6 +105,13 @@ def compressed_reduce(grads: Any, error: Any, cfg: CompressionConfig
         if not _compressible(g):
             outs.append(jax.lax.psum(g, cfg.slow_axis))
             new_errs.append(e)
+        elif cfg.top_k_frac is not None:
+            o, ne = coll.sparse_psum_ef(g, e, cfg.slow_axis,
+                                        frac=cfg.top_k_frac,
+                                        bits=cfg.bits,
+                                        error_feedback=cfg.error_feedback)
+            outs.append(o)
+            new_errs.append(ne)
         elif cfg.error_feedback:
             o, ne = coll.quantized_psum_ef(g, e, cfg.slow_axis,
                                            bits=cfg.bits)
@@ -118,6 +145,20 @@ def ef_compress_tree(tree: Any, error: Any, cfg: CompressionConfig
         if not _compressible(x):
             outs.append(x)
             new_errs.append(e)
+        elif cfg.top_k_frac is not None:
+            # top-k sparsify (EF residual carries the dropped mass) and
+            # optionally quantize the kept values; the combined residual
+            # is target - wire in both cases, so one buffer serves both
+            e_in = e if cfg.error_feedback else jnp.zeros_like(e)
+            kept, resid = topk_sparsify(x, cfg.top_k_frac, e_in)
+            if cfg.bits is not None:
+                deq = qz.quantize_symmetric(
+                    kept, bits=cfg.bits).dequantize(x.dtype)
+            else:
+                deq = kept
+            outs.append(deq)
+            new_errs.append(resid + (kept - deq)
+                            if cfg.error_feedback else e)
         elif cfg.error_feedback:
             q, ne = qz.ef_quantize(x, e, bits=cfg.bits)
             outs.append(q.dequantize(x.dtype))
@@ -134,10 +175,12 @@ def wire_bytes(tree: Any, cfg: Optional[CompressionConfig]) -> int:
 
     Float leaves cost ``ceil(bits/8)`` bytes per element plus 4 bytes for
     the shared scale when compressed, else their full itemsize; integer
-    leaves always cross at native width.  This is the analytic quantity
-    ``BENCH_scaling.json`` reports as ``merge_bytes`` — on TPU it is the
-    DCN traffic of one merge, on the CPU container it is the modeled
-    wire cost (the emulated hop moves no real bytes).
+    leaves always cross at native width.  With ``top_k_frac`` only the
+    kept entries cross: each costs its value (at ``bits`` width, or
+    native when ``bits=None``) plus a 4-byte exact index.  This is the
+    analytic quantity ``BENCH_scaling.json`` reports as ``merge_bytes``
+    — on TPU it is the DCN traffic of one merge, on the CPU container
+    it is the modeled wire cost (the emulated hop moves no real bytes).
     """
     total = 0
     for leaf in jax.tree.leaves(tree):
@@ -146,7 +189,14 @@ def wire_bytes(tree: Any, cfg: Optional[CompressionConfig]) -> int:
         for d in leaf.shape:
             size *= int(d)
         if cfg is not None and _compressible(leaf):
-            total += size * ((cfg.bits + 7) // 8) + 4
+            vbytes = (leaf.dtype.itemsize if cfg.bits is None
+                      else (cfg.bits + 7) // 8)
+            scale_bytes = 0 if cfg.bits is None else 4
+            if cfg.top_k_frac is not None:
+                k = max(1, int(size * cfg.top_k_frac))
+                total += k * (vbytes + 4) + scale_bytes
+            else:
+                total += size * vbytes + scale_bytes
         else:
             total += size * leaf.dtype.itemsize
     return total
@@ -157,11 +207,12 @@ def topk_sparsify(g: jax.Array, frac: float, error: jax.Array
     """Keep the largest-|.|  ``frac`` of entries (error-feedback residual
     for the rest).  Returns (sparse_dense_tensor, new_error) — the dense
     carrier keeps shapes static; on the wire this pairs with the int8
-    path (values) + implicit bitmap."""
+    path (values) + exact indices.  Selection is ``core.quantize.
+    topk_keep`` — exactly k survivors, shared with the mesh collective
+    (``collectives.sparse_psum_ef``) so both hops keep one wire
+    definition."""
+    from repro.core import quantize as qz
+
     target = g + error
-    flat = jnp.abs(target).reshape(-1)
-    k = max(1, int(flat.size * frac))
-    thresh = jax.lax.top_k(flat, k)[0][-1]
-    mask = (jnp.abs(target) >= thresh).astype(target.dtype)
-    kept = target * mask
+    kept = qz.topk_keep(target, frac)
     return kept, target - kept

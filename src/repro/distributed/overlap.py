@@ -47,25 +47,27 @@ def double_buffered_body(merge_fn: Callable, compute_fn: Callable,
       compute_fn: ``state -> (fresh_partials, metrics | None)`` — this
         round's local compute (the dots).  Must not depend on
         ``merge_fn``'s output; that independence *is* the overlap.
-      commit_fn: ``(state, merged) -> (state', metrics)`` — applies the
-        merged statistics (the host-side update).
+      commit_fn: ``(state, merged, mom) -> (state', mom', metrics)`` —
+        applies the merged statistics (the host-side update), threading
+        the outer-optimizer buffer ``mom`` (``()`` for stateless
+        commits — see ``distributed.merge_plan.OuterOptimizer``).
 
-    Returns a ``lax.scan`` body over carry ``(state, pending, ef)``.
-    Metrics come from ``compute_fn`` when it produces them (the
-    cadence-k local phase reports its own per-step metrics) and from
-    ``commit_fn`` otherwise (the cadence-1 update derives them from the
-    merged partials).  The merge is emitted before the dots so
+    Returns a ``lax.scan`` body over carry ``(state, pending, ef,
+    mom)``.  Metrics come from ``compute_fn`` when it produces them
+    (the cadence-k local phase reports its own per-step metrics) and
+    from ``commit_fn`` otherwise (the cadence-1 update derives them
+    from the merged partials).  The merge is emitted before the dots so
     schedulers that preserve emission order issue the collective first —
     async backends then hide it behind the dots entirely.
     """
     def body(carry, _):
-        state, pending, ef = carry
+        state, pending, ef, mom = carry
         merged, ef = merge_fn(pending, ef)
         fresh, compute_metrics = compute_fn(state)
-        new_state, commit_metrics = commit_fn(state, merged)
+        new_state, mom, commit_metrics = commit_fn(state, merged, mom)
         metrics = (compute_metrics if compute_metrics is not None
                    else commit_metrics)
-        return (new_state, fresh, ef), metrics
+        return (new_state, fresh, ef, mom), metrics
 
     return body
 

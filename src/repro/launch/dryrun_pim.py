@@ -34,6 +34,16 @@ reduction is independent of this round's compute — the structural
 precondition the latency-hiding scheduler needs.  The run fails if the
 pipeline did not decouple the merge from the dots.  ``--compress-bits``
 adds the int8/int16 error-feedback wire on the slow hop.
+
+``--merge-plan {avg,slowmo,topk}`` lowers the composed
+``distributed.merge_plan`` runner instead: ``slowmo`` adds the SlowMo
+outer-momentum buffer to the scan carry, ``topk`` puts the top-k
+error-feedback sparsifier on the slow hop.  Both compose with
+``--overlap-merge`` (the HLO overlap report applies unchanged) and
+``--merge-every``.  ``adaptive`` is deliberately not lowered here: the
+controller is host-side and reuses the per-cadence runners this dry-run
+already lowers.  Any ``MergeFallbackWarning`` raised while building is
+surfaced in the output JSON (``merge_fallback_warnings``).
 """
 
 import argparse
@@ -52,7 +62,8 @@ from repro.roofline import analysis as ra
 
 def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
           features: int = 64, merge_every: int = 1, chunk: int = 8,
-          overlap: bool = False, compress_bits: int = 0):
+          overlap: bool = False, compress_bits: int = 0,
+          plan_name: str = "avg"):
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = ("pod", "data") if multi_pod else ("data",)
     grid = PimGrid(n_vdpus=n_vdpus, mesh=mesh, data_axes=data_axes)
@@ -86,12 +97,26 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     w_spec = jax.ShapeDtypeStruct((features,), jnp.float32,
                                   sharding=grid.replicated_sharding())
 
+    from repro.distributed import merge_plan as mp
+    from repro.distributed.compression import CompressionConfig
+
     compression = None
     if compress_bits:
-        from repro.distributed.compression import CompressionConfig
         compression = CompressionConfig(bits=compress_bits)
+    outer = mp.AverageCommit()
+    if plan_name == "slowmo":
+        outer = mp.SlowMo(beta=0.5)
+    elif plan_name == "topk":
+        compression = CompressionConfig(
+            bits=compress_bits or None, top_k_frac=0.125)
+    elif plan_name != "avg":
+        raise SystemExit(
+            f"--merge-plan {plan_name!r} is not lowerable here (the "
+            f"adaptive controller is host-side; see module docstring)")
+    plan = mp.MergePlan(cadence=merge_every, overlap=overlap,
+                        compression=compression, outer=outer)
 
-    if not overlap and compression is None:
+    if plan.is_exact_default:
         # the scan engine's own cached chunk runner — the artifact the
         # fit hot path dispatches, scanning `chunk` merge rounds
         runner = grid.make_runner(local_fn, update_fn,
@@ -99,17 +124,17 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
         lowered = runner.lower(w_spec, data_spec, length=chunk)
         return lowered, lowered.compile(), mesh
 
-    # pipeline modes: lower the overlapped/compressed runner on its own
-    # carry layout — (state[, pending][, ef]); see pim._fit_pipeline
+    # plan modes: lower the composed runner on its own carry layout —
+    # (state[, pending], ef, mom); see distributed.merge_plan.run_fit
     from jax.sharding import NamedSharding, PartitionSpec as P
     state_wire = merge_every > 1
-    rs = grid._pipeline_runners(local_fn, update_fn,
-                                merge_every=merge_every, overlap=overlap,
-                                compression=compression,
-                                state_wire=state_wire)
+    rs = mp.pipeline_runners(grid, local_fn, update_fn,
+                             merge_every=merge_every, overlap=overlap,
+                             compression=compression,
+                             state_wire=state_wire, outer=outer)
     runner = rs["runner"]
-    wire = grid.merge_wire_spec(local_fn, update_fn, w_spec, data_spec,
-                                merge_every=merge_every)
+    wire = mp.wire_spec(grid, local_fn, update_fn, w_spec, data_spec,
+                        merge_every=merge_every)
     lanes_sharding = grid.data_sharding()
     pending_spec = jax.tree.map(
         lambda s: jax.ShapeDtypeStruct((n_vdpus,) + tuple(s.shape),
@@ -123,13 +148,20 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
         hop_sharding = NamedSharding(mesh, P(data_axes[0]))
         ef_spec = jax.tree.map(
             lambda s: jax.ShapeDtypeStruct(
-                (grid._hop_size,) + tuple(s.shape), s.dtype,
+                (mp.hop_size(grid),) + tuple(s.shape), s.dtype,
                 sharding=hop_sharding),
             wire)
+    mom_spec = ()
+    if not outer.plain_commit:
+        mom_spec = jax.tree.map(
+            lambda s: jax.ShapeDtypeStruct(
+                tuple(s.shape), s.dtype,
+                sharding=grid.replicated_sharding()),
+            jax.eval_shape(outer.init, w_spec))
     if overlap:
-        carry = (w_spec, pending_spec, ef_spec)
+        carry = (w_spec, pending_spec, ef_spec, mom_spec)
     else:
-        carry = (w_spec, ef_spec)
+        carry = (w_spec, ef_spec, mom_spec)
     lowered = runner.lower(carry, data_spec, length=chunk)
     return lowered, lowered.compile(), mesh
 
@@ -148,13 +180,25 @@ def main():
     ap.add_argument("--compress-bits", type=int, default=0,
                     help="error-feedback fixed-point width on the slow "
                          "hop (0 = exact merges)")
+    ap.add_argument("--merge-plan", default="avg",
+                    choices=("avg", "slowmo", "topk"),
+                    help="composed merge plan to lower: slowmo adds the "
+                         "outer-momentum carry leaf, topk the top-k EF "
+                         "sparsifier on the slow hop")
     args = ap.parse_args()
 
-    lowered, compiled, mesh = build(args.multi_pod, rows=args.rows,
-                                    merge_every=args.merge_every,
-                                    chunk=args.chunk,
-                                    overlap=args.overlap_merge,
-                                    compress_bits=args.compress_bits)
+    import warnings as _warnings
+    from repro.distributed.merge_plan import MergeFallbackWarning
+    with _warnings.catch_warnings(record=True) as caught:
+        _warnings.simplefilter("always", MergeFallbackWarning)
+        lowered, compiled, mesh = build(args.multi_pod, rows=args.rows,
+                                        merge_every=args.merge_every,
+                                        chunk=args.chunk,
+                                        overlap=args.overlap_merge,
+                                        compress_bits=args.compress_bits,
+                                        plan_name=args.merge_plan)
+    fallback_warnings = [str(w.message) for w in caught
+                         if issubclass(w.category, MergeFallbackWarning)]
     mem = compiled.memory_analysis()
     cost = compiled.cost_analysis() or {}
     if isinstance(cost, (list, tuple)):      # one entry per program in
@@ -169,6 +213,8 @@ def main():
         arch += ",overlap"
     if args.compress_bits:
         arch += f",efq{args.compress_bits}"
+    if args.merge_plan != "avg":
+        arch += f",{args.merge_plan}"
     arch += ")"
     out = {
         "arch": arch, "mesh": tag,
@@ -176,6 +222,8 @@ def main():
         "merge_every": args.merge_every, "scan_chunk": args.chunk,
         "overlap_merge": args.overlap_merge,
         "compress_bits": args.compress_bits,
+        "merge_plan": args.merge_plan,
+        "merge_fallback_warnings": fallback_warnings,
         "memory_gb_per_device": round(
             (mem.argument_size_in_bytes + mem.temp_size_in_bytes)
             / 2 ** 30, 3),

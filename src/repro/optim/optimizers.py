@@ -60,6 +60,25 @@ def momentum(lr: float, beta: float = 0.9) -> Optimizer:
     return Optimizer(init, update)
 
 
+def slow_momentum(outer_lr: float = 1.0, beta: float = 0.5) -> Optimizer:
+    """SlowMo's *outer* optimizer (arXiv 1910.00643): momentum applied
+    at merge boundaries rather than per step.
+
+    The caller feeds the negated merge delta as a pseudo-gradient
+    (``g = anchor − avg``); the update is then
+
+        m ← β·m + g,   anchor ← anchor − α·m
+
+    which with ``β = 0, α = 1`` commits the plain average.  The math is
+    exactly :func:`momentum` — this wrapper exists so the merge-plan
+    layer (``distributed.merge_plan.SlowMo``) names the semantics it
+    means and the mapping is documented in one place.  The buffer is a
+    standard ``OptState`` pytree, so it checkpoints like any optimizer
+    state (the Trainer stores it next to the EF buffer).
+    """
+    return momentum(outer_lr, beta=beta)
+
+
 def adamw(lr: float, *, b1: float = 0.9, b2: float = 0.95,
           eps: float = 1e-8, weight_decay: float = 0.0,
           master_fp32: bool = True,

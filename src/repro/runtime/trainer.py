@@ -63,6 +63,18 @@ class TrainerConfig:
     # mismatch instead of silently resuming with a stale/incompatible
     # residual.
     merge_compression: object = None
+    # Composed spelling of the two knobs above: a
+    # repro.distributed.merge_plan.MergePlan.  When given, cadence and
+    # compression derive from it (pass one spelling, not both).
+    merge_plan: object = None
+    # On-device finite check fused into the flush (roadmap "Next"): the
+    # step hot path buffers the on-device loss untouched; at a flush
+    # boundary the window's losses each reduce to a flag on device and
+    # the stacked flags sync once (plus one device_get for the buffered
+    # metrics) instead of materializing every step's metrics leaves
+    # host-side one by one.  False keeps the per-leaf legacy flush as
+    # the parity oracle.
+    fused_finite: bool = True
 
 
 class Trainer:
@@ -70,14 +82,17 @@ class Trainer:
     tolerance.  ``state`` is any pytree (params + opt state + extras);
     ``batch_fn(step) -> batch`` must be deterministic in ``step``.
 
-    ``merge_state`` is the compressed-merge continuation holder from
-    ``PimGrid.fit`` (``{"error": <EF pytree>}``): when given, the
-    error-feedback buffer is checkpointed *next to* the model state and
-    restored into the same holder on resume — a compressed run that
-    restarts without its residual would re-pay the quantization bias it
-    had already amortised.  The checkpointed tree is then
-    ``{"model": state, "merge_error": error}``; checkpoints written
-    without a holder keep the bare-state layout (backward compatible).
+    ``merge_state`` is the merge-continuation holder from
+    ``PimGrid.fit`` (``{"error": <EF pytree>, "momentum": <SlowMo
+    buffer>}`` — either key alone is fine): when given, the seeded
+    buffers are checkpointed *next to* the model state and restored
+    into the same holder on resume — a compressed run that restarts
+    without its residual would re-pay the quantization bias it had
+    already amortised, and a SlowMo run would lose its outer momentum.
+    The checkpointed tree is then the **v2 layout** ``{"model": state,
+    "merge_error": error?, "merge_momentum": momentum?}`` (leaves
+    present only when seeded); checkpoints written without a holder
+    keep the bare-state v1 layout (backward compatible).
 
     Resume requires the holder's ``"error"`` to be seeded with a
     *correctly-shaped* buffer (zeros are fine —
@@ -99,6 +114,25 @@ class Trainer:
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.cfg = config
+        plan = config.merge_plan
+        if plan is not None:
+            if config.merge_every != 1 or \
+                    config.merge_compression is not None:
+                raise ValueError(
+                    "pass either TrainerConfig.merge_plan or the legacy "
+                    "merge_every/merge_compression knobs, not both")
+            if getattr(plan, "adaptive", False):
+                raise ValueError(
+                    "TrainerConfig.merge_plan cannot be adaptive: the "
+                    "Trainer aligns flush/checkpoint boundaries to a "
+                    "FIXED cadence, but AdaptiveCadence re-decides k "
+                    "mid-run — a boundary computed from the starting "
+                    "cadence could checkpoint vDPU-unsynced state")
+            self._merge_every = plan.cadence
+            self._merge_compression = plan.compression
+        else:
+            self._merge_every = config.merge_every
+            self._merge_compression = config.merge_compression
         self.state = init_state
         self.merge_state = merge_state
         self.start_step = 0
@@ -127,13 +161,21 @@ class Trainer:
                 self.start_step = step + 1
 
     def _compression_tag(self) -> Optional[str]:
-        cmp = self.cfg.merge_compression
+        cmp = self._merge_compression
         return repr(cmp) if cmp is not None else None
 
+    def _seeded_keys(self) -> tuple:
+        """Holder keys that are seeded (ride the checkpoint), in the
+        fixed v2-layout order."""
+        if self.merge_state is None:
+            return ()
+        return tuple(k for k in ("error", "momentum")
+                     if self.merge_state.get(k) is not None)
+
     def _ckpt_is_wrapped(self) -> bool:
-        """Does the latest checkpoint on disk carry the compressed-merge
-        {'model', 'merge_error'} layout?  Read from its manifest so
-        layout drift is diagnosed from facts, not guesses."""
+        """Does the latest checkpoint on disk carry the merge-state v2
+        {'model', 'merge_error'/'merge_momentum'} layout?  Read from its
+        manifest so layout drift is diagnosed from facts, not guesses."""
         import json as _json
         import os as _os
         step = self.ckpt.latest_step()
@@ -146,13 +188,13 @@ class Trainer:
                 names = _json.load(f).get("names", [])
         except (OSError, ValueError):
             return False
-        return any(n.startswith("['merge_error']") for n in names)
+        return any(n.startswith("['merge_error']")
+                   or n.startswith("['merge_momentum']") for n in names)
 
     def _restore_latest(self, init_state, placer):
         """Template-driven restore, robust to holder/checkpoint layout
         drift.  Returns ``(step, unwrapped_state, extra)`` or None."""
-        seeded = (self.merge_state is not None
-                  and self.merge_state.get("error") is not None)
+        seeded = bool(self._seeded_keys())
         try:
             resumed = self.ckpt.restore_latest(self._wrap(init_state),
                                                placer=placer)
@@ -172,29 +214,35 @@ class Trainer:
                 return resumed
             if not seeded and self._ckpt_is_wrapped():
                 raise ValueError(
-                    "checkpoint has the compressed-merge layout "
-                    "({'model', 'merge_error'}) but merge_state carries "
-                    "no seeded 'error' buffer — restore is template-"
-                    "driven, so pass merge_state={'error': "
-                    "grid.init_merge_error(grid.merge_wire_spec(...))} "
-                    "(zeros are fine) to resume") from e
+                    "checkpoint has the merge-state v2 layout "
+                    "({'model', 'merge_error'/'merge_momentum'}) but "
+                    "merge_state carries no seeded buffers — restore is "
+                    "template-driven, so seed the holder to match the "
+                    "checkpoint: merge_state={'error': grid."
+                    "init_merge_error(grid.merge_wire_spec(...))} for a "
+                    "compressed run, {'momentum': outer.init(state)} "
+                    "for a SlowMo run, or both (zeros are fine)") from e
             raise                  # genuine structure mismatch
 
     def _wrap(self, state):
-        """Checkpoint tree: bare state, or {model, merge_error} when a
-        compressed-merge holder rides along."""
-        if self.merge_state is not None and \
-                self.merge_state.get("error") is not None:
-            return {"model": state, "merge_error":
-                    self.merge_state["error"]}
-        return state
+        """Checkpoint tree: bare state (v1), or the v2 layout
+        {model, merge_error?, merge_momentum?} when a merge-state holder
+        rides along with seeded buffers."""
+        keys = self._seeded_keys()
+        if not keys:
+            return state
+        tree = {"model": state}
+        for k in keys:
+            tree[f"merge_{k}"] = self.merge_state[k]
+        return tree
 
     def _unwrap(self, tree):
-        if self.merge_state is not None and \
-                self.merge_state.get("error") is not None:
-            self.merge_state["error"] = tree["merge_error"]
-            return tree["model"]
-        return tree
+        keys = self._seeded_keys()
+        if not keys:
+            return tree
+        for k in keys:
+            self.merge_state[k] = tree[f"merge_{k}"]
+        return tree["model"]
 
     def _save(self, step: int):
         self.ckpt.save(step, self._wrap(self.state),
@@ -208,7 +256,7 @@ class Trainer:
             ) -> Dict[str, Any]:
         step = self.start_step
         end = self.start_step + n_steps
-        pending: list = []           # un-materialized (step, metrics, dt)
+        pending: list = []   # un-materialized (step, metrics, dt, strag)
         while step < end:
             try:
                 t0 = time.perf_counter()
@@ -223,7 +271,7 @@ class Trainer:
                 # next merge (pending keeps accumulating): state is only
                 # globally meaningful — and safe to checkpoint — once
                 # the vDPU states have been re-synced
-                at_merge = ((step + 1) % self.cfg.merge_every == 0
+                at_merge = ((step + 1) % self._merge_every == 0
                             or step == end - 1)
                 # the ckpt multiple this window covers must itself be
                 # past start_step — otherwise cadence > 1 would fire a
@@ -231,11 +279,11 @@ class Trainer:
                 # (the window [step-m+1, step] covering multiple 0)
                 at_ckpt = (self.ckpt is not None and at_merge
                            and step % self.cfg.ckpt_every
-                           < self.cfg.merge_every
+                           < self._merge_every
                            and step - step % self.cfg.ckpt_every
                            > self.start_step)
                 at_log = at_merge and step % self.cfg.log_every \
-                    < self.cfg.merge_every
+                    < self._merge_every
                 if at_ckpt or at_log or step == end - 1:
                     # materialize + finite-check everything accumulated
                     # since the last boundary (raises before a checkpoint
@@ -273,19 +321,51 @@ class Trainer:
     def _flush(self, pending) -> list:
         """Materialize buffered step metrics into ``history``.
 
-        One host sync for the whole window; raises ``FloatingPointError``
-        on the first non-finite loss (the caller's failure path restores
-        and replays, discarding the poisoned window)."""
-        # verify the WHOLE window before appending anything: a partial
-        # append would survive the restore/replay and leave duplicate,
-        # rolled-back steps in history
-        for step, metrics, _, _ in pending:
-            loss = float(metrics.get("loss", jnp.zeros(())))
-            if not np.isfinite(loss):
+        Raises ``FloatingPointError`` on the first non-finite loss (the
+        caller's failure path restores and replays, discarding the
+        poisoned window).  Two paths:
+
+        * fused (default): the window's buffered on-device losses each
+          reduce to a boolean on device, the stacked flags sync ONCE,
+          then one ``device_get`` materializes every buffered metrics
+          tree in a single transfer — zero work on the step hot path,
+          no per-leaf host round-trips at the boundary.
+        * legacy (``fused_finite=False``): per-step ``float(loss)``
+          checks, kept as the parity oracle for the fused path.
+
+        Either way the WHOLE window is verified before anything is
+        appended: a partial append would survive the restore/replay and
+        leave duplicate, rolled-back steps in history."""
+        losses = [(i, m.get("loss")) for i, (_, m, _, _) in
+                  enumerate(pending)
+                  if hasattr(m, "get") and m.get("loss") is not None]
+        if self.cfg.fused_finite and losses:
+            oks = np.asarray(jax.device_get(jnp.stack(
+                [jnp.all(jnp.isfinite(jnp.asarray(l)))
+                 for _, l in losses])))
+            if not oks.all():
+                i = losses[int(np.argmin(oks))][0]
+                step, metrics = pending[i][0], pending[i][1]
+                # the flag path supports array losses (jnp.all above),
+                # so the report must too — float() on a vector would
+                # raise TypeError past the restore/replay except clause
+                loss = np.asarray(jax.device_get(
+                    metrics.get("loss"))).ravel()
+                bad = loss[~np.isfinite(loss)]
+                val = float(bad[0]) if bad.size else float(loss[0])
                 raise FloatingPointError(
-                    f"non-finite loss {loss} at step {step}")
+                    f"non-finite loss {val} at step {step}")
+        elif not self.cfg.fused_finite:
+            for step, metrics, _, _ in pending:
+                loss = float(metrics.get("loss", jnp.zeros(())))
+                if not np.isfinite(loss):
+                    raise FloatingPointError(
+                        f"non-finite loss {loss} at step {step}")
         flushed = []
-        for step, metrics, dt, stragglers in pending:
+        # one transfer for the window's metrics (fused path benefit —
+        # device_get on an already-host tree is a no-op pass-through)
+        mats = jax.device_get([m for _, m, _, _ in pending])
+        for (step, _, dt, stragglers), metrics in zip(pending, mats):
             entry = dict(metrics, step=step, wall_time=dt,
                          stragglers=stragglers)
             entry = {k: (float(v) if hasattr(v, "item") or

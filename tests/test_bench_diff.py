@@ -34,11 +34,32 @@ class TestDiff:
         art = _artifact()
         assert bench_diff.diff(art, art) == []
 
-    def test_schema_mismatch_flagged(self):
+    def test_schema_family_mismatch_flagged(self):
         fresh = _artifact()
-        committed = _artifact(schema="bench_scaling/v1")
+        committed = _artifact(schema="bench_kernels/v2")
         findings = bench_diff.diff(fresh, committed)
         assert any("schema mismatch" in f for f in findings)
+
+    def test_schema_downgrade_flagged(self):
+        """A fresh artifact must never silently drop to an OLDER schema
+        than the committed reference."""
+        fresh = _artifact(schema="bench_scaling/v1")
+        committed = _artifact()
+        findings = bench_diff.diff(fresh, committed)
+        assert any("downgrade" in f for f in findings)
+
+    def test_unparseable_schema_flagged(self):
+        fresh = _artifact(schema="bench_scaling")
+        findings = bench_diff.diff(fresh, _artifact())
+        assert any("schema mismatch" in f for f in findings)
+
+    def test_newer_fresh_schema_accepted(self, capsys):
+        """Fresh v(N+1) over committed vN — added axes/columns — must
+        pass (the upgrade path every schema bump takes through CI)."""
+        fresh = _artifact(schema="bench_scaling/v3")
+        committed = _artifact()
+        assert bench_diff.diff(fresh, committed) == []
+        assert "accepted" in capsys.readouterr().out
 
     def test_missing_cell_flagged(self):
         fresh = _artifact()
@@ -91,7 +112,63 @@ class TestDiff:
         import json
         good = tmp_path / "good.json"
         good.write_text(json.dumps(_artifact()))
-        bad = tmp_path / "bad.json"
-        bad.write_text(json.dumps(_artifact(schema="bench_scaling/v1")))
+        old = tmp_path / "old.json"
+        old.write_text(json.dumps(_artifact(schema="bench_scaling/v1")))
         assert bench_diff.main([str(good), str(good)]) == 0
-        assert bench_diff.main([str(good), str(bad)]) == 1
+        # a fresh DOWNGRADE fails; a fresh upgrade over old passes
+        assert bench_diff.main([str(old), str(good)]) == 1
+        assert bench_diff.main([str(good), str(old)]) == 0
+
+
+def _v3_artifact(*, drop_plan_cell=False):
+    """A v3 artifact: v2 cells (implicitly plan="avg") plus the plan
+    axis over plan_n_vdpus."""
+    art = _artifact(schema="bench_scaling/v3")
+    art["config"]["plans"] = ["slowmo", "topk"]
+    art["config"]["plan_n_vdpus"] = [4]
+    art["config"]["plan_precisions"] = ["fp32"]
+    plan_cells = [
+        {"n_vdpus": 4, "precision": "fp32", "merge_every": k,
+         "pipeline": "baseline", "plan": p, "steps_per_s": 80.0}
+        for k in (1, 4) for p in ("slowmo", "topk")]
+    if drop_plan_cell:
+        plan_cells = plan_cells[:-1]
+    art["throughput"] += plan_cells
+    art["accuracy_vs_plan"] = []
+    return art
+
+
+class TestPlanAxisVersioning:
+    def test_v3_fresh_vs_v2_committed_passes(self):
+        """The exact CI situation after the schema bump: the fresh
+        smoke sweep carries plan columns the committed artifact
+        predates — no missing-cell or schema findings."""
+        assert bench_diff.diff(_v3_artifact(), _artifact()) == []
+
+    def test_v3_plan_completeness_checked_against_own_config(self):
+        """Plan cells the fresh config promises must exist — judged
+        against the FRESH config, not the committed one."""
+        findings = bench_diff.diff(_v3_artifact(drop_plan_cell=True),
+                                   _artifact())
+        assert any("missing throughput cell" in f and "plan=topk" in f
+                   for f in findings)
+
+    def test_v3_vs_v3_regression_on_plan_cells(self):
+        fresh = _v3_artifact()
+        committed = _v3_artifact()
+        for c in fresh["throughput"]:
+            if c.get("plan") == "topk":
+                c["steps_per_s"] = 1.0
+        findings = bench_diff.diff(fresh, committed)
+        assert any("regression" in f and "plan=topk" in f
+                   for f in findings)
+
+    def test_avg_plan_cells_compare_across_versions(self):
+        """v2 cells (no plan column) and v3 plan="avg" cells share a
+        key, so the regression leg still covers them."""
+        fresh = _v3_artifact()
+        fresh["throughput"][0] = dict(fresh["throughput"][0],
+                                      steps_per_s=5.0)
+        findings = bench_diff.diff(fresh, _artifact())
+        assert any("regression" in f and "plan=avg" in f
+                   for f in findings)

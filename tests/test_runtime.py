@@ -129,6 +129,90 @@ class TestTrainer:
         assert out["stragglers"] >= 1
 
 
+class TestFusedFiniteParity:
+    """The fused on-device isfinite reduction (one stacked flag sync +
+    one device_get per flush window) against the legacy per-step
+    ``float(loss)`` flush — identical histories, identical failure
+    behavior."""
+
+    def _mk(self, tmp_path, *, fused, fail_at=None, subdir=""):
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            calls["n"] += 1
+            w = state["w"] - 0.1 * batch["g"]
+            loss = jnp.sum(w ** 2)
+            if fail_at is not None and calls["n"] == fail_at:
+                loss = jnp.asarray(float("nan"))
+            return {"w": w}, {"loss": loss}
+
+        def batch_fn(step):
+            return {"g": jnp.ones((2,)) * (step % 3)}
+
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path / (subdir or
+                                                     f"f{fused}")),
+                            ckpt_every=2, max_restarts=2, log_every=100,
+                            fused_finite=fused)
+        return Trainer(step_fn, {"w": jnp.ones((2,))}, batch_fn, cfg)
+
+    def test_histories_identical(self, tmp_path):
+        out_f = self._mk(tmp_path, fused=True).run(9)
+        out_l = self._mk(tmp_path, fused=False).run(9)
+        assert len(out_f["history"]) == len(out_l["history"])
+        for ef, el in zip(out_f["history"], out_l["history"]):
+            assert ef["step"] == el["step"]
+            np.testing.assert_allclose(ef["loss"], el["loss"])
+
+    def test_nan_recovery_identical(self, tmp_path):
+        out_f = self._mk(tmp_path, fused=True, fail_at=6).run(8)
+        out_l = self._mk(tmp_path, fused=False, fail_at=6).run(8)
+        assert out_f["restarts"] == out_l["restarts"] == 1
+        assert out_f["final_step"] == out_l["final_step"] == 8
+        steps_f = [e["step"] for e in out_f["history"]]
+        steps_l = [e["step"] for e in out_l["history"]]
+        assert steps_f == steps_l
+
+    def test_fused_window_not_partially_flushed(self, tmp_path):
+        """The fused check must still verify the WHOLE window before
+        appending anything (same contract as the legacy flush)."""
+        tr = self._mk(tmp_path, fused=True, fail_at=7)
+        out = tr.run(10)
+        assert out["restarts"] == 1
+        steps = [e["step"] for e in out["history"]]
+        assert steps.count(5.0) == 1 and steps.count(6.0) == 1
+
+    def test_fused_error_message_names_step(self, tmp_path):
+        tr = self._mk(tmp_path, fused=True, fail_at=2)
+        tr.ckpt = None                       # no restore path -> raises
+        with pytest.raises(FloatingPointError, match="non-finite loss"):
+            tr.run(4)
+
+    def test_vector_loss_reports_floating_point_error(self, tmp_path):
+        """The fused flag supports array losses (jnp.all), so the
+        failure branch must too: a NaN in a vector loss raises
+        FloatingPointError (catchable by restore/replay), never a
+        TypeError from float() on a non-scalar."""
+        def step_fn(state, batch):
+            loss = jnp.asarray([1.0, float("nan"), 2.0])
+            return state, {"loss": loss}
+
+        tr = Trainer(step_fn, {"w": jnp.zeros(())}, lambda s: {},
+                     TrainerConfig(fused_finite=True))
+        with pytest.raises(FloatingPointError, match="non-finite loss"):
+            tr.run(2)
+
+    def test_metrics_without_loss_key(self, tmp_path):
+        """Steps reporting no loss leaf produce no flag and flush
+        cleanly on the fused path."""
+        def step_fn(state, batch):
+            return state, {"throughput": jnp.ones(())}
+
+        tr = Trainer(step_fn, {"w": jnp.zeros(())}, lambda s: {},
+                     TrainerConfig(fused_finite=True))
+        out = tr.run(3)
+        assert len(out["history"]) == 3
+
+
 class TestData:
     def test_token_stream_deterministic(self):
         s1 = TokenStream(1000, 4, 32, seed=7)

@@ -119,16 +119,32 @@ class TestCompileCache:
         def update_fn(w, merged):
             return w - 0.01 * merged["g"] / n, {}
 
-        runner = grid.compiled_step(local_fn, update_fn)
+        runner = grid.make_runner(local_fn, update_fn)
         w0 = jnp.zeros((3,))
         for _ in range(3):
             grid.fit(init_state=w0, local_fn=local_fn,
                      update_fn=update_fn, data=data, steps=40,
                      scan_chunk=32)
         # same runner object is served for the same closures…
-        assert grid.compiled_step(local_fn, update_fn) is runner
+        assert grid.make_runner(local_fn, update_fn) is runner
         # …and it compiled at most the two chunk lengths (32 and 8)
         assert runner._cache_size() <= 2
+
+    def test_compiled_step_deprecated_alias(self):
+        """The pre-cadence name still works but warns, pointing at
+        make_runner (scheduled for removal)."""
+        grid = make_cpu_grid(4)
+
+        def local_fn(w, sl):
+            return {"g": jnp.sum(sl["X"], axis=0)}
+
+        def update_fn(w, merged):
+            return w - merged["g"], {}
+
+        with pytest.warns(DeprecationWarning, match="make_runner"):
+            runner = grid.compiled_step(local_fn, update_fn)
+        # the alias still serves the same cached runner
+        assert grid.make_runner(local_fn, update_fn) is runner
 
     def test_same_code_different_closures_share_runner(self):
         """train_* re-creates its closures each call; signature keying

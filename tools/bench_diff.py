@@ -8,22 +8,31 @@ comparable cell regressed more than ``--max-regression`` in throughput.
 
 Checks, in order:
 
-1. **schema** — both files must carry the same ``schema`` tag
-   (``bench_scaling/v2``) and the fresh file must have every top-level
-   section the committed one has.
+1. **schema** — versioned: both tags must share the schema *family*
+   (``bench_scaling``) and the fresh file's version must be >= the
+   committed one (a fresh artifact may ADD axes/columns — e.g. the v3
+   plan axis over a committed v2 artifact — but never silently drop to
+   an older schema).  The fresh file must have every top-level section
+   the committed one has (newer schemas are supersets).
 2. **completeness** — the fresh file must contain one throughput cell
    for every point of the cross-product its *own* config promises
-   (n_vdpus x precision x merge_every, with the pipeline axis applied
-   to the precisions ``config.pipeline_precisions`` names).  A missing
-   cell means a sweep loop silently skipped work.
+   (n_vdpus x precision x merge_every, the pipeline axis applied to
+   the precisions ``config.pipeline_precisions`` names, and — v3 —
+   the ``plans`` axis over ``plan_n_vdpus`` x ``plan_precisions``).
+   A missing cell means a sweep loop silently skipped work.  Columns
+   only the newer schema promises are judged against the *fresh*
+   config, so added plan columns never flag missing-cell errors on
+   older committed artifacts.
 3. **regression** — for cells whose key (n_vdpus, precision,
-   merge_every, pipeline) exists in both files *and* whose configs are
-   comparable (same backend, rows, features, smoke flag), fresh
-   ``steps_per_s`` must be at least ``1/max_regression`` of committed.
-   Smoke sweeps against the committed full-size artifact are not
-   comparable — the regression check is then skipped with a note
-   (schema/completeness still apply), so CI always validates structure
-   and validates performance when it can.
+   merge_every, pipeline, plan) exists in both files *and* whose
+   configs are comparable (same backend, rows, features, smoke flag),
+   fresh ``steps_per_s`` must be at least ``1/max_regression`` of
+   committed.  Cells an older artifact does not have (plan != "avg")
+   simply have no counterpart and are skipped.  Smoke sweeps against
+   the committed full-size artifact are not comparable — the
+   regression check is then skipped with a note (schema/completeness
+   still apply), so CI always validates structure and validates
+   performance when it can.
 
 Usage::
 
@@ -41,12 +50,29 @@ import sys
 
 
 def _cell_key(cell: dict):
+    # pre-v3 artifacts have no "plan" column — their cells are the
+    # default-plan cells, so the default keeps keys comparable
     return (cell.get("n_vdpus"), cell.get("precision"),
-            cell.get("merge_every"), cell.get("pipeline", "baseline"))
+            cell.get("merge_every"), cell.get("pipeline", "baseline"),
+            cell.get("plan", "avg"))
+
+
+def _schema_version(tag):
+    """``"bench_scaling/v3"`` -> ``("bench_scaling", 3)``; None when the
+    tag does not parse (treated as a schema mismatch)."""
+    if not isinstance(tag, str) or "/v" not in tag:
+        return None
+    family, _, ver = tag.rpartition("/v")
+    if not ver.isdigit():
+        return None
+    return family, int(ver)
 
 
 def expected_keys(config: dict):
-    """The cross-product of throughput cells a config promises."""
+    """The cross-product of throughput cells a config promises.  Judged
+    against the file's OWN config, so a newer schema's added axes (the
+    v3 ``plans`` over ``plan_n_vdpus``) are checked for the fresh file
+    without demanding them from older artifacts."""
     pipelines = config.get("pipelines", ["baseline"])
     pipe_precisions = set(config.get("pipeline_precisions",
                                      config.get("precisions", [])))
@@ -56,7 +82,13 @@ def expected_keys(config: dict):
             pnames = pipelines if prec in pipe_precisions else ["baseline"]
             for k in config.get("merge_every", []):
                 for p in pnames:
-                    keys.add((v, prec, k, p))
+                    keys.add((v, prec, k, p, "avg"))
+    plan_precisions = set(config.get("plan_precisions", []))
+    for v in config.get("plan_n_vdpus", []):
+        for prec in plan_precisions:
+            for k in config.get("merge_every", []):
+                for plan in config.get("plans", []):
+                    keys.add((v, prec, k, "baseline", plan))
     return keys
 
 
@@ -75,9 +107,18 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
 
     f_schema = fresh.get("schema")
     c_schema = committed.get("schema")
-    if f_schema != c_schema:
+    f_ver = _schema_version(f_schema)
+    c_ver = _schema_version(c_schema)
+    if f_ver is None or c_ver is None or f_ver[0] != c_ver[0]:
         findings.append(
             f"schema mismatch: fresh={f_schema!r} committed={c_schema!r}")
+    elif f_ver[1] < c_ver[1]:
+        findings.append(
+            f"schema downgrade: fresh={f_schema!r} is older than "
+            f"committed={c_schema!r}")
+    elif f_ver[1] > c_ver[1]:
+        print(f"bench_diff: fresh schema {f_schema} extends committed "
+              f"{c_schema} — added axes/columns accepted", flush=True)
     for section in committed:
         if section not in fresh:
             findings.append(f"missing section {section!r}")
@@ -87,7 +128,7 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
     for key in sorted(missing, key=str):
         findings.append(
             "missing throughput cell (n_vdpus={}, precision={}, "
-            "merge_every={}, pipeline={})".format(*key))
+            "merge_every={}, pipeline={}, plan={})".format(*key))
 
     if not comparable(fresh.get("config", {}),
                       committed.get("config", {})):
@@ -103,7 +144,7 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
                 fresh_sps * max_regression < committed_sps:
             findings.append(
                 "throughput regression >{:.1f}x at (n_vdpus={}, "
-                "precision={}, merge_every={}, pipeline={}): "
+                "precision={}, merge_every={}, pipeline={}, plan={}): "
                 "{:.1f} -> {:.1f} steps/s".format(
                     max_regression, *key, committed_sps, fresh_sps))
     return findings

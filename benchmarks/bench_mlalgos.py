@@ -13,7 +13,8 @@ import jax.numpy as jnp
 from benchmarks.common import time_fn, emit
 from repro.core import datasets, make_cpu_grid
 from repro.core.mlalgos import (train_linreg, train_logreg, train_kmeans,
-                                train_dtree)
+                                train_dtree, train_svm,
+                                train_multinomial, LinReg)
 from repro.configs.pim_ml import CONFIG as C
 
 
@@ -60,6 +61,19 @@ def bench_step_engines(grid, X, y, Xk, steps: int = 50):
         emit(f"linreg_fp32_scan_cadence{C.merge_every}_{steps}steps",
              us_cad, f"{steps * 1e6 / us_cad:.0f} steps/s "
              f"(1 merge per {C.merge_every} steps)")
+
+    # the minibatch row (Workload-protocol axis): sample 1/4 of each
+    # vDPU's resident rows per local step — the steps/s win PIM-Opt's
+    # minibatch local SGD banks.  One bound program keeps the timed
+    # fits on stable compile-cache keys.
+    per = -(-Xe.shape[0] // grid.n_vdpus)
+    program = LinReg(lr=0.05).bind(grid, Xe, ye)
+    us_mini = time_fn(lambda: program.fit(steps=steps,
+                                          batch_size=max(1, per // 4)),
+                      warmup=1, iters=3)
+    emit(f"linreg_fp32_scan_minibatch{max(1, per // 4)}_{steps}steps",
+         us_mini, f"{steps * 1e6 / us_mini:.0f} steps/s "
+         f"(batch {max(1, per // 4)}/{per} rows per vDPU)")
 
     # the merge-pipeline row (config-driven): overlap and/or compress
     # the merge itself (see PimGrid.fit / configs.pim_ml)
@@ -124,6 +138,25 @@ def run():
             return train_logreg(grid, Xc, yc, lr=0.5, steps=1, sigmoid=sig)
         emit(f"logreg_pim_{sig}_iter", time_fn(once, warmup=1, iters=3),
              "")
+
+    # --- linear SVM + multinomial logreg (Workload plugins, PIM-Opt's
+    # second workload and the C-class generalisation) ---
+    for prec in ("fp32", "int8"):
+        def once_svm(prec=prec):
+            return train_svm(grid, Xc, yc, lr=0.1, steps=1,
+                             precision=prec)
+        emit(f"svm_pim_{prec}_iter", time_fn(once_svm, warmup=1,
+                                             iters=3), "hinge")
+    Xm, ym = datasets.mixture_classification(key, rows, C.reg_features,
+                                             C.mn_classes)
+    for sm in ("exact", "lut"):
+        def once_mn(sm=sm):
+            return train_multinomial(grid, Xm, ym,
+                                     n_classes=C.mn_classes, lr=0.5,
+                                     steps=1, softmax=sm)
+        emit(f"multinomial_pim_{sm}_iter",
+             time_fn(once_mn, warmup=1, iters=3),
+             f"C={C.mn_classes}")
 
     # --- K-means ---
     Xk, _, _ = datasets.blobs(key, min(C.km_rows, 32768), C.km_features,

@@ -1,8 +1,8 @@
 """Paper Table: strong scaling (1 -> 2,524 DPUs) x merge cadence x
-precision x merge pipeline x merge plan.
+precision x merge pipeline x merge plan x workload x batch size.
 
 Reproduces the paper's strong-scaling evaluation on the vDPU grid, with
-four extra axes the follow-ups make first-class:
+six extra axes the follow-ups make first-class:
 
   * ``merge_every`` — local steps between host merges (PIM-Opt,
     arXiv 2404.07164).  The paper's observation is that the host merge
@@ -28,10 +28,20 @@ four extra axes the follow-ups make first-class:
     the controller may grow it mid-fit).  Swept for fp32 cells at the
     baseline pipeline over ``plan_n_vdpus``.
 
+  * ``workload`` / ``batch_size`` — the Workload-protocol axes (this
+    repo's PR 5): the PIM-Opt companion workloads (linear SVM,
+    multinomial logistic regression) timed through the same generic
+    ``api.fit`` path as linreg, and on-device minibatch sampling
+    (``batch_size < rows_per_vdpu`` processes a sampled fraction of
+    each resident partition per local step — the steps/s win PIM-Opt's
+    minibatch local-SGD banks).  Swept at ``workload_n_vdpus`` over
+    cadences {1, 4} x ``batch_sizes``; base cells carry
+    ``workload="linreg"``, ``batch_size="full"``.
+
 One sweep produces the tables plus the accuracy-vs-cadence /
-accuracy-vs-pipeline / accuracy-vs-plan curves, in a single
-``BENCH_scaling.json`` (schema bench_scaling/v3, documented in
-docs/BENCHMARKS.md).
+accuracy-vs-pipeline / accuracy-vs-plan / accuracy-vs-workload curves,
+in a single ``BENCH_scaling.json`` (schema bench_scaling/v4,
+documented in docs/BENCHMARKS.md).
 
 Merge-fraction model: the measured per-local-step time at cadence k is
 
@@ -69,9 +79,12 @@ if __package__ in (None, ""):                 # `python benchmarks/bench_scaling
 
 from benchmarks.common import time_fn
 from repro.core import datasets, make_cpu_grid
-from repro.core.mlalgos import make_linreg_step, train_linreg, train_logreg
+from repro.core.mlalgos import (make_linreg_step, train_linreg,
+                                train_logreg)
 from repro.core.mlalgos.linreg import closed_form
 from repro.core.mlalgos.logreg import accuracy
+from repro.core.mlalgos.svm import svm_accuracy
+from repro.core.mlalgos.multinomial import multinomial_accuracy
 from repro.distributed import compression as comp
 from repro.distributed.merge_plan import (MergePlan, SlowMo,
                                           AdaptiveCadence)
@@ -90,6 +103,13 @@ PIPELINES = (("baseline", False, 0), ("overlap", True, 0),
 # pipeline; "avg" is the base cells' plan label
 PLANS = ("slowmo", "topk", "adaptive")
 TOPK_FRAC = 0.125
+# the Workload-protocol axis (v4): estimators timed through api.fit and
+# the minibatch sampling sizes ("full" = batch_size=None, the exact
+# engine; ints = rows sampled per vDPU per local step)
+WORKLOADS = ("linreg", "svm", "multinomial")
+WORKLOAD_CADENCES = (1, 4)
+BATCH_SIZES = ("full", 32)
+WORKLOAD_VDPUS_FULL = (64,)
 
 
 def _compression(bits: int):
@@ -186,7 +206,9 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                         local_fn, update_fn, w0, data, merge_every=k)
                     frac = (t_merge / k) / us_step if us_step > 0 else 0.0
                     cell = {
-                        "algo": "linreg", "n_vdpus": v, "precision": prec,
+                        "algo": "linreg", "workload": "linreg",
+                        "batch_size": "full",
+                        "n_vdpus": v, "precision": prec,
                         "merge_every": k, "pipeline": pname,
                         "plan": "avg",
                         "us_per_step": round(us_step, 2),
@@ -239,7 +261,8 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                     frac = (t_merge / k) / us_step \
                         if valid and us_step > 0 else 0.0
                     cell = {
-                        "algo": "linreg", "n_vdpus": v,
+                        "algo": "linreg", "workload": "linreg",
+                        "batch_size": "full", "n_vdpus": v,
                         "precision": prec, "merge_every": k,
                         "pipeline": "baseline", "plan": pname,
                         "us_per_step": round(us_step, 2),
@@ -261,6 +284,117 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                           f"wire {cell['merge_bytes']:5d}B{note}",
                           flush=True)
     return cells
+
+
+def _bind_workload(name, grid, key, *, rows, features):
+    """One bound Program per (workload, grid) — stable compile-cache
+    keys across the timed cadence/batch sweep, like make_linreg_step
+    for the base cells.  The estimator comes from the config's one
+    name -> workload mapping (``PimMLConfig.workload_spec``); only the
+    dataset choice is benchmark-local."""
+    import dataclasses as _dc
+
+    from repro.configs.pim_ml import CONFIG
+
+    # the linreg base-cell hyperparameters (lr=0.05) are what the
+    # config's builder uses, so workload cells stay comparable
+    wl = _dc.replace(CONFIG, workload=name).workload_spec()
+    if name == "linreg":
+        X, y, _ = datasets.regression(key, rows, features)
+    elif name == "svm":
+        X, y, _ = datasets.binary_classification(key, rows, features)
+    elif name == "multinomial":
+        X, y = datasets.mixture_classification(key, rows, features,
+                                               n_classes=CONFIG.mn_classes)
+    else:
+        raise ValueError(name)
+    return wl.bind(grid, X, y), (X, y)
+
+
+def workload_sweep(vdpus, key, *, rows, features, timed_steps, warmup,
+                   iters):
+    """The v4 Workload-protocol cells: steps/s per (workload, n_vdpus,
+    merge_every, batch_size), fp32 at the baseline pipeline / default
+    plan, all through the one generic ``api.fit`` path.  ``linreg``
+    appears only at ``batch_size != "full"`` (its full-batch cells are
+    the base sweep); the minibatch cells are the acceptance row — a
+    ``batch_size < rows_per_vdpu`` cell must beat its full-batch
+    sibling in steps/s (the sampled fraction is all the local compute
+    a step pays)."""
+    cells = []
+    for v in vdpus:
+        grid = make_cpu_grid(v)
+        per = -(-rows // v)
+        for wname in WORKLOADS:
+            program, _ = _bind_workload(wname, grid, key, rows=rows,
+                                        features=features)
+            for bs_label in BATCH_SIZES:
+                if wname == "linreg" and bs_label == "full":
+                    continue          # base cells cover linreg full-batch
+                bs = None if bs_label == "full" else min(bs_label, per)
+                for k in WORKLOAD_CADENCES:
+                    us = time_fn(
+                        lambda k=k, bs=bs: program.fit(
+                            steps=timed_steps, merge_every=k,
+                            batch_size=bs),
+                        warmup=warmup, iters=iters)
+                    us_step = us / timed_steps
+                    cell = {
+                        "algo": wname, "workload": wname,
+                        "batch_size": bs_label,
+                        "n_vdpus": v, "precision": "fp32",
+                        "merge_every": k, "pipeline": "baseline",
+                        "plan": "avg",
+                        "us_per_step": round(us_step, 2),
+                        "steps_per_s": round(1e6 / us_step, 1),
+                    }
+                    cells.append(cell)
+                    print(f"{wname:11s} v={v:5d} fp32  batch="
+                          f"{str(bs_label):5s} k={k:2d}  "
+                          f"{cell['steps_per_s']:9.1f} steps/s",
+                          flush=True)
+    return cells
+
+
+def workload_accuracy_sweep(v, key, *, rows, features, steps):
+    """Accuracy-vs-workload: SVM and multinomial logreg under
+    MergePlan cadence {1, 4} x batch {full, minibatch} — the new
+    estimators must stay oracle-matching (tests pin the numpy-oracle
+    parity; this records the curves next to the throughput cells).
+    ``oracle_accuracy`` is the exact full-batch cadence-1 run of the
+    same estimator."""
+    curves = []
+    grid = make_cpu_grid(v)
+    per = -(-rows // v)
+    accuracy_fn = {"svm": svm_accuracy,
+                   "multinomial": multinomial_accuracy}
+    for wname in ("svm", "multinomial"):
+        program, (X, y) = _bind_workload(wname, grid, key, rows=rows,
+                                         features=features)
+        # the sweep's first cell (batch="full", k=1) IS the exact
+        # full-batch run — it doubles as the oracle row, so no
+        # redundant training pass
+        oracle = None
+        for bs_label in BATCH_SIZES:
+            bs = None if bs_label == "full" else min(bs_label, per)
+            for k in WORKLOAD_CADENCES:
+                res = program.fit(steps=steps, merge_every=k,
+                                  batch_size=bs)
+                acc = accuracy_fn[wname](res.state, X, y)
+                if oracle is None:
+                    assert bs is None and k == 1
+                    oracle = acc
+                entry = {
+                    "workload": wname, "n_vdpus": v,
+                    "merge_every": k, "batch_size": bs_label,
+                    "steps": steps, "accuracy": acc,
+                    "oracle_accuracy": oracle,
+                }
+                curves.append(entry)
+                print(f"workload-accuracy {wname:11s} k={k} "
+                      f"batch={str(bs_label):5s} acc={acc:.4f} "
+                      f"(oracle {oracle:.4f})", flush=True)
+    return curves
 
 
 def accuracy_sweep(v, cadences, key, *, rows, features, steps):
@@ -370,10 +504,15 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
 
     plan_vdpus = vdpus if smoke else PLAN_VDPUS_FULL
 
+    workload_vdpus = (vdpus[-1:] if smoke else WORKLOAD_VDPUS_FULL)
+
     X, y, _ = datasets.regression(key, rows, features)
     cells = throughput_sweep(vdpus, PRECISIONS, CADENCES, X, y,
                              timed_steps=timed_steps, warmup=warmup,
                              iters=iters, plan_vdpus=plan_vdpus)
+    cells += workload_sweep(workload_vdpus, key, rows=rows,
+                            features=features, timed_steps=timed_steps,
+                            warmup=warmup, iters=iters)
     acc_v = 16 if smoke else 64
     acc_steps = 60 if smoke else 200
     curves = accuracy_sweep(acc_v, CADENCES, key,
@@ -385,9 +524,11 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
     plan_curves = plan_accuracy_sweep(
         acc_v, key, rows=rows, features=features, steps=acc_steps,
         merge_every=4)
+    workload_curves = workload_accuracy_sweep(
+        acc_v, key, rows=rows, features=features, steps=acc_steps)
 
     result = {
-        "schema": "bench_scaling/v3",
+        "schema": "bench_scaling/v4",
         "config": {
             "backend": jax.default_backend(),
             "smoke": smoke,
@@ -402,19 +543,24 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
             "plan_n_vdpus": list(plan_vdpus),
             "plan_precisions": ["fp32"],
             "topk_frac": TOPK_FRAC,
+            "workloads": list(WORKLOADS),
+            "workload_n_vdpus": list(workload_vdpus),
+            "workload_merge_every": list(WORKLOAD_CADENCES),
+            "batch_sizes": list(BATCH_SIZES),
             "accuracy_n_vdpus": acc_v, "accuracy_steps": acc_steps,
         },
         "throughput": cells,
         "accuracy_vs_cadence": curves,
         "accuracy_vs_pipeline": pipe_curves,
         "accuracy_vs_plan": plan_curves,
+        "accuracy_vs_workload": workload_curves,
     }
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {os.path.abspath(out)} "
           f"({len(cells)} throughput cells, {len(curves)} accuracy rows, "
           f"{len(pipe_curves)} pipeline rows, {len(plan_curves)} plan "
-          f"rows)",
+          f"rows, {len(workload_curves)} workload rows)",
           flush=True)
     return result
 

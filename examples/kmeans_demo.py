@@ -1,19 +1,30 @@
-"""K-means on the PIM grid (paper workload #4): cluster recovery with the
-int16 fixed-point resident dataset, plus the paper's scaling story — the
-same run at several vDPU counts produces identical centroids — and the
-merge-cadence story: 4 vDPU-local Lloyd iterations per centroid merge
-(1/4 the host traffic) still recovers the clusters.
-
-Runs through the compiled lax.scan step engine (the default).
+"""K-means on the PIM grid (paper workload #4), through the Workload
+API: cluster recovery with the int16 fixed-point resident dataset, the
+paper's scaling story — the same run at several vDPU counts produces
+identical centroids — the merge-cadence story (4 vDPU-local Lloyd
+iterations per centroid merge = 1/4 the host traffic) and minibatch
+k-means (each iteration assigns a 32-row sample of every vDPU's
+resident partition, scaled to partition magnitude).
 
   PYTHONPATH=src python examples/kmeans_demo.py
+
+The estimator as a Workload plugin (same ``api.fit`` as every other
+algorithm; k-means just takes no labels):
+
+>>> import jax
+>>> from repro.core import datasets, make_cpu_grid
+>>> from repro.core.mlalgos import api, KMeans
+>>> Xd, _, _ = datasets.blobs(jax.random.PRNGKey(3), 512, 4, k=3)
+>>> res = api.fit(KMeans(k=3), make_cpu_grid(8), Xd, steps=5)
+>>> res.state.shape
+(3, 4)
 """
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import datasets, make_cpu_grid
-from repro.core.mlalgos import train_kmeans
+from repro.core.mlalgos import api, KMeans
 
 key = jax.random.PRNGKey(7)
 K = 6
@@ -21,22 +32,27 @@ X, assign, centers = datasets.blobs(key, 30_000, 12, k=K, spread=0.25)
 
 
 def report(res, label):
-    d = jnp.linalg.norm(res.centroids[:, None] - centers[None], axis=-1)
+    d = jnp.linalg.norm(res.state[:, None] - centers[None], axis=-1)
     recov = float(jnp.max(jnp.min(d, axis=0)))
     sse = float(res.history[-1]["sse"])
     print(f"  {label}  final_sse={sse:10.1f}  "
           f"worst centroid-recovery dist={recov:.3f}")
 
 
+workload = KMeans(k=K, precision="int16")
+
 print(f"{X.shape[0]} points, {K} true clusters")
 for vdpus in (16, 256):
-    grid = make_cpu_grid(vdpus)
-    res = train_kmeans(grid, X, K, iters=20, precision="int16")
+    res = api.fit(workload, make_cpu_grid(vdpus), X, steps=20)
     report(res, f"vdpus={vdpus:4d} cadence=1")
 print("centroids are independent of the grid size (exact merge). ✓")
 
 grid = make_cpu_grid(256)
-res = train_kmeans(grid, X, K, iters=20, precision="int16",
-                   merge_every=4)       # 1 centroid merge per 4 iters
+res = api.fit(workload, grid, X, steps=20,
+              merge_every=4)        # 1 centroid merge per 4 iters
 report(res, "vdpus= 256 cadence=4")
-print("merging 4x less often still recovers the clusters. ✓")
+res = api.fit(workload, grid, X, steps=20, merge_every=4,
+              batch_size=32)        # minibatch Lloyd on 32-row samples
+report(res, "vdpus= 256 cadence=4 batch=32")
+print("merging 4x less often still recovers the clusters — on sampled "
+      "minibatches too. ✓")

@@ -30,12 +30,22 @@ class PimMLConfig:
     merge_top_k_frac: float = 0.0
     # outer optimizer at the merge boundary: "avg" (plain average,
     # bit-exact with the pre-plan engine), "slowmo" (slow momentum,
-    # PIM-Opt / SlowMo), or "adaptive" (host-side cadence controller
-    # growing merge_every as merged deltas stabilize).
+    # PIM-Opt / SlowMo), "nesterov" (the lookahead variant, sharing the
+    # slowmo hyperparameters), or "adaptive" (host-side cadence
+    # controller growing merge_every as merged deltas stabilize).
     merge_outer: str = "avg"
     slowmo_beta: float = 0.5
     slowmo_outer_lr: float = 1.0
     adaptive_k_max: int = 16
+    # which Workload the config-driven entry points train (the dryrun's
+    # --workload/--batch-size defaults; bench_scaling's workload cells
+    # resolve their estimators through workload_spec() too), and the
+    # minibatch sampling axis (core.minibatch): rows sampled per vDPU
+    # per local step, 0 = full batch.
+    workload: str = "logreg"
+    batch_size: int = 0
+    svm_l2: float = 1e-3
+    mn_classes: int = 4
     # linear / logistic regression
     reg_rows: int = 65536
     reg_features: int = 64
@@ -59,7 +69,7 @@ class PimMLConfig:
         ``fit(merge_plan=...)`` spelling)."""
         from repro.distributed.compression import CompressionConfig
         from repro.distributed.merge_plan import (
-            MergePlan, AverageCommit, SlowMo, AdaptiveCadence)
+            MergePlan, AverageCommit, SlowMo, Nesterov, AdaptiveCadence)
 
         compression = None
         if self.merge_compression_bits or self.merge_top_k_frac:
@@ -69,6 +79,8 @@ class PimMLConfig:
         outers = {"avg": AverageCommit(),
                   "slowmo": SlowMo(beta=self.slowmo_beta,
                                    outer_lr=self.slowmo_outer_lr),
+                  "nesterov": Nesterov(beta=self.slowmo_beta,
+                                       outer_lr=self.slowmo_outer_lr),
                   "adaptive": AdaptiveCadence(k_max=self.adaptive_k_max)}
         if self.merge_outer not in outers:
             raise ValueError(
@@ -78,6 +90,38 @@ class PimMLConfig:
         return MergePlan(cadence=self.merge_every,
                          overlap=self.overlap_merge,
                          compression=compression, outer=outer)
+
+    def workload_spec(self, precision: str = "fp32"):
+        """The config's ``workload`` name as a constructed
+        ``core.mlalgos`` Workload plugin — the one name -> estimator
+        mapping the config-driven layers share (``launch.dryrun_pim``
+        lowers it, ``benchmarks.bench_scaling`` times it), instead of
+        each call site hand-wiring a ``train_*`` entry per
+        algorithm."""
+        from repro.core import mlalgos as ml
+
+        builders = {
+            "linreg": lambda: ml.LinReg(lr=0.05, precision=precision),
+            "logreg": lambda: ml.LogReg(lr=0.5, precision=precision,
+                                        sigmoid="lut"
+                                        if precision != "fp32"
+                                        else "exact"),
+            "svm": lambda: ml.LinearSVM(lr=0.1, l2=self.svm_l2,
+                                        precision=precision),
+            "multinomial": lambda: ml.MultinomialLogReg(
+                n_classes=self.mn_classes, lr=0.5, precision=precision,
+                softmax="lut" if precision != "fp32" else "exact"),
+            "kmeans": lambda: ml.KMeans(k=self.km_clusters,
+                                        precision=precision),
+            "dtree": lambda: ml.DecisionTree(max_depth=self.dt_depth,
+                                             n_bins=self.dt_bins,
+                                             n_classes=self.dt_classes),
+        }
+        if self.workload not in builders:
+            raise ValueError(
+                f"workload must be one of {sorted(builders)}, got "
+                f"{self.workload!r}")
+        return builders[self.workload]()
 
 
 CONFIG = PimMLConfig()

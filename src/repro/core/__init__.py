@@ -5,7 +5,9 @@ Layers:
   * ``quantize``  — fixed-point / hybrid-precision arithmetic (insight I1)
   * ``lut``       — lookup-table activations (insight I2)
   * ``datasets``  — synthetic training sets matching the paper's evaluation
-  * ``mlalgos``   — linreg / logreg / dtree / kmeans on the grid
+  * ``minibatch`` — on-device minibatch sampling (PIM-Opt's axis)
+  * ``mlalgos``   — the Workload estimator API + six plugins
+                    (linreg / logreg / dtree / kmeans / svm / multinomial)
 """
 
 from repro.core.pim import PimGrid, make_cpu_grid  # noqa: F401

@@ -122,6 +122,15 @@ def tanh_lut(n_entries: int = 1024, bound: float = 6.0) -> LutTable:
     return build_lut(np.tanh, -bound, bound, n_entries)
 
 
+def exp_lut(n_entries: int = 1024, bound: float = 16.0) -> LutTable:
+    """exp on [-bound, 0] — the softmax table (multinomial logistic
+    regression feeds *shifted* logits ``z − max(z) ≤ 0``, so the domain
+    is one-sided; beyond −16, exp is < 1.2e-7 and endpoint clamping is
+    exact enough for training, mirroring the sigmoid table's
+    saturation argument)."""
+    return build_lut(np.exp, -bound, 0.0, n_entries)
+
+
 def taylor_sigmoid(x: jax.Array, order: int = 7) -> jax.Array:
     """The baseline the paper compares LUTs against: odd Taylor/Padé-style
     polynomial of tanh(x/2)/2 + 1/2 around 0 (diverges for |x| >~ 3, which

@@ -1,7 +1,37 @@
-"""The paper's four ML training workloads on the PimGrid engine."""
+"""ML training workloads on the PimGrid engine.
 
+Every estimator is a :mod:`~repro.core.mlalgos.api` **Workload** plugin
+(``init_state / local_step / update / eval / merge_caps``) trained
+through the one generic entry point ``api.fit`` — the paper's four
+algorithms plus the PIM-Opt follow-up's linear SVM and the multinomial
+generalisation of logistic regression.  The ``train_*`` functions are
+thin per-algorithm wrappers kept for ergonomics and backward
+compatibility.
+"""
+
+from repro.core.mlalgos import api  # noqa: F401
+from repro.core.mlalgos.api import (Workload, MergeCaps, Program,  # noqa: F401
+                                    FitResult, fit)
 from repro.core.mlalgos.linreg import (train_linreg, linreg_predict,  # noqa: F401
-                                       make_linreg_step)
-from repro.core.mlalgos.logreg import train_logreg, logreg_predict  # noqa: F401
-from repro.core.mlalgos.kmeans import train_kmeans, kmeans_assign_points  # noqa: F401
-from repro.core.mlalgos.dtree import train_dtree, dtree_predict  # noqa: F401
+                                       make_linreg_step, LinReg)
+from repro.core.mlalgos.logreg import (train_logreg, logreg_predict,  # noqa: F401
+                                       LogReg)
+from repro.core.mlalgos.kmeans import (train_kmeans,  # noqa: F401
+                                       kmeans_assign_points, KMeans)
+from repro.core.mlalgos.dtree import (train_dtree, dtree_predict,  # noqa: F401
+                                      DecisionTree)
+from repro.core.mlalgos.svm import (train_svm, svm_predict,  # noqa: F401
+                                    svm_accuracy, LinearSVM)
+from repro.core.mlalgos.multinomial import (train_multinomial,  # noqa: F401
+                                            multinomial_predict,
+                                            multinomial_accuracy,
+                                            MultinomialLogReg)
+
+WORKLOADS = {
+    "linreg": LinReg,
+    "logreg": LogReg,
+    "kmeans": KMeans,
+    "dtree": DecisionTree,
+    "svm": LinearSVM,
+    "multinomial": MultinomialLogReg,
+}

@@ -1,0 +1,368 @@
+"""Workload — the unified estimator API over the PimGrid engine.
+
+Before this layer, each of the paper's algorithms hand-wired its own
+``train_*`` entry point, so every new fit axis (cadence, the merge
+pipeline, merge plans) had to be threaded through four signatures, the
+Trainer, the configs, the dry-run and the benchmarks separately — and
+capability gaps (dtree's discrete split commits) were special-cased at
+call sites.  A **Workload** packages what is actually per-algorithm:
+
+    init_state(consts)            -> the model pytree
+    local_step(consts, state, sl) -> per-vDPU partial statistics
+    update(consts, state, merged) -> (state', metrics)   # the host step
+    eval(state, X, y)             -> quality metrics
+    merge_caps                    -> which merge-plan axes the algorithm
+                                     can honour (declared, not special-
+                                     cased — see MergeCaps)
+
+plus ``prepare(grid, X, y) -> (data, n, consts)``, the one-time
+resident placement (quantize + ``shard_rows``).  Everything else — the
+scan engine, merge plans, minibatch sampling, the Trainer, benchmarks,
+the dry-run — is generic over the protocol: a new estimator is a
+~100-line plugin (``svm.py`` and ``multinomial.py`` are the proof).
+
+``bind`` assembles a :class:`Program`: the closures ``PimGrid.fit``
+consumes, built once so repeated fits hit the engine's signature-keyed
+compile cache (the workload instance and the trace-time constants ride
+in the closures' default args, which ``merge_plan.fn_signature`` keys
+by value for hashable frozen dataclasses and primitives — two equal
+estimators share a runner, two different hyperparameter sets never
+collide).
+
+DESIGN — the minibatch axis (``fit(batch_size=b)``)
+---------------------------------------------------
+
+``batch_size=b`` samples ``b`` of the resident per-vDPU rows each local
+step *inside* the compiled scan — a deterministic on-device permutation
+schedule with epoch-exact coverage (``core.minibatch``; PIM-Opt's
+sampling model).  It is a pure transformation of the engine triple, so
+it composes with every ``MergePlan`` axis: cadence-k local SGD runs on
+minibatches exactly as in PIM-Opt, overlap and EF compression apply
+unchanged.  ``batch_size=None`` (default) bypasses the sampler — the
+bit-exact full-batch path.  Stateful outer optimizers (SlowMo,
+Nesterov) are refused with ``batch_size``: their momentum would
+integrate the sampler's step counter off its integer grid.
+
+Example — the generic entry point, three estimators, one code path:
+
+>>> import jax
+>>> from repro.core import datasets, make_cpu_grid
+>>> from repro.core.mlalgos import api, LinReg, LinearSVM
+>>> X, y, _ = datasets.regression(jax.random.PRNGKey(0), 512, 8)
+>>> grid = make_cpu_grid(8)
+>>> res = api.fit(LinReg(lr=0.05), grid, X, y, steps=20)
+>>> len(res.history)
+20
+>>> mini = api.fit(LinReg(lr=0.05), grid, X, y, steps=20,
+...                batch_size=16, merge_every=4)
+>>> mini.state.shape
+(8,)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import minibatch as mb
+from repro.core.pim import PimGrid
+
+
+# ---------------------------------------------------------------------------
+# capability flags
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class MergeCaps:
+    """Which merge-plan / sampling axes a workload can honour.
+
+    Call sites never special-case algorithms: :func:`fit` calls
+    :meth:`constrain`, which degrades an unsupported request to the
+    exact default *and warns* (the structured
+    ``merge_plan.MergeFallbackWarning``), carrying the workload's own
+    ``reason``.  The default is "everything" — gradient-style
+    estimators whose state is an averageable float pytree.
+    """
+
+    cadence: bool = True
+    overlap: bool = True
+    compression: bool = True
+    outer: bool = True
+    minibatch: bool = True
+    reason: str = ""
+
+    @classmethod
+    def exact_only(cls, reason: str) -> "MergeCaps":
+        """Merge-every-step, full-batch only (dtree's discrete commits)."""
+        return cls(cadence=False, overlap=False, compression=False,
+                   outer=False, minibatch=False, reason=reason)
+
+    def constrain(self, name: str, plan, batch_size: Optional[int]):
+        """Degrade ``(plan, batch_size)`` to what the workload supports;
+        one structured warning lists everything dropped."""
+        from repro.distributed import merge_plan as mp
+
+        dropped = []
+        changes: dict = {}
+        if plan.cadence > 1 and not self.cadence:
+            dropped.append(f"merge_every={plan.cadence}")
+            changes["cadence"] = 1
+        if plan.overlap and not self.overlap:
+            dropped.append("overlap_merge")
+            changes["overlap"] = False
+        if plan.compression is not None and not self.compression:
+            dropped.append("merge_compression")
+            changes["compression"] = None
+        if type(plan.outer) is not mp.AverageCommit and not self.outer:
+            dropped.append(f"outer={type(plan.outer).__name__}")
+            changes["outer"] = mp.AverageCommit()
+        if batch_size is not None and not self.minibatch:
+            dropped.append(f"batch_size={batch_size}")
+            batch_size = None
+        if dropped:
+            mp.warn_fallback(name, " + ".join(dropped), self.reason)
+            plan = dataclasses.replace(plan, **changes)
+        return plan, batch_size
+
+
+# ---------------------------------------------------------------------------
+# the protocol
+# ---------------------------------------------------------------------------
+
+
+class Workload:
+    """Base estimator.  Subclasses are frozen dataclasses holding only
+    hyperparameters (so equal configurations share compiled runners)
+    and implement the five protocol members plus ``prepare``.
+
+    ``consts`` is the dict ``prepare`` returns next to the resident
+    data: the *trace-time constants* the step functions read (row
+    count, feature count, quantization scales).  It is captured in the
+    assembled closures — primitives key the compile cache by value,
+    arrays by identity (the quantized paths re-quantize per bind, so
+    their keys never repeat, exactly like the pre-protocol closures).
+    Keys starting with ``"_"`` are bind-time-only (read by
+    ``init_state``, excluded from the step closures and their cache
+    keys — kmeans' initial centroids live there).
+    """
+
+    name: str = "workload"
+    merge_caps: MergeCaps = MergeCaps()
+
+    # -- protocol ------------------------------------------------------
+
+    def prepare(self, grid: PimGrid, X, y=None):
+        """One-time resident placement: returns ``(data, n, consts)``."""
+        raise NotImplementedError
+
+    def init_state(self, consts: dict):
+        raise NotImplementedError
+
+    def local_step(self, consts: dict, state, sl):
+        """Partial statistics over one vDPU's resident slice."""
+        raise NotImplementedError
+
+    def update(self, consts: dict, state, merged):
+        """Host-side commit of the merged statistics ->
+        ``(state', metrics)``."""
+        raise NotImplementedError
+
+    def eval(self, state, X, y=None) -> dict:
+        raise NotImplementedError
+
+    # -- engine glue ---------------------------------------------------
+
+    def bind(self, grid: PimGrid, X, y=None) -> "Program":
+        """Shard the dataset and assemble the engine closures once."""
+        data, n, consts = self.prepare(grid, X, y)
+        return Program.assemble(self, grid, data, n, consts)
+
+    def run(self, grid: PimGrid, X, y=None, *, steps: int, plan,
+            batch_size: Optional[int], engine: str, scan_chunk: int,
+            merge_state: Optional[dict], callback: Optional[Callable],
+            sample_seed: int) -> "FitResult":
+        """Train-from-raw-arrays entry (already caps-constrained by
+        :func:`fit`).  The default is bind + the generic engine loop;
+        workloads whose training is not a ``grid.fit`` loop (dtree's
+        level-wise host loop) override this."""
+        return self.bind(grid, X, y)._run(
+            steps=steps, plan=plan, batch_size=batch_size, engine=engine,
+            scan_chunk=scan_chunk, merge_state=merge_state,
+            callback=callback, sample_seed=sample_seed)
+
+
+@dataclasses.dataclass
+class FitResult:
+    """What every workload fit returns: the trained state and one
+    metrics entry per local step."""
+
+    state: Any
+    history: list
+    workload: Workload
+
+    def eval(self, X, y=None) -> dict:
+        return self.workload.eval(self.state, X, y)
+
+
+@dataclasses.dataclass
+class Program:
+    """A workload bound to a grid and a resident dataset: the stable
+    ``(local_fn, update_fn, init_state)`` triple plus the placement.
+    Benchmarks bind once and sweep fit options against stable
+    compile-cache keys; ``train_*`` binds per call (same keys when the
+    hyperparameters and dataset scales allow — see the module
+    docstring)."""
+
+    workload: Workload
+    grid: PimGrid
+    data: Any
+    n: int
+    consts: dict
+    local_fn: Callable
+    update_fn: Callable
+    state0: Any
+    _mb_cache: dict = dataclasses.field(default_factory=dict, repr=False)
+
+    @classmethod
+    def assemble(cls, workload: Workload, grid: PimGrid, data, n,
+                 consts: dict) -> "Program":
+        # hyperparameters and constants ride in the default args: the
+        # compile cache keys them by value (hashable dataclasses,
+        # primitives) or identity (arrays) — see merge_plan.fn_signature.
+        # Keys starting with "_" are bind-time-only (init_state inputs
+        # like kmeans' initial centroids) and stay out of the step
+        # closures, so they never poison an otherwise value-stable key.
+        step_consts = {k: v for k, v in consts.items()
+                       if not k.startswith("_")}
+
+        def local_fn(state, sl, _w=workload, _c=step_consts):
+            return _w.local_step(_c, state, sl)
+
+        def update_fn(state, merged, _w=workload, _c=step_consts):
+            return _w.update(_c, state, merged)
+
+        return cls(workload=workload, grid=grid, data=data, n=n,
+                   consts=consts, local_fn=local_fn, update_fn=update_fn,
+                   state0=workload.init_state(consts))
+
+    @property
+    def rows_per_vdpu(self) -> int:
+        return int(self.data["w"].shape[1])
+
+    def _triple(self, batch_size: Optional[int], sample_seed: int):
+        """The engine triple, minibatch-wrapped when asked.  Wrapped
+        triples are cached per ``(batch_size, seed)`` so repeated fits
+        keep stable compile-cache keys."""
+        if batch_size is None:
+            return self.local_fn, self.update_fn, self.state0, None
+        key = (batch_size, sample_seed)
+        if key not in self._mb_cache:
+            lf, uf, s0, unwrap = mb.minibatch_fns(
+                self.local_fn, self.update_fn, self.state0,
+                rows_per_vdpu=self.rows_per_vdpu, batch_size=batch_size,
+                seed=sample_seed)
+            self._mb_cache[key] = (lf, uf, s0, unwrap)
+        return self._mb_cache[key]
+
+    def fit(self, *, steps: int, batch_size: Optional[int] = None,
+            engine: str = "scan", scan_chunk: int = 32,
+            merge_every: int = 1, overlap_merge: bool = False,
+            merge_compression=None, merge_plan=None,
+            merge_state: Optional[dict] = None,
+            callback: Optional[Callable] = None,
+            sample_seed: int = 0) -> FitResult:
+        """Train on the bound dataset (same option surface as
+        :func:`fit`, minus the binding)."""
+        from repro.distributed import merge_plan as mp
+
+        plan = mp.MergePlan.resolve(
+            merge_plan, merge_every=merge_every,
+            overlap_merge=overlap_merge,
+            merge_compression=merge_compression)
+        plan, batch_size = self.workload.merge_caps.constrain(
+            self.workload.name, plan, batch_size)
+        return self._run(steps=steps, plan=plan, batch_size=batch_size,
+                         engine=engine, scan_chunk=scan_chunk,
+                         merge_state=merge_state, callback=callback,
+                         sample_seed=sample_seed)
+
+    def _run(self, *, steps, plan, batch_size, engine, scan_chunk,
+             merge_state, callback, sample_seed) -> FitResult:
+        if batch_size is not None and not plan.outer.plain_commit:
+            raise ValueError(
+                f"batch_size={batch_size} cannot compose with the "
+                f"{type(plan.outer).__name__} outer optimizer: the "
+                f"sampler's step counter rides in the merged state and "
+                f"a stateful outer commit would integrate it into its "
+                f"momentum, breaking the epoch schedule (plain average "
+                f"and adaptive-cadence commits keep it exact)")
+        local_fn, update_fn, state0, unwrap = self._triple(
+            batch_size, sample_seed)
+        cb = callback
+        if unwrap is not None and callback is not None:
+            def cb(step, state, metrics, _u=unwrap, _cb=callback):
+                return _cb(step, _u(state), metrics)
+        state, history = self.grid.fit(
+            init_state=state0, local_fn=local_fn, update_fn=update_fn,
+            data=self.data, steps=steps, engine=engine,
+            scan_chunk=scan_chunk, merge_plan=plan,
+            merge_state=merge_state, callback=cb)
+        if unwrap is not None:
+            state = unwrap(state)
+        return FitResult(state=state, history=history,
+                         workload=self.workload)
+
+    def step_fn(self, *, batch_size: Optional[int] = None,
+                sample_seed: int = 0):
+        """A jitted merge-per-step function for external drivers (the
+        fault-tolerant ``Trainer``): ``step(state, batch) -> (state,
+        metrics)`` over the resident data (``batch`` is ignored — the
+        dataset never moves, insight I4).  Returns ``(step, state0)``;
+        with ``batch_size`` the state carries the sampler counter, so
+        checkpoint/replay restores the schedule position for free."""
+        local_fn, update_fn, state0, _ = self._triple(
+            batch_size, sample_seed)
+        grid, data = self.grid, self.data
+
+        @jax.jit
+        def step(state, batch):
+            merged = grid.map_reduce(local_fn, state, data)
+            return update_fn(state, merged)
+
+        return step, state0
+
+
+# ---------------------------------------------------------------------------
+# the generic entry point
+# ---------------------------------------------------------------------------
+
+
+def fit(workload: Workload, grid: PimGrid, X, y=None, *, steps: int,
+        batch_size: Optional[int] = None, engine: str = "scan",
+        scan_chunk: int = 32, merge_every: int = 1,
+        overlap_merge: bool = False, merge_compression=None,
+        merge_plan=None, merge_state: Optional[dict] = None,
+        callback: Optional[Callable] = None,
+        sample_seed: int = 0) -> FitResult:
+    """Train any workload on the grid — THE entry point every layer
+    above the algorithms (Trainer, configs, dry-run, benchmarks,
+    examples) goes through.  Resolves the merge-plan spelling once,
+    applies the workload's ``merge_caps`` (unsupported axes degrade
+    with a ``MergeFallbackWarning``), and dispatches to the workload's
+    ``run`` — the generic engine loop for gradient-style estimators,
+    an algorithm-owned loop for the rest (dtree)."""
+    from repro.distributed import merge_plan as mp
+
+    plan = mp.MergePlan.resolve(
+        merge_plan, merge_every=merge_every, overlap_merge=overlap_merge,
+        merge_compression=merge_compression)
+    plan, batch_size = workload.merge_caps.constrain(
+        workload.name, plan, batch_size)
+    return workload.run(grid, X, y, steps=steps, plan=plan,
+                        batch_size=batch_size, engine=engine,
+                        scan_chunk=scan_chunk, merge_state=merge_state,
+                        callback=callback, sample_seed=sample_seed)

@@ -21,6 +21,16 @@ workload PIM/TPU friendly):
 
 The tree is stored level-wise in fixed-size arrays (node i's children are
 2i/2i+1), so every step is jittable with static shapes.
+
+As a :class:`~repro.core.mlalgos.api.Workload`, the tree is the one
+estimator whose capabilities are *not* the default: its update is a
+discrete argmax, so it declares ``MergeCaps.exact_only`` — cadence,
+the merge pipeline, outer optimizers and minibatching all degrade to
+the exact merge-per-level loop with a structured
+``MergeFallbackWarning`` (emitted by the generic caps machinery, not
+special-cased here or at any call site), and its training loop is an
+algorithm-owned ``run`` override (level-wise host loop, not a
+``grid.fit`` scan).
 """
 
 from __future__ import annotations
@@ -32,6 +42,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core.mlalgos import api
 from repro.core.pim import PimGrid
 from repro.kernels import dispatch
 
@@ -108,162 +119,207 @@ def _best_splits(H):
     return best_f, best_thr, best_gain, node_class.astype(jnp.int32), node_count
 
 
+@dataclasses.dataclass(frozen=True)
+class DecisionTree(api.Workload):
+    """Level-wise histogram CART.
+
+    Why ``MergeCaps.exact_only``: a tree level's "update" is a
+    *discrete* argmax — the host picks one (feature, threshold) per
+    node from the globally merged histogram.  vDPU-local updates would
+    commit *divergent topologies* (different split features per shard),
+    and tree structures cannot be averaged the way weight vectors or
+    centroids can, so there is no meaningful resync; the level's split
+    commit also *consumes* the merged histogram (no independent
+    next-level compute to overlap with — re-routing rows needs the
+    committed splits), and the histogram is count data whose argmax
+    must be exact, which rules the compression axis out too.
+    Minibatching a level would subsample the counts the argmax needs.
+    The capability declaration makes every call site (``api.fit``, the
+    Trainer, the dry-run, benchmarks) degrade-and-warn generically.
+    """
+
+    max_depth: int = 5
+    n_bins: int = 32
+    n_classes: int = 2
+    min_samples_split: int = 2
+
+    name = "dtree"
+    merge_caps = api.MergeCaps.exact_only(
+        "discrete split commits cannot be averaged across vDPUs "
+        "(the level's argmax consumes the exact merged histogram)")
+
+    # -- protocol ------------------------------------------------------
+    #
+    # The per-level pieces map onto the protocol (local_step = the
+    # level histogram, update = the host split commit is host-side
+    # python below), but training is not a ``grid.fit`` scan: ``run``
+    # owns the level loop, so ``update`` host logic lives there.
+
+    def prepare(self, grid: PimGrid, X, y=None):
+        Xbin, edges = quantize_features(X, self.n_bins)
+        data, n = grid.shard_rows(Xbin, jnp.asarray(y, jnp.int32))
+        return data, n, {"n": n, "_edges": edges}
+
+    def init_state(self, consts):
+        n_total = 2 ** (self.max_depth + 1) - 1
+        return DTree(feature=jnp.full((n_total,), -1, jnp.int32),
+                     threshold=jnp.zeros((n_total,), jnp.int32),
+                     leaf_value=jnp.zeros((n_total,), jnp.int32),
+                     bin_edges=consts["_edges"],
+                     max_depth=self.max_depth, n_classes=self.n_classes)
+
+    def local_step(self, consts, state, sl):
+        """One level's split statistics for the nodes under
+        construction (``sl`` must carry the per-row ``nidx`` leaf)."""
+        n_nodes = consts["n_nodes"]
+        return {"H": dispatch.level_histogram(
+            sl["nidx"], sl["X"], sl["y0"], sl["w"],
+            n_nodes=n_nodes, n_bins=self.n_bins,
+            n_classes=self.n_classes)}
+
+    def eval(self, state, X, y=None) -> dict:
+        out = {}
+        if y is not None:
+            pred = dtree_predict(state, X)
+            out["accuracy"] = float(jnp.mean(pred == jnp.asarray(y)))
+        return out
+
+    # -- the level-wise training loop ----------------------------------
+
+    def run(self, grid: PimGrid, X, y=None, *, steps=None, plan=None,
+            batch_size=None, engine="scan", scan_chunk=32,
+            merge_state=None, callback=None,
+            sample_seed=0) -> api.FitResult:
+        """Train the tree (``steps`` is ignored — the unit of work is a
+        level and the tree trains to ``max_depth``).  ``plan`` arrives
+        already degraded to the exact default by ``merge_caps``."""
+        data, _, consts = self.prepare(grid, X, y)
+        edges = consts["_edges"]
+        max_depth, n_bins, n_classes = (self.max_depth, self.n_bins,
+                                        self.n_classes)
+        # per-row node index rides with the resident data and is updated
+        # in place each level (the paper re-routes rows the same way)
+        node_idx = jax.tree.map(
+            lambda a: jnp.zeros(a.shape[:2], jnp.int32), data["w"])
+
+        # feature/threshold are allocated for the FULL tree (leaf level
+        # stays -1) so prediction-time lookups are always in bounds.
+        n_total = 2 ** (max_depth + 1) - 1
+        feature = np.full((n_total,), -1, np.int32)
+        threshold = np.zeros((n_total,), np.int32)
+        leaf_value = np.zeros((n_total,), np.int32)
+        history = []
+        reached_depth = 0
+
+        def level_hist_fn(n_nodes):
+            level_consts = dict(consts)
+            level_consts["n_nodes"] = n_nodes
+
+            @jax.jit
+            def level_hist(node_idx, data):
+                def local_fn(_, sl):
+                    return self.local_step(level_consts, (), sl)
+                dat = dict(data)
+                dat["nidx"] = node_idx
+                return grid.map_reduce(local_fn, (), dat)["H"]
+
+            return level_hist
+
+        for depth in range(max_depth):
+            n_nodes = 2 ** depth
+            level_off = n_nodes - 1                  # first node id at depth
+
+            H = level_hist_fn(n_nodes)(node_idx, data)
+            bf, bthr, bgain, bclass, bcount = jax.device_get(
+                jax.jit(_best_splits)(H))
+
+            # host commits splits (the paper's "host selects best split")
+            made_split = np.zeros((n_nodes,), bool)
+            for m in range(n_nodes):
+                gid = level_off + m
+                leaf_value[gid] = int(bclass[m])
+                can = (np.isfinite(bgain[m]) and bgain[m] > 1e-9
+                       and bcount[m] >= self.min_samples_split)
+                if can:
+                    feature[gid] = int(bf[m])
+                    threshold[gid] = int(bthr[m])
+                    made_split[m] = True
+            history.append({"depth": depth,
+                            "splits": int(made_split.sum()),
+                            "mean_gain": float(np.nan_to_num(
+                                np.where(made_split, bgain, 0.0).mean()))})
+            if not made_split.any():
+                break
+            reached_depth = depth + 1
+
+            # re-route rows: new local node id = 2*old + go_right; rows
+            # at leaf-ized nodes keep a frozen id (they map to a dead
+            # subtree slot whose leaf_value is propagated below)
+            feat_l = jnp.asarray(feature[level_off:level_off + n_nodes])
+            thr_l = jnp.asarray(threshold[level_off:level_off + n_nodes])
+
+            @jax.jit
+            def reroute(node_idx, Xb, feat_l=feat_l, thr_l=thr_l):
+                f = jnp.maximum(feat_l[node_idx], 0)
+                t = thr_l[node_idx]
+                xv = jnp.take_along_axis(Xb, f[..., None], axis=-1)[..., 0]
+                go_right = (xv > t).astype(jnp.int32)
+                return node_idx * 2 + go_right
+
+            node_idx = reroute(node_idx, data["X"])
+
+        # Final-level leaf values: one more histogram pass assigns every
+        # deepest node its majority class (the paper's last host merge).
+        if reached_depth > 0:
+            n_nodes = 2 ** reached_depth
+            level_off = n_nodes - 1
+            Hf = np.asarray(jax.device_get(
+                level_hist_fn(n_nodes)(node_idx, data)))
+            counts = Hf[:, 0, :, :].sum(axis=1)          # (nodes, C)
+            for m in range(n_nodes):
+                gid = level_off + m
+                if counts[m].sum() > 0:
+                    leaf_value[gid] = int(counts[m].argmax())
+
+        # propagate classes downward so prediction at any dead/empty slot
+        # returns its nearest populated ancestor's majority class
+        for gid in range((n_total - 1) // 2):
+            for child in (2 * gid + 1, 2 * gid + 2):
+                if feature[gid] == -1:
+                    leaf_value[child] = leaf_value[gid]
+
+        tree = DTree(feature=jnp.asarray(feature),
+                     threshold=jnp.asarray(threshold),
+                     leaf_value=jnp.asarray(leaf_value),
+                     bin_edges=edges, max_depth=max_depth,
+                     n_classes=n_classes)
+        return api.FitResult(state=tree, history=history, workload=self)
+
+
 def train_dtree(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                 max_depth: int = 5, n_bins: int = 32, n_classes: int = 2,
                 min_samples_split: int = 2,
                 merge_every: int = 1, overlap_merge: bool = False,
                 merge_compression=None,
-                merge_plan=None) -> DTreeResult:
-    """``merge_every`` (and the composed ``merge_plan`` spelling) is
-    accepted for API uniformity with the other mlalgos but the tree
-    always merges every level (= every step).
-
-    Why the fallback: a tree level's "update" is a *discrete* argmax —
-    the host picks one (feature, threshold) per node from the globally
-    merged histogram.  vDPU-local updates would commit *divergent
-    topologies* (different split features per shard), and tree
-    structures cannot be averaged the way weight vectors or centroids
-    can, so there is no meaningful resync.  Cadence > 1 therefore runs
-    identically to cadence 1; the knob is validated and **warned about**
-    (a structured :class:`~repro.distributed.merge_plan.
-    MergeFallbackWarning`, once per fit) rather than silently dropped.
-
-    ``overlap_merge`` / ``merge_compression`` are likewise accepted but
-    inert, for the same discreteness reason on both axes: the level's
-    split commit *consumes* the merged histogram (there is no
-    independent next-level compute to overlap it with — re-routing rows
-    needs the committed splits), and the histogram is count data whose
-    argmax must be exact — the compression layer's integer-leaf policy
-    (``distributed.compression``) would route it past the quantizer
-    anyway.  (``CompressionConfig`` itself validates its width at
-    construction, so a typo'd config fails loudly everywhere.)
-    """
-    from repro.distributed import merge_plan as mp
-
-    if merge_every < 1:
-        raise ValueError(f"merge_every must be >= 1, got {merge_every}")
-    plan = mp.MergePlan.resolve(
-        merge_plan, merge_every=merge_every,
-        overlap_merge=overlap_merge,
-        merge_compression=merge_compression)
-    if plan.cadence > 1 or not plan.is_exact_default:
-        knobs = []
-        if plan.cadence > 1:
-            knobs.append(f"merge_every={plan.cadence}")
-        if plan.overlap:
-            knobs.append("overlap_merge")
-        if plan.compression is not None:
-            knobs.append("merge_compression")
-        if type(plan.outer).__name__ != "AverageCommit":
-            knobs.append(f"outer={type(plan.outer).__name__}")
-        mp.warn_fallback(
-            "train_dtree", " + ".join(knobs),
-            "discrete split commits cannot be averaged across vDPUs "
-            "(the level's argmax consumes the exact merged histogram)")
-    Xbin, edges = quantize_features(X, n_bins)
-    n, d = Xbin.shape
-    data, _ = grid.shard_rows(Xbin, jnp.asarray(y, jnp.int32))
-    # per-row node index rides with the resident data and is updated in
-    # place each level (the paper re-routes rows the same way)
-    node_idx = jax.tree.map(
-        lambda a: jnp.zeros(a.shape[:2], jnp.int32), data["w"])
-
-    # feature/threshold are allocated for the FULL tree (leaf level stays
-    # -1) so prediction-time lookups are always in bounds.
-    n_total = 2 ** (max_depth + 1) - 1
-    feature = np.full((n_total,), -1, np.int32)
-    threshold = np.zeros((n_total,), np.int32)
-    leaf_value = np.zeros((n_total,), np.int32)
-    history = []
-    reached_depth = 0
-
-    for depth in range(max_depth):
-        n_nodes = 2 ** depth
-        level_off = n_nodes - 1                      # first node id at depth
-
-        @jax.jit
-        def level_hist(node_idx, data, n_nodes=n_nodes):
-            def local_fn(_, sl):
-                return {"H": dispatch.level_histogram(
-                    sl["nidx"], sl["X"], sl["y0"], sl["w"],
-                    n_nodes=n_nodes, n_bins=n_bins, n_classes=n_classes)}
-            dat = dict(data)
-            dat["nidx"] = node_idx
-            return grid.map_reduce(local_fn, (), dat)["H"]
-
-        H = level_hist(node_idx, data)
-        bf, bthr, bgain, bclass, bcount = jax.device_get(
-            jax.jit(_best_splits)(H))
-
-        # host commits splits (the paper's "host selects best split")
-        made_split = np.zeros((n_nodes,), bool)
-        for m in range(n_nodes):
-            gid = level_off + m
-            leaf_value[gid] = int(bclass[m])
-            can = (np.isfinite(bgain[m]) and bgain[m] > 1e-9
-                   and bcount[m] >= min_samples_split)
-            if can:
-                feature[gid] = int(bf[m])
-                threshold[gid] = int(bthr[m])
-                made_split[m] = True
-        history.append({"depth": depth, "splits": int(made_split.sum()),
-                        "mean_gain": float(np.nan_to_num(
-                            np.where(made_split, bgain, 0.0).mean()))})
-        if not made_split.any():
-            break
-        reached_depth = depth + 1
-
-        # re-route rows: new local node id = 2*old + go_right; rows at
-        # leaf-ized nodes keep a frozen id (they map to a dead subtree slot
-        # whose leaf_value is propagated below)
-        feat_l = jnp.asarray(feature[level_off:level_off + n_nodes])
-        thr_l = jnp.asarray(threshold[level_off:level_off + n_nodes])
-
-        @jax.jit
-        def reroute(node_idx, Xb):
-            f = jnp.maximum(feat_l[node_idx], 0)
-            t = thr_l[node_idx]
-            xv = jnp.take_along_axis(Xb, f[..., None], axis=-1)[..., 0]
-            go_right = (xv > t).astype(jnp.int32)
-            return node_idx * 2 + go_right
-
-        node_idx = reroute(node_idx, data["X"])
-
-    # Final-level leaf values: one more histogram pass assigns every
-    # deepest node its majority class (the paper's last host merge).
-    if reached_depth > 0:
-        n_nodes = 2 ** reached_depth
-        level_off = n_nodes - 1
-
-        @jax.jit
-        def final_hist(node_idx, data, n_nodes=n_nodes):
-            def local_fn(_, sl):
-                return {"H": dispatch.level_histogram(
-                    sl["nidx"], sl["X"], sl["y0"], sl["w"],
-                    n_nodes=n_nodes, n_bins=n_bins, n_classes=n_classes)}
-            dat = dict(data)
-            dat["nidx"] = node_idx
-            return grid.map_reduce(local_fn, (), dat)["H"]
-
-        Hf = np.asarray(jax.device_get(final_hist(node_idx, data)))
-        counts = Hf[:, 0, :, :].sum(axis=1)          # (nodes, C)
-        for m in range(n_nodes):
-            gid = level_off + m
-            if counts[m].sum() > 0:
-                leaf_value[gid] = int(counts[m].argmax())
-
-    # propagate classes downward so prediction at any dead/empty slot
-    # returns its nearest populated ancestor's majority class
-    for gid in range((n_total - 1) // 2):
-        for child in (2 * gid + 1, 2 * gid + 2):
-            if feature[gid] == -1:
-                leaf_value[child] = leaf_value[gid]
-
-    tree = DTree(feature=jnp.asarray(feature),
-                 threshold=jnp.asarray(threshold),
-                 leaf_value=jnp.asarray(leaf_value),
-                 bin_edges=edges, max_depth=max_depth, n_classes=n_classes)
-    return DTreeResult(tree=tree, history=history)
+                merge_plan=None, batch_size: int | None = None
+                ) -> DTreeResult:
+    """``merge_every`` (and the composed ``merge_plan`` spelling, and
+    ``batch_size``) are accepted for API uniformity with the other
+    workloads, but the tree always merges every level (= every step) on
+    full partitions: its :class:`DecisionTree` workload declares
+    ``MergeCaps.exact_only`` and the generic capability machinery
+    degrades any other request with a structured
+    :class:`~repro.distributed.merge_plan.MergeFallbackWarning` (once
+    per fit) — see the workload docstring for why discrete split
+    commits cannot honour those axes."""
+    res = api.fit(
+        DecisionTree(max_depth=max_depth, n_bins=n_bins,
+                     n_classes=n_classes,
+                     min_samples_split=min_samples_split),
+        grid, X, y, steps=max_depth, merge_every=merge_every,
+        overlap_merge=overlap_merge, merge_compression=merge_compression,
+        merge_plan=merge_plan, batch_size=batch_size)
+    return DTreeResult(tree=res.state, history=res.history)
 
 
 def dtree_predict(tree: DTree, X: jax.Array) -> jax.Array:

@@ -14,6 +14,12 @@ reference).
 
 Fixed-point path (insight I1): points stored int16/int8 with a per-feature
 scale; distances computed in int32 off integer Gram terms.
+
+Implemented as a :class:`~repro.core.mlalgos.api.Workload` plugin;
+``train_kmeans`` is a thin wrapper.  ``batch_size=b`` gives minibatch
+k-means: each Lloyd iteration assigns a sampled subset per vDPU, with
+the partial sums/counts scaled to partition magnitude (the update stays
+the same safe-mean).
 """
 
 from __future__ import annotations
@@ -24,6 +30,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.mlalgos import api
 from repro.core.pim import PimGrid
 from repro.core import quantize as qz
 from repro.kernels import dispatch
@@ -38,48 +45,47 @@ class KMeansResult:
     precision: str
 
 
-def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
-                 iters: int = 20, precision: Precision = "fp32",
-                 seed: int = 0, engine: str = "scan",
-                 merge_every: int = 1, overlap_merge: bool = False,
-                 merge_compression=None,
-                 merge_state: dict | None = None,
-                 merge_plan=None) -> KMeansResult:
-    """``merge_every=m`` runs m vDPU-local Lloyd iterations between
-    centroid merges (each vDPU updates its own centroid copy from its
-    resident points; the merge averages the copies).  ``m=1`` is the
-    paper's exact merge-per-iteration algorithm, bit-exact with the
-    PR 1 engine.  ``overlap_merge``/``merge_compression`` select the
-    overlapped / compressed merge pipeline; the int8 wire quantizes the
-    float cluster sums/counts with error feedback (counts survive
-    because EF carries the rounding residual into the next merge)."""
-    n, d = X.shape
-    key = jax.random.PRNGKey(seed)
-    init_idx = jax.random.choice(key, n, (k,), replace=False)
-    c0 = jnp.asarray(X)[init_idx]
+@dataclasses.dataclass(frozen=True)
+class KMeans(api.Workload):
+    """Lloyd's algorithm; state = the (k, d) centroid matrix."""
 
-    if precision == "fp32":
-        data, _ = grid.shard_rows(X)
+    k: int = 8
+    precision: Precision = "fp32"
+    seed: int = 0
 
-        def local_fn(centroids, sl):
-            sums, counts, sse = dispatch.kmeans_partials(
-                sl["X"], centroids, sl["w"])
-            return {"sums": sums, "counts": counts, "sse": sse}
-    else:
-        bits = {"int16": 16, "int8": 8}[precision]
-        Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
-        data, _ = grid.shard_rows(Xq.values)
-        x_scale = Xq.scale            # (1,d)
+    name = "kmeans"
 
-        def local_fn(centroids, sl):
+    def prepare(self, grid: PimGrid, X, y=None):
+        n_rows = X.shape[0]
+        key = jax.random.PRNGKey(self.seed)
+        init_idx = jax.random.choice(key, n_rows, (self.k,),
+                                     replace=False)
+        c0 = jnp.asarray(X)[init_idx]
+        if self.precision == "fp32":
+            data, n = grid.shard_rows(X)
+            consts = {"n": n, "_c0": c0}
+        else:
+            bits = {"int16": 16, "int8": 8}[self.precision]
+            Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+            data, n = grid.shard_rows(Xq.values)
+            consts = {"n": n, "_c0": c0, "x_scale": Xq.scale}  # (1,d)
+        return data, n, consts
+
+    def init_state(self, consts):
+        return consts["_c0"]
+
+    def local_step(self, consts, centroids, sl):
+        if self.precision == "fp32":
+            xf = sl["X"]
+        else:
             # Dequantize-on-stream: the resident copy is integer; the
             # per-feature scale rides in registers (paper's bank layout).
-            xf = sl["X"].astype(jnp.float32) * x_scale
-            sums, counts, sse = dispatch.kmeans_partials(
-                xf, centroids, sl["w"])
-            return {"sums": sums, "counts": counts, "sse": sse}
+            xf = sl["X"].astype(jnp.float32) * consts["x_scale"]
+        sums, counts, sse = dispatch.kmeans_partials(
+            xf, centroids, sl["w"])
+        return {"sums": sums, "counts": counts, "sse": sse}
 
-    def update_fn(centroids, merged):
+    def update(self, consts, centroids, merged):
         counts = merged["counts"]
         safe = jnp.maximum(counts, 1.0)[:, None]
         new_c = merged["sums"] / safe
@@ -88,15 +94,37 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
         moved = jnp.max(jnp.abs(new_c - centroids))
         return new_c, {"sse": merged["sse"], "moved": moved}
 
-    centroids, history = grid.fit(init_state=c0, local_fn=local_fn,
-                                  update_fn=update_fn, data=data,
-                                  steps=iters, engine=engine,
-                                  merge_every=merge_every,
-                                  overlap_merge=overlap_merge,
-                                  merge_compression=merge_compression,
-                                  merge_state=merge_state,
-                                  merge_plan=merge_plan)
-    return KMeansResult(centroids=centroids, history=history,
+    def eval(self, state, X, y=None) -> dict:
+        assign = kmeans_assign_points(state, X)
+        d2 = jnp.sum((jnp.asarray(X) - state[assign]) ** 2)
+        return {"sse": float(d2)}
+
+
+def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
+                 iters: int = 20, precision: Precision = "fp32",
+                 seed: int = 0, engine: str = "scan",
+                 merge_every: int = 1, overlap_merge: bool = False,
+                 merge_compression=None,
+                 merge_state: dict | None = None,
+                 merge_plan=None, batch_size: int | None = None,
+                 sample_seed: int = 0) -> KMeansResult:
+    """``merge_every=m`` runs m vDPU-local Lloyd iterations between
+    centroid merges (each vDPU updates its own centroid copy from its
+    resident points; the merge averages the copies).  ``m=1`` is the
+    paper's exact merge-per-iteration algorithm, bit-exact with the
+    PR 1 engine.  ``overlap_merge``/``merge_compression`` select the
+    overlapped / compressed merge pipeline; the int8 wire quantizes the
+    float cluster sums/counts with error feedback (counts survive
+    because EF carries the rounding residual into the next merge).
+    ``batch_size=b`` runs minibatch k-means on b sampled resident rows
+    per vDPU per iteration (``None`` = full partitions, exact)."""
+    res = api.fit(KMeans(k=k, precision=precision, seed=seed),
+                  grid, X, steps=iters, engine=engine,
+                  merge_every=merge_every, overlap_merge=overlap_merge,
+                  merge_compression=merge_compression,
+                  merge_state=merge_state, merge_plan=merge_plan,
+                  batch_size=batch_size, sample_seed=sample_seed)
+    return KMeansResult(centroids=res.state, history=res.history,
                         precision=precision)
 
 

@@ -9,6 +9,11 @@ partials and applies the GD step.  Three numeric paths, as in the paper:
     is quantized once (per-feature scales), the dot products run in
     integers with int32 accumulation, and only the merged gradient is
     rescaled to float for the update (paper's "hybrid precision").
+
+Implemented as a :class:`~repro.core.mlalgos.api.Workload` plugin —
+``train_linreg`` and ``make_linreg_step`` are thin wrappers over the
+protocol, so every engine axis (cadence, merge plans, ``batch_size``
+minibatching) applies without algorithm-side threading.
 """
 
 from __future__ import annotations
@@ -19,6 +24,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.mlalgos import api
 from repro.core.pim import PimGrid
 from repro.core import quantize as qz
 from repro.kernels import dispatch
@@ -39,66 +45,93 @@ def _quantize_dataset(X, y, bits):
     return Xq, yq
 
 
+@dataclasses.dataclass(frozen=True)
+class LinReg(api.Workload):
+    """GD linear regression (optionally hybrid fixed point)."""
+
+    lr: float = 0.1
+    precision: Precision = "fp32"
+    l2: float = 0.0
+
+    name = "linreg"
+
+    def prepare(self, grid: PimGrid, X, y=None):
+        d = X.shape[1]
+        if self.precision == "fp32":
+            data, n = grid.shard_rows(X, y)
+            consts = {"n": n, "d": d}
+        else:
+            bits = {"int16": 16, "int8": 8}[self.precision]
+            Xq, yq = _quantize_dataset(X, y, bits)
+            # Resident copy is the quantized one (paper: banks hold
+            # fixed point).  The scales are trace-time constants.
+            data, n = grid.shard_rows(Xq.values, yq.values)
+            consts = {"n": n, "d": d, "x_scale": Xq.scale,
+                      "y_scale": yq.scale}
+        return data, n, consts
+
+    def init_state(self, consts):
+        return jnp.zeros((consts["d"],), jnp.float32)
+
+    def local_step(self, consts, w, sl):
+        if self.precision == "fp32":
+            r = (sl["X"] @ w - sl["y0"]) * sl["w"]          # mask padding
+            g = sl["X"].T @ r
+            loss = jnp.sum(r * r)
+            return {"g": g, "loss": loss}
+        # The weight vector is (re)quantized each step inside the local
+        # step, so the resident data stays integer-only and every
+        # multiply is narrow with int32 accumulation (the paper's hybrid
+        # precision).  The per-feature data scale is folded INTO the
+        # weight before quantizing
+        # (pred_r = Σ_k Xq[r,k]·s_k·w_k = Σ_k Xq[r,k]·(s·w)q[k]),
+        # so the forward dot stays purely integer.
+        x_scale = consts["x_scale"]   # (1, d) broadcast against features
+        wq = qz.quantize_symmetric(w * x_scale[0], bits=16)
+        Xi = sl["X"]
+        # (R,d)i @ (d,1)i -> (R,) — int8-limb dots on the fxp_matmul
+        # Pallas kernel, int32 accumulate
+        acc = dispatch.hybrid_matmul(Xi, wq.values[:, None])[:, 0]
+        pred = acc * wq.scale
+        yf = sl["y0"].astype(jnp.float32) * consts["y_scale"]
+        r = (pred - yf) * sl["w"]
+        # gradient: g_k = s_k · Σ_r Xq[r,k]·rq[r] — per-feature scale
+        # factors out per output element, so the fixup is rank-1.
+        rq = qz.quantize_symmetric(r, bits=16)
+        gacc = dispatch.hybrid_matmul(Xi.T, rq.values[:, None])[:, 0]
+        g = gacc * (x_scale[0] * rq.scale)
+        return {"g": g, "loss": jnp.sum(r * r)}
+
+    def update(self, consts, w, merged):
+        n = consts["n"]
+        g = merged["g"] / n + self.l2 * w
+        loss = merged["loss"] / n
+        return w - self.lr * g, {"loss": loss}
+
+    def eval(self, state, X, y=None) -> dict:
+        pred = linreg_predict(state, X)
+        out = {}
+        if y is not None:
+            out["mse"] = float(jnp.mean((pred - y) ** 2))
+        return out
+
+
 def make_linreg_step(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                      lr: float = 0.1, precision: Precision = "fp32",
                      l2: float = 0.0):
     """Build the grid-engine pieces for one linreg problem.
 
     Returns ``(data, n, local_fn, update_fn, w0)`` ready for
-    ``grid.fit``.  Exposed separately from :func:`train_linreg` so
-    benchmarks can build the closures *once* and sweep ``fit`` options
-    (engine, cadence) against stable compile-cache keys — re-building
-    per timed call would measure retracing, not step rate (the
-    quantized paths capture fresh scale arrays, so their keys never
-    repeat across builds).
+    ``grid.fit`` — the bound :class:`LinReg` program's triple.  Exposed
+    separately from :func:`train_linreg` so benchmarks can build the
+    closures *once* and sweep ``fit`` options (engine, cadence) against
+    stable compile-cache keys — re-building per timed call would
+    measure retracing, not step rate (the quantized paths capture fresh
+    scale arrays, so their keys never repeat across builds).
     """
-    d = X.shape[1]
-
-    if precision == "fp32":
-        data, n = grid.shard_rows(X, y)
-
-        def local_fn(w, sl):
-            r = (sl["X"] @ w - sl["y0"]) * sl["w"]          # mask padding
-            g = sl["X"].T @ r
-            loss = jnp.sum(r * r)
-            return {"g": g, "loss": loss}
-    else:
-        bits = {"int16": 16, "int8": 8}[precision]
-        Xq, yq = _quantize_dataset(X, y, bits)
-        # Resident copy is the quantized one (paper: banks hold fixed point).
-        data, n = grid.shard_rows(Xq.values, yq.values)
-        x_scale = Xq.scale            # (1, d) broadcast against features
-        y_scale = yq.scale
-
-        # The weight vector is (re)quantized each step inside local_fn, so
-        # the resident data stays integer-only and every multiply is narrow
-        # with int32 accumulation (the paper's hybrid precision).  The
-        # per-feature data scale is folded INTO the weight before
-        # quantizing (pred_r = Σ_k Xq[r,k]·s_k·w_k = Σ_k Xq[r,k]·(s·w)q[k]),
-        # so the forward dot stays purely integer.
-        def local_fn(w, sl):
-            wq = qz.quantize_symmetric(w * x_scale[0], bits=16)
-            Xi = sl["X"]
-            # (R,d)i @ (d,1)i -> (R,) — int8-limb dots on the fxp_matmul
-            # Pallas kernel, int32 accumulate
-            acc = dispatch.hybrid_matmul(Xi, wq.values[:, None])[:, 0]
-            pred = acc * wq.scale
-            yf = sl["y0"].astype(jnp.float32) * y_scale
-            r = (pred - yf) * sl["w"]
-            # gradient: g_k = s_k · Σ_r Xq[r,k]·rq[r] — per-feature scale
-            # factors out per output element, so the fixup is rank-1.
-            rq = qz.quantize_symmetric(r, bits=16)
-            gacc = dispatch.hybrid_matmul(Xi.T, rq.values[:, None])[:, 0]
-            g = gacc * (x_scale[0] * rq.scale)
-            return {"g": g, "loss": jnp.sum(r * r)}
-
-    def update_fn(w, merged):
-        g = merged["g"] / n + l2 * w
-        loss = merged["loss"] / n
-        return w - lr * g, {"loss": loss}
-
-    w0 = jnp.zeros((d,), jnp.float32)
-    return data, n, local_fn, update_fn, w0
+    program = LinReg(lr=lr, precision=precision, l2=l2).bind(grid, X, y)
+    return (program.data, program.n, program.local_fn,
+            program.update_fn, program.state0)
 
 
 def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
@@ -108,25 +141,26 @@ def train_linreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
                  merge_every: int = 1, overlap_merge: bool = False,
                  merge_compression=None,
                  merge_state: dict | None = None,
-                 merge_plan=None) -> LinRegResult:
+                 merge_plan=None, batch_size: int | None = None,
+                 sample_seed: int = 0) -> LinRegResult:
     """``merge_every=k`` runs k vDPU-local GD steps between host merges
-    (PIM-Opt's minibatch-vs-full-batch axis); ``k=1`` is the paper's
+    (PIM-Opt's local-update axis); ``k=1`` is the paper's
     merge-per-step loop, bit-exact with the PR 1 engine.
     ``merge_plan`` is the canonical composed spelling (cadence ×
     overlap × compression × outer optimizer — see
     ``distributed.merge_plan``); ``overlap_merge``/``merge_compression``
-    remain as thin constructors for it.  All knobs off reproduces the
-    exact engine bit-for-bit."""
-    data, n, local_fn, update_fn, w0 = make_linreg_step(
-        grid, X, y, lr=lr, precision=precision, l2=l2)
-    w, history = grid.fit(init_state=w0, local_fn=local_fn,
-                          update_fn=update_fn, data=data, steps=steps,
-                          engine=engine, merge_every=merge_every,
-                          overlap_merge=overlap_merge,
-                          merge_compression=merge_compression,
-                          merge_state=merge_state,
-                          merge_plan=merge_plan)
-    return LinRegResult(w=w, history=history, precision=precision)
+    remain as thin constructors for it.  ``batch_size=b`` samples b of
+    the resident per-vDPU rows each local step (``core.minibatch``;
+    ``None`` = the untouched full-batch path).  All knobs off
+    reproduces the exact engine bit-for-bit."""
+    res = api.fit(LinReg(lr=lr, precision=precision, l2=l2), grid, X, y,
+                  steps=steps, engine=engine, merge_every=merge_every,
+                  overlap_merge=overlap_merge,
+                  merge_compression=merge_compression,
+                  merge_state=merge_state, merge_plan=merge_plan,
+                  batch_size=batch_size, sample_seed=sample_seed)
+    return LinRegResult(w=res.state, history=res.history,
+                        precision=precision)
 
 
 def linreg_predict(w: jax.Array, X: jax.Array) -> jax.Array:

@@ -10,7 +10,9 @@ the lookup table wins:
   * ``taylor`` — truncated series (the paper's losing baseline).
 
 Combined with the fixed-point path this reproduces the paper's accuracy
-parity table for logistic regression.
+parity table for logistic regression.  Implemented as a
+:class:`~repro.core.mlalgos.api.Workload` plugin; ``train_logreg`` is a
+thin wrapper over the protocol.
 """
 
 from __future__ import annotations
@@ -21,6 +23,7 @@ from typing import Literal
 import jax
 import jax.numpy as jnp
 
+from repro.core.mlalgos import api
 from repro.core.pim import PimGrid
 from repro.core import quantize as qz
 from repro.core import lut as lut_mod
@@ -53,48 +56,45 @@ def make_sigmoid(kind: Sigmoid, n_entries: int = 1024):
     raise ValueError(kind)
 
 
-def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
-                 lr: float = 0.5, steps: int = 100,
-                 precision: Precision = "fp32",
-                 sigmoid: Sigmoid = "exact",
-                 lut_entries: int = 1024,
-                 l2: float = 0.0, engine: str = "scan",
-                 merge_every: int = 1, overlap_merge: bool = False,
-                 merge_compression=None,
-                 merge_state: dict | None = None,
-                 merge_plan=None) -> LogRegResult:
-    """``merge_every=k`` runs k vDPU-local GD steps between host merges;
-    ``k=1`` is bit-exact with the PR 1 merge-per-step engine.
-    ``merge_plan`` composes the full merge configuration
-    (``distributed.merge_plan``); ``overlap_merge``/
-    ``merge_compression`` are its legacy constructors.  All off is
-    exact."""
-    d = X.shape[1]
-    sig = make_sigmoid(sigmoid, lut_entries)
+@dataclasses.dataclass(frozen=True)
+class LogReg(api.Workload):
+    """GD binary logistic regression (LUT sigmoid variants, hybrid
+    fixed point)."""
 
-    if precision == "fp32":
-        data, n = grid.shard_rows(X, y)
+    lr: float = 0.5
+    precision: Precision = "fp32"
+    sigmoid: Sigmoid = "exact"
+    lut_entries: int = 1024
+    l2: float = 0.0
 
-        def local_fn(w, sl):
+    name = "logreg"
+
+    def prepare(self, grid: PimGrid, X, y=None):
+        d = X.shape[1]
+        sig = make_sigmoid(self.sigmoid, self.lut_entries)
+        if self.precision == "fp32":
+            data, n = grid.shard_rows(X, y)
+            consts = {"n": n, "d": d, "sig": sig}
+        else:
+            bits = {"int16": 16, "int8": 8}[self.precision]
+            Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+            data, n = grid.shard_rows(Xq.values, y)
+            consts = {"n": n, "d": d, "sig": sig, "x_scale": Xq.scale}
+        return data, n, consts
+
+    def init_state(self, consts):
+        return jnp.zeros((consts["d"],), jnp.float32)
+
+    def local_step(self, consts, w, sl):
+        sig = consts["sig"]
+        if self.precision == "fp32":
             z = sl["X"] @ w
             p = sig(z)
             r = (p - sl["y0"]) * sl["w"]
             g = sl["X"].T @ r
-            # BCE loss with the *exact* log for metric reporting (the paper
-            # also reports accuracy computed on the host in float).
-            eps = 1e-7
-            pe = jnp.clip(jax.nn.sigmoid(z), eps, 1 - eps)
-            loss = -jnp.sum(sl["w"] * (sl["y0"] * jnp.log(pe)
-                                       + (1 - sl["y0"]) * jnp.log(1 - pe)))
-            return {"g": g, "loss": loss}
-    else:
-        bits = {"int16": 16, "int8": 8}[precision]
-        Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
-        data, n = grid.shard_rows(Xq.values, y)
-        x_scale = Xq.scale
-
-        def local_fn(w, sl):
+        else:
             # fold the per-feature data scale into the weight (see linreg)
+            x_scale = consts["x_scale"]
             wq = qz.quantize_symmetric(w * x_scale[0], bits=16)
             Xi = sl["X"]
             z = dispatch.hybrid_matmul(Xi, wq.values[:, None])[:, 0] \
@@ -104,26 +104,63 @@ def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
             rq = qz.quantize_symmetric(r, bits=16)
             gacc = dispatch.hybrid_matmul(Xi.T, rq.values[:, None])[:, 0]
             g = gacc * (x_scale[0] * rq.scale)
-            eps = 1e-7
-            pe = jnp.clip(jax.nn.sigmoid(z), eps, 1 - eps)
-            loss = -jnp.sum(sl["w"] * (sl["y0"] * jnp.log(pe)
-                                       + (1 - sl["y0"]) * jnp.log(1 - pe)))
-            return {"g": g, "loss": loss}
+        # BCE loss with the *exact* log for metric reporting (the paper
+        # also reports accuracy computed on the host in float).
+        eps = 1e-7
+        pe = jnp.clip(jax.nn.sigmoid(z), eps, 1 - eps)
+        loss = -jnp.sum(sl["w"] * (sl["y0"] * jnp.log(pe)
+                                   + (1 - sl["y0"]) * jnp.log(1 - pe)))
+        return {"g": g, "loss": loss}
 
-    def update_fn(w, merged):
-        g = merged["g"] / n + l2 * w
-        return w - lr * g, {"loss": merged["loss"] / n}
+    def update(self, consts, w, merged):
+        n = consts["n"]
+        g = merged["g"] / n + self.l2 * w
+        return w - self.lr * g, {"loss": merged["loss"] / n}
 
-    w0 = jnp.zeros((d,), jnp.float32)
-    w, history = grid.fit(init_state=w0, local_fn=local_fn,
-                          update_fn=update_fn, data=data, steps=steps,
-                          engine=engine, merge_every=merge_every,
-                          overlap_merge=overlap_merge,
-                          merge_compression=merge_compression,
-                          merge_state=merge_state,
-                          merge_plan=merge_plan)
-    return LogRegResult(w=w, history=history, precision=precision,
-                        sigmoid=sigmoid)
+    def eval(self, state, X, y=None) -> dict:
+        out = {}
+        if y is not None:
+            out["accuracy"] = accuracy(state, X, y)
+        return out
+
+    def spec_fns(self, *, features: int, rows: int):
+        """Spec-level engine fns for lowering without resident data
+        (``launch.dryrun_pim``): unit quantization scales, int8
+        resident dataset, the configured sigmoid."""
+        consts = {"n": rows, "d": features,
+                  "sig": make_sigmoid(self.sigmoid, self.lut_entries),
+                  "x_scale": jnp.ones((1, features), jnp.float32)}
+        program = api.Program.assemble(self, None, None, rows, consts)
+        return program.local_fn, program.update_fn, program.state0
+
+
+def train_logreg(grid: PimGrid, X: jax.Array, y: jax.Array, *,
+                 lr: float = 0.5, steps: int = 100,
+                 precision: Precision = "fp32",
+                 sigmoid: Sigmoid = "exact",
+                 lut_entries: int = 1024,
+                 l2: float = 0.0, engine: str = "scan",
+                 merge_every: int = 1, overlap_merge: bool = False,
+                 merge_compression=None,
+                 merge_state: dict | None = None,
+                 merge_plan=None, batch_size: int | None = None,
+                 sample_seed: int = 0) -> LogRegResult:
+    """``merge_every=k`` runs k vDPU-local GD steps between host merges;
+    ``k=1`` is bit-exact with the PR 1 merge-per-step engine.
+    ``merge_plan`` composes the full merge configuration
+    (``distributed.merge_plan``); ``overlap_merge``/
+    ``merge_compression`` are its legacy constructors.  ``batch_size=b``
+    samples b resident rows per vDPU per local step (``None`` = the
+    untouched full-batch path).  All off is exact."""
+    res = api.fit(
+        LogReg(lr=lr, precision=precision, sigmoid=sigmoid,
+               lut_entries=lut_entries, l2=l2),
+        grid, X, y, steps=steps, engine=engine, merge_every=merge_every,
+        overlap_merge=overlap_merge, merge_compression=merge_compression,
+        merge_state=merge_state, merge_plan=merge_plan,
+        batch_size=batch_size, sample_seed=sample_seed)
+    return LogRegResult(w=res.state, history=res.history,
+                        precision=precision, sigmoid=sigmoid)
 
 
 def logreg_predict(w: jax.Array, X: jax.Array) -> jax.Array:

@@ -178,6 +178,14 @@ def fn_signature(fn) -> tuple:
     so they can share a compiled runner.  Callers must keep the closure
     alive while the key is in use (the cache stores the functions next to
     the runner) so ``id()`` keys cannot be recycled.
+
+    Containers (tuples, string-keyed dicts) and *hashable* frozen
+    dataclasses key recursively / by value — the Workload layer
+    (``core.mlalgos.api``) captures the estimator instance and its
+    trace-time constants in default args, and two equal estimator
+    configurations must share a runner while two different
+    hyperparameter sets must never collide.  Anything unhashable
+    (arrays, live objects) still keys by identity.
     """
     code = getattr(fn, "__code__", None)
     if code is None:
@@ -185,6 +193,20 @@ def fn_signature(fn) -> tuple:
 
     def value_key(v):
         if isinstance(v, (int, float, bool, str, bytes, type(None))):
+            return v
+        if isinstance(v, tuple):
+            return tuple(value_key(x) for x in v)
+        if isinstance(v, dict):
+            try:
+                items = sorted(v.items(), key=lambda kv: kv[0])
+            except TypeError:
+                return id(v)
+            return ("dict",) + tuple((k, value_key(x)) for k, x in items)
+        if dataclasses.is_dataclass(v) and not isinstance(v, type):
+            try:
+                hash(v)
+            except TypeError:
+                return id(v)
             return v
         return id(v)
 
@@ -276,6 +298,41 @@ class SlowMo(OuterOptimizer):
     def _opt(self):
         from repro.optim.optimizers import slow_momentum
         return slow_momentum(self.outer_lr, beta=self.beta)
+
+    def init(self, state: Any) -> Any:
+        return self._opt().init(state)
+
+    def commit(self, anchor: Any, delta: Any, buf: Any):
+        pseudo_grad = jax.tree.map(lambda d: -d, delta)
+        return self._opt().update(pseudo_grad, buf, anchor)
+
+
+@dataclasses.dataclass(frozen=True)
+class Nesterov(OuterOptimizer):
+    """Nesterov-style outer momentum at merge boundaries — the
+    *lookahead* variant of :class:`SlowMo`'s heavy-ball outer step
+    (ROADMAP "Next": Nesterov / FedAdam-style outer optimizers; the
+    FedNAG shape of the PIM-Opt outer loop).
+
+    The merge delta is the negated pseudo-gradient ``g = −delta``; the
+    commit is Nesterov momentum with slow rate ``outer_lr`` and
+    momentum ``beta`` (``optim.optimizers.nesterov``):
+
+        m ← β·m + g,   state ← state − α·(g + β·m)
+
+    ``β=0, α=1`` recovers the plain average.  The buffer rides the
+    scan carry exactly like SlowMo's (``merge_state["momentum"]``,
+    Trainer-checkpointed in the v2 layout).
+    """
+
+    beta: float = 0.5
+    outer_lr: float = 1.0
+
+    plain_commit = False
+
+    def _opt(self):
+        from repro.optim.optimizers import nesterov
+        return nesterov(self.outer_lr, beta=self.beta)
 
     def init(self, state: Any) -> Any:
         return self._opt().init(state)

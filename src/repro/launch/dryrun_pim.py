@@ -7,22 +7,32 @@ os.environ.setdefault(
     "--xla_force_host_platform_device_count="
     + os.environ.get("REPRO_DRYRUN_DEVICES", "512"))
 
-"""Dry-run of the PAPER'S OWN workload at pod scale: logistic-regression
-GD on a PimGrid of 4,096 virtual DPUs spread over the production mesh
-(the paper's 2,524-DPU system, scaled up), with the int8 resident
-dataset (I1), LUT sigmoid (I2) and hierarchical ICI-then-DCN merge (I5).
+"""Dry-run of the PAPER'S OWN workloads at pod scale: a Workload plugin
+(logistic regression by default, ``--workload svm`` / ``multinomial``
+for the PIM-Opt companions) on a PimGrid of 4,096 virtual DPUs spread
+over the production mesh (the paper's 2,524-DPU system, scaled up),
+with the int8 resident dataset (I1), LUT activations (I2) and
+hierarchical ICI-then-DCN merge (I5).
 
   PYTHONPATH=src python -m repro.launch.dryrun_pim [--multi-pod]
+      [--workload {logreg,svm,multinomial}] [--batch-size B]
       [--merge-every K] [--chunk L] [--rows N]
       [--overlap-merge] [--compress-bits B]
 
 Aligned with the scan step engine (PR 1/2): what lowers here is the
 grid's own cached chunk runner — ``PimGrid.make_runner`` scanning
 ``--chunk`` merge rounds at cadence ``--merge-every`` — with the inner
-loop routed through ``kernels.dispatch`` exactly like the mlalgos.  The
-collective schedule in the compiled HLO *is* the paper's host-merge
-(all-reduce@data groups then all-reduce@pod groups), and at cadence k
-it appears once per k local steps instead of every step.
+loop routed through ``kernels.dispatch`` exactly like the mlalgos.
+The step functions come from the Workload protocol
+(``workload.spec_fns``: the same ``local_step``/``update`` the training
+entry points run, assembled over spec-level constants so no dataset is
+materialized), so a new estimator plugin is pod-lowerable with zero
+dry-run changes.  The collective schedule in the compiled HLO *is* the
+paper's host-merge (all-reduce@data groups then all-reduce@pod groups),
+and at cadence k it appears once per k local steps instead of every
+step.  ``--batch-size B`` wraps the fns in the on-device minibatch
+sampler (``core.minibatch``) — the lowered scan then carries the
+sampler's step counter and gathers B resident rows per vDPU per step.
 
 ``--overlap-merge`` lowers the double-buffered pipeline instead and
 then *verifies the overlap in the compiled HLO*
@@ -35,10 +45,10 @@ precondition the latency-hiding scheduler needs.  The run fails if the
 pipeline did not decouple the merge from the dots.  ``--compress-bits``
 adds the int8/int16 error-feedback wire on the slow hop.
 
-``--merge-plan {avg,slowmo,topk}`` lowers the composed
-``distributed.merge_plan`` runner instead: ``slowmo`` adds the SlowMo
-outer-momentum buffer to the scan carry, ``topk`` puts the top-k
-error-feedback sparsifier on the slow hop.  Both compose with
+``--merge-plan {avg,slowmo,nesterov,topk}`` lowers the composed
+``distributed.merge_plan`` runner instead: ``slowmo``/``nesterov`` add
+the outer-momentum buffer to the scan carry, ``topk`` puts the top-k
+error-feedback sparsifier on the slow hop.  All compose with
 ``--overlap-merge`` (the HLO overlap report applies unchanged) and
 ``--merge-every``.  ``adaptive`` is deliberately not lowered here: the
 controller is host-side and reuses the per-cadence runners this dry-run
@@ -47,55 +57,61 @@ surfaced in the output JSON (``merge_fallback_warnings``).
 """
 
 import argparse
+import dataclasses
 import json
 
 import jax
 import jax.numpy as jnp
 
 from repro.core.pim import PimGrid
-from repro.core import lut as lut_mod
-from repro.core import quantize as qz
-from repro.kernels import dispatch
+from repro.core import minibatch as mb
+from repro.configs.pim_ml import CONFIG
 from repro.launch.mesh import make_production_mesh
 from repro.roofline import analysis as ra
+
+# the pod-lowerable gradient workloads: int8 resident dataset + LUT
+# activations, exactly what the training entry points run.  The
+# name -> estimator mapping is the config's (PimMLConfig.workload_spec)
+# so hyperparameters live in one place.
+WORKLOAD_NAMES = ("logreg", "svm", "multinomial")
+
+
+def _workload(name: str):
+    return dataclasses.replace(CONFIG, workload=name).workload_spec(
+        precision="int8")
 
 
 def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
           features: int = 64, merge_every: int = 1, chunk: int = 8,
           overlap: bool = False, compress_bits: int = 0,
-          plan_name: str = "avg"):
+          plan_name: str = "avg", workload: str = "logreg",
+          batch_size: int = 0):
     mesh = make_production_mesh(multi_pod=multi_pod)
     data_axes = ("pod", "data") if multi_pod else ("data",)
     grid = PimGrid(n_vdpus=n_vdpus, mesh=mesh, data_axes=data_axes)
-    table = lut_mod.sigmoid_lut(1024)
     per = rows // n_vdpus
 
-    x_scale = jnp.ones((features,), jnp.float32)
+    wl = _workload(workload)
+    local_fn, update_fn, state0 = wl.spec_fns(features=features,
+                                              rows=rows)
+    if batch_size:
+        local_fn, update_fn, state0, _ = mb.minibatch_fns(
+            local_fn, update_fn, state0, rows_per_vdpu=per,
+            batch_size=batch_size)
 
-    def local_fn(w, sl):
-        wq = qz.quantize_symmetric(w * x_scale, bits=16)
-        z = dispatch.hybrid_matmul(sl["X"], wq.values[:, None])[:, 0] \
-            * wq.scale
-        p = dispatch.lut_apply(table, z)
-        r = (p - sl["y0"]) * sl["w"]
-        rq = qz.quantize_symmetric(r, bits=16)
-        g = dispatch.hybrid_matmul(sl["X"].T, rq.values[:, None])[:, 0] \
-            * (x_scale * rq.scale)
-        return {"g": g, "loss": jnp.sum(r * r)}
-
-    def update_fn(w, merged):
-        return w - 0.5 * merged["g"] / rows, {"loss": merged["loss"] / rows}
-
+    y_dtype = jnp.int32 if workload == "multinomial" else jnp.float32
     data_spec = {
         "X": jax.ShapeDtypeStruct((n_vdpus, per, features), jnp.int8,
                                   sharding=grid.data_sharding()),
-        "y0": jax.ShapeDtypeStruct((n_vdpus, per), jnp.float32,
+        "y0": jax.ShapeDtypeStruct((n_vdpus, per), y_dtype,
                                    sharding=grid.data_sharding()),
         "w": jax.ShapeDtypeStruct((n_vdpus, per), jnp.float32,
                                   sharding=grid.data_sharding()),
     }
-    w_spec = jax.ShapeDtypeStruct((features,), jnp.float32,
-                                  sharding=grid.replicated_sharding())
+    w_spec = jax.tree.map(
+        lambda x: jax.ShapeDtypeStruct(tuple(x.shape), x.dtype,
+                                       sharding=grid.replicated_sharding()),
+        state0)
 
     from repro.distributed import merge_plan as mp
     from repro.distributed.compression import CompressionConfig
@@ -106,6 +122,8 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     outer = mp.AverageCommit()
     if plan_name == "slowmo":
         outer = mp.SlowMo(beta=0.5)
+    elif plan_name == "nesterov":
+        outer = mp.Nesterov(beta=0.5)
     elif plan_name == "topk":
         compression = CompressionConfig(
             bits=compress_bits or None, top_k_frac=0.125)
@@ -115,6 +133,12 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
             f"adaptive controller is host-side; see module docstring)")
     plan = mp.MergePlan(cadence=merge_every, overlap=overlap,
                         compression=compression, outer=outer)
+
+    if batch_size and not plan.outer.plain_commit:
+        raise SystemExit(
+            "--batch-size cannot compose with a stateful outer "
+            "optimizer (the sampler's step counter would be folded "
+            "into its momentum — see core.mlalgos.api)")
 
     if plan.is_exact_default:
         # the scan engine's own cached chunk runner — the artifact the
@@ -170,6 +194,15 @@ def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--multi-pod", action="store_true")
     ap.add_argument("--rows", type=int, default=1 << 24)
+    ap.add_argument("--workload", default=CONFIG.workload,
+                    choices=WORKLOAD_NAMES,
+                    help="which Workload plugin to lower (all int8 "
+                         "resident + LUT activations; default from "
+                         "configs.pim_ml)")
+    ap.add_argument("--batch-size", type=int, default=CONFIG.batch_size,
+                    help="on-device minibatch sampling: resident rows "
+                         "per vDPU per local step (0 = full batch; "
+                         "default from configs.pim_ml)")
     ap.add_argument("--merge-every", type=int, default=1,
                     help="vDPU-local steps per hierarchical merge")
     ap.add_argument("--chunk", type=int, default=8,
@@ -181,10 +214,10 @@ def main():
                     help="error-feedback fixed-point width on the slow "
                          "hop (0 = exact merges)")
     ap.add_argument("--merge-plan", default="avg",
-                    choices=("avg", "slowmo", "topk"),
-                    help="composed merge plan to lower: slowmo adds the "
-                         "outer-momentum carry leaf, topk the top-k EF "
-                         "sparsifier on the slow hop")
+                    choices=("avg", "slowmo", "nesterov", "topk"),
+                    help="composed merge plan to lower: slowmo/nesterov "
+                         "add the outer-momentum carry leaf, topk the "
+                         "top-k EF sparsifier on the slow hop")
     args = ap.parse_args()
 
     import warnings as _warnings
@@ -196,7 +229,9 @@ def main():
                                         chunk=args.chunk,
                                         overlap=args.overlap_merge,
                                         compress_bits=args.compress_bits,
-                                        plan_name=args.merge_plan)
+                                        plan_name=args.merge_plan,
+                                        workload=args.workload,
+                                        batch_size=args.batch_size)
     fallback_warnings = [str(w.message) for w in caught
                          if issubclass(w.category, MergeFallbackWarning)]
     mem = compiled.memory_analysis()
@@ -208,7 +243,9 @@ def main():
     n_chips = 512 if args.multi_pod else 256
     terms = ra.roofline_terms(parsed, cost, n_chips=n_chips)
     tag = "pod2x16x16" if args.multi_pod else "pod16x16"
-    arch = "pim-ml(logreg,int8+lut,scan-engine"
+    arch = f"pim-ml({args.workload},int8+lut,scan-engine"
+    if args.batch_size:
+        arch += f",b{args.batch_size}"
     if args.overlap_merge:
         arch += ",overlap"
     if args.compress_bits:
@@ -219,6 +256,7 @@ def main():
     out = {
         "arch": arch, "mesh": tag,
         "rows": args.rows, "n_vdpus": 4096,
+        "workload": args.workload, "batch_size": args.batch_size,
         "merge_every": args.merge_every, "scan_chunk": args.chunk,
         "overlap_merge": args.overlap_merge,
         "compress_bits": args.compress_bits,

@@ -60,6 +60,31 @@ def momentum(lr: float, beta: float = 0.9) -> Optimizer:
     return Optimizer(init, update)
 
 
+def nesterov(lr: float, beta: float = 0.9) -> Optimizer:
+    """Nesterov accelerated momentum (the lookahead form):
+
+        m ← β·m + g,   p ← p − lr·(g + β·m)
+
+    With ``β = 0`` this is plain SGD.  Used by the merge-plan layer's
+    ``Nesterov`` outer optimizer, which feeds the negated merge delta
+    as the pseudo-gradient — see ``distributed.merge_plan``.
+    """
+
+    def init(params):
+        m = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        return OptState(jnp.zeros((), jnp.int32), m)
+
+    def update(grads, state, params):
+        g32 = jax.tree.map(lambda g: g.astype(jnp.float32), grads)
+        m = jax.tree.map(lambda m_, g: beta * m_ + g, state.inner, g32)
+        new = jax.tree.map(
+            lambda p, g, m_: p - _cast_like(lr * (g + beta * m_), p),
+            params, g32, m)
+        return new, OptState(state.step + 1, m)
+
+    return Optimizer(init, update)
+
+
 def slow_momentum(outer_lr: float = 1.0, beta: float = 0.5) -> Optimizer:
     """SlowMo's *outer* optimizer (arXiv 1910.00643): momentum applied
     at merge boundaries rather than per step.

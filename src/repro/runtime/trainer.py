@@ -67,6 +67,12 @@ class TrainerConfig:
     # repro.distributed.merge_plan.MergePlan.  When given, cadence and
     # compression derive from it (pass one spelling, not both).
     merge_plan: object = None
+    # Minibatch sampling of the driving workload program
+    # (core.minibatch): local steps sample this many resident rows per
+    # vDPU.  Only read by Trainer.for_program — it is a property of the
+    # step function the trainer drives, recorded here so the whole
+    # training recipe lives in one config.  None = full batch.
+    batch_size: Optional[int] = None
     # On-device finite check fused into the flush (roadmap "Next"): the
     # step hot path buffers the on-device loss untouched; at a flush
     # boundary the window's losses each reduce to a flag on device and
@@ -159,6 +165,46 @@ class Trainer:
                         f"settings")
                 self.state = state
                 self.start_step = step + 1
+
+    @classmethod
+    def for_program(cls, program, config: "TrainerConfig" = None, *,
+                    merge_state: Optional[dict] = None,
+                    state_placer: Optional[Callable] = None,
+                    sample_seed: int = 0) -> "Trainer":
+        """Drive a Workload :class:`~repro.core.mlalgos.api.Program`
+        under the fault-tolerant loop — any estimator gets
+        checkpoint/restart, straggler tracking and fused finite checks
+        through one call instead of hand-wiring ``step_fn``.
+
+        One trainer step = one merge-per-step training step over the
+        program's resident data (the batch function is a no-op: the
+        dataset never moves, insight I4).  ``config.batch_size`` turns
+        on the on-device minibatch sampler; its step counter rides in
+        the checkpointed state, so restore-and-replay resumes the epoch
+        schedule exactly where it left off.
+
+        The trainer's flush/checkpoint boundary math counts *steps*, so
+        this entry requires a cadence-1 exact plan (``merge_every`` /
+        ``merge_plan`` beyond the default are refused — run cadence
+        fits through ``api.fit``/``PimGrid.fit``, which own the round
+        structure).
+        """
+        config = config if config is not None else TrainerConfig()
+        plan = config.merge_plan
+        non_default = (config.merge_every != 1
+                       or config.merge_compression is not None
+                       or (plan is not None and not getattr(
+                           plan, "is_exact_default", False)))
+        if non_default or (plan is not None and plan.cadence != 1):
+            raise ValueError(
+                "Trainer.for_program drives merge-per-step training "
+                "(the trainer's boundary math counts steps, and the "
+                "one-step step_fn has no EF/momentum carry); run "
+                "cadence/pipeline plans through api.fit or PimGrid.fit")
+        step_fn, state0 = program.step_fn(
+            batch_size=config.batch_size, sample_seed=sample_seed)
+        return cls(step_fn, state0, lambda step: None, config,
+                   state_placer=state_placer, merge_state=merge_state)
 
     def _compression_tag(self) -> Optional[str]:
         cmp = self._merge_compression

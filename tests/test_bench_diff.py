@@ -172,3 +172,71 @@ class TestPlanAxisVersioning:
         findings = bench_diff.diff(fresh, _artifact())
         assert any("regression" in f and "plan=avg" in f
                    for f in findings)
+
+
+def _v4_artifact(*, drop_workload_cell=False):
+    """A v4 artifact: v3 cells (implicitly workload="linreg",
+    batch_size="full") plus the workload x batch_size axis."""
+    art = _v3_artifact()
+    art["schema"] = "bench_scaling/v4"
+    art["config"]["workloads"] = ["linreg", "svm", "multinomial"]
+    art["config"]["workload_n_vdpus"] = [4]
+    art["config"]["workload_merge_every"] = [1, 4]
+    art["config"]["batch_sizes"] = ["full", 32]
+    wl_cells = [
+        {"workload": wl, "batch_size": bs, "n_vdpus": 4,
+         "precision": "fp32", "merge_every": k, "pipeline": "baseline",
+         "plan": "avg", "steps_per_s": 150.0}
+        for wl in ("linreg", "svm", "multinomial")
+        for bs in ("full", 32) if not (wl == "linreg" and bs == "full")
+        for k in (1, 4)]
+    if drop_workload_cell:
+        wl_cells = wl_cells[:-1]
+    art["throughput"] += wl_cells
+    art["accuracy_vs_workload"] = []
+    return art
+
+
+class TestWorkloadAxisVersioning:
+    def test_v4_fresh_vs_v3_committed_passes(self):
+        """The CI situation after this schema bump: fresh smoke sweep
+        carries workload/batch columns the committed v3 artifact
+        predates — no missing-cell or schema findings."""
+        assert bench_diff.diff(_v4_artifact(), _v3_artifact()) == []
+
+    def test_v4_fresh_vs_v2_committed_passes(self):
+        assert bench_diff.diff(_v4_artifact(), _artifact()) == []
+
+    def test_v4_workload_completeness_checked_against_own_config(self):
+        findings = bench_diff.diff(_v4_artifact(drop_workload_cell=True),
+                                   _v3_artifact())
+        assert any("missing throughput cell" in f
+                   and "workload=multinomial" in f for f in findings)
+
+    def test_linreg_full_batch_not_double_promised(self):
+        """The (linreg, "full") point of the workload axis belongs to
+        the base sweep — its absence from the workload cells is not a
+        finding (the base cells already cover it)."""
+        art = _v4_artifact()
+        assert not any(
+            c.get("workload") == "linreg" and c.get("batch_size") == "full"
+            and "workloads" in str(art["config"])
+            for c in art["throughput"][-10:])
+        assert bench_diff.diff(art, art) == []
+
+    def test_v4_vs_v4_regression_on_minibatch_cells(self):
+        fresh = _v4_artifact()
+        for c in fresh["throughput"]:
+            if c.get("batch_size") == 32 and c.get("workload") == "svm":
+                c["steps_per_s"] = 1.0
+        findings = bench_diff.diff(fresh, _v4_artifact())
+        assert any("regression" in f and "workload=svm" in f
+                   and "batch_size=32" in f for f in findings)
+
+    def test_default_keys_keep_old_cells_comparable(self):
+        """A pre-v4 cell (no workload/batch columns) and a v4
+        workload="linreg", batch_size="full" cell share a key."""
+        pre = {"n_vdpus": 1, "precision": "fp32", "merge_every": 1,
+               "pipeline": "baseline"}
+        v4 = dict(pre, workload="linreg", batch_size="full", plan="avg")
+        assert bench_diff._cell_key(pre) == bench_diff._cell_key(v4)

@@ -57,3 +57,20 @@ def test_monotone_on_table_points():
     t = lut.sigmoid_lut(n_entries=512)
     vals = np.asarray(t.table)
     assert (np.diff(vals) >= -1e-9).all()
+
+
+def test_exp_lut_one_sided_domain():
+    """The softmax table (multinomial logreg): exp on [-bound, 0],
+    clamped exactly at the shifted-logit boundary exp(0)=1 and to a
+    negligible value at the far end."""
+    t = lut.exp_lut(n_entries=1024)
+    assert t.x_min == -16.0 and t.x_max == 0.0
+    xs = np.linspace(-16.0, 0.0, 400).astype(np.float32)
+    got = np.asarray(lut.lut_lookup(t, jnp.asarray(xs)))
+    want = np.exp(xs.astype(np.float64))
+    # |exp'| <= 1 on the domain -> nearest-entry error <= step/2
+    assert np.abs(got - want).max() <= t.step / 2 + 1e-6
+    assert float(lut.lut_lookup(t, jnp.zeros(()))) == 1.0
+    # out-of-range clamps: positive inputs saturate to exp(0)
+    assert float(lut.lut_lookup(t, jnp.asarray(3.0))) == 1.0
+    assert float(lut.lut_lookup(t, jnp.asarray(-50.0))) < 2e-7

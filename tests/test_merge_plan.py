@@ -716,3 +716,123 @@ class TestOuterOptimizerInterface:
         assert AverageCommit().plain_commit
         assert AdaptiveCadence().plain_commit
         assert not SlowMo().plain_commit
+
+
+class TestNesterovOracle:
+    """The Nesterov outer optimizer (ROADMAP "Next") against a
+    hand-rolled numpy replica at cadence 1 and 4, mirroring the SlowMo
+    oracle: m' = beta*m + g, w' = w - alpha*(g + beta*m') with the
+    negated merge delta as pseudo-gradient g."""
+
+    BETA, ALPHA = 0.5, 1.0
+
+    def _setup(self):
+        V, per, d, lr = 4, 32, 6, 0.05
+        X = np.asarray(jax.random.normal(KEY, (V * per, d)), np.float32)
+        w_true = np.linspace(-1.0, 1.0, d).astype(np.float32)
+        y = X @ w_true
+        return V, per, d, lr, X, y
+
+    def _commit(self, w, proposed, m):
+        g = -(proposed - w)
+        m = self.BETA * m + g
+        return (w - self.ALPHA * (g + self.BETA * m)).astype(np.float32), m
+
+    def _oracle_cadence1(self, V, per, d, lr, X, y, steps):
+        n = V * per
+        w = np.zeros((d,), np.float32)
+        m = np.zeros((d,), np.float32)
+        for _ in range(steps):
+            g = np.zeros((d,), np.float32)
+            for v in range(V):
+                Xv, yv = X[v * per:(v + 1) * per], y[v * per:(v + 1) * per]
+                g += (Xv.T @ (Xv @ w - yv)).astype(np.float32)
+            proposed = w - lr * g / n
+            w, m = self._commit(w, proposed, m)
+        return w
+
+    def _oracle_cadence_k(self, V, per, d, lr, X, y, steps, k):
+        n = V * per
+        w = np.zeros((d,), np.float32)
+        m = np.zeros((d,), np.float32)
+        done = 0
+        while done < steps:
+            kk = min(k, steps - done)
+            lanes = []
+            for v in range(V):
+                Xv, yv = X[v * per:(v + 1) * per], y[v * per:(v + 1) * per]
+                wv = w.copy()
+                for _ in range(kk):
+                    g = V * (Xv.T @ (Xv @ wv - yv)).astype(np.float32)
+                    wv = wv - lr * g / n
+                lanes.append(wv)
+            avg = np.mean(lanes, axis=0).astype(np.float32)
+            w, m = self._commit(w, avg, m)
+            done += kk
+        return w
+
+    def test_cadence1_matches_oracle(self):
+        from repro.distributed.merge_plan import Nesterov
+        V, per, d, lr, X, y = self._setup()
+        grid = make_cpu_grid(V)
+        res = train_linreg(grid, jnp.asarray(X), jnp.asarray(y), lr=lr,
+                           steps=200, merge_plan=MergePlan(
+                               outer=Nesterov(beta=self.BETA,
+                                              outer_lr=self.ALPHA)))
+        w_oracle = self._oracle_cadence1(V, per, d, lr, X, y, 200)
+        np.testing.assert_allclose(np.asarray(res.w), w_oracle,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_cadence4_matches_oracle(self):
+        from repro.distributed.merge_plan import Nesterov
+        V, per, d, lr, X, y = self._setup()
+        grid = make_cpu_grid(V)
+        res = train_linreg(grid, jnp.asarray(X), jnp.asarray(y), lr=lr,
+                           steps=200, merge_plan=MergePlan(
+                               cadence=4,
+                               outer=Nesterov(beta=self.BETA,
+                                              outer_lr=self.ALPHA)))
+        w_oracle = self._oracle_cadence_k(V, per, d, lr, X, y, 200, 4)
+        np.testing.assert_allclose(np.asarray(res.w), w_oracle,
+                                   rtol=1e-3, atol=1e-3)
+
+    def test_beta0_alpha1_recovers_average(self):
+        from repro.distributed.merge_plan import Nesterov
+        V, per, d, lr, X, y = self._setup()
+        grid = make_cpu_grid(V)
+        r_avg = train_linreg(grid, jnp.asarray(X), jnp.asarray(y),
+                             lr=lr, steps=40, merge_every=4)
+        r_nag = train_linreg(grid, jnp.asarray(X), jnp.asarray(y),
+                             lr=lr, steps=40, merge_plan=MergePlan(
+                                 cadence=4, outer=Nesterov(
+                                     beta=0.0, outer_lr=1.0)))
+        np.testing.assert_allclose(np.asarray(r_nag.w),
+                                   np.asarray(r_avg.w),
+                                   rtol=1e-5, atol=1e-6)
+
+    def test_momentum_continues_across_fits(self):
+        from repro.distributed.merge_plan import Nesterov
+        X, y, _ = datasets.regression(KEY, 320, 6)
+        grid = make_cpu_grid(4)
+        data, n, lf, uf, w0 = make_linreg_step(grid, X, y, lr=0.05)
+        plan = MergePlan(cadence=4, outer=Nesterov(beta=0.5))
+        w_one, _ = grid.fit(init_state=w0, local_fn=lf, update_fn=uf,
+                            data=data, steps=96, merge_plan=plan)
+        holder: dict = {}
+        w_half, _ = grid.fit(init_state=w0, local_fn=lf, update_fn=uf,
+                             data=data, steps=48, merge_plan=plan,
+                             merge_state=holder)
+        assert "momentum" in holder
+        w_two, _ = grid.fit(init_state=w_half, local_fn=lf,
+                            update_fn=uf, data=data, steps=48,
+                            merge_plan=plan, merge_state=holder)
+        np.testing.assert_allclose(np.asarray(w_two), np.asarray(w_one),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_not_plain_and_config_spelling(self):
+        from repro.distributed.merge_plan import Nesterov
+        from repro.configs.pim_ml import PimMLConfig
+        assert not Nesterov().plain_commit
+        plan = PimMLConfig(merge_outer="nesterov",
+                           merge_every=4).merge_plan()
+        assert isinstance(plan.outer, Nesterov)

@@ -17,17 +17,22 @@ Checks, in order:
 2. **completeness** — the fresh file must contain one throughput cell
    for every point of the cross-product its *own* config promises
    (n_vdpus x precision x merge_every, the pipeline axis applied to
-   the precisions ``config.pipeline_precisions`` names, and — v3 —
-   the ``plans`` axis over ``plan_n_vdpus`` x ``plan_precisions``).
-   A missing cell means a sweep loop silently skipped work.  Columns
-   only the newer schema promises are judged against the *fresh*
-   config, so added plan columns never flag missing-cell errors on
-   older committed artifacts.
-3. **regression** — for cells whose key (n_vdpus, precision,
-   merge_every, pipeline, plan) exists in both files *and* whose
-   configs are comparable (same backend, rows, features, smoke flag),
-   fresh ``steps_per_s`` must be at least ``1/max_regression`` of
-   committed.  Cells an older artifact does not have (plan != "avg")
+   the precisions ``config.pipeline_precisions`` names, the v3
+   ``plans`` axis over ``plan_n_vdpus`` x ``plan_precisions``, and —
+   v4 — the ``workloads`` x ``batch_sizes`` axis over
+   ``workload_n_vdpus`` x ``workload_merge_every``; the
+   ``("linreg", "full")`` point is owned by the base cells and not
+   re-promised).  A missing cell means a sweep loop silently skipped
+   work.  Columns only the newer schema promises are judged against
+   the *fresh* config, so added plan/workload columns never flag
+   missing-cell errors on older committed artifacts.
+3. **regression** — for cells whose key (workload, n_vdpus, precision,
+   merge_every, pipeline, plan, batch_size) exists in both files *and*
+   whose configs are comparable (same backend, rows, features, smoke
+   flag), fresh ``steps_per_s`` must be at least ``1/max_regression``
+   of committed.  Pre-v4 cells read as ``workload="linreg"``,
+   ``batch_size="full"`` (and pre-v3 as ``plan="avg"``), so old
+   artifacts stay comparable; cells an older artifact does not have
    simply have no counterpart and are skipped.  Smoke sweeps against
    the committed full-size artifact are not comparable — the
    regression check is then skipped with a note (schema/completeness
@@ -50,11 +55,13 @@ import sys
 
 
 def _cell_key(cell: dict):
-    # pre-v3 artifacts have no "plan" column — their cells are the
-    # default-plan cells, so the default keeps keys comparable
-    return (cell.get("n_vdpus"), cell.get("precision"),
-            cell.get("merge_every"), cell.get("pipeline", "baseline"),
-            cell.get("plan", "avg"))
+    # pre-v3 artifacts have no "plan" column and pre-v4 none for
+    # "workload"/"batch_size" — their cells are the default-axis cells,
+    # so the defaults keep keys comparable across schema versions
+    return (cell.get("workload", "linreg"), cell.get("n_vdpus"),
+            cell.get("precision"), cell.get("merge_every"),
+            cell.get("pipeline", "baseline"), cell.get("plan", "avg"),
+            cell.get("batch_size", "full"))
 
 
 def _schema_version(tag):
@@ -82,13 +89,23 @@ def expected_keys(config: dict):
             pnames = pipelines if prec in pipe_precisions else ["baseline"]
             for k in config.get("merge_every", []):
                 for p in pnames:
-                    keys.add((v, prec, k, p, "avg"))
+                    keys.add(("linreg", v, prec, k, p, "avg", "full"))
     plan_precisions = set(config.get("plan_precisions", []))
     for v in config.get("plan_n_vdpus", []):
         for prec in plan_precisions:
             for k in config.get("merge_every", []):
                 for plan in config.get("plans", []):
-                    keys.add((v, prec, k, "baseline", plan))
+                    keys.add(("linreg", v, prec, k, "baseline", plan,
+                              "full"))
+    # v4: the Workload-protocol axis.  linreg's full-batch cells belong
+    # to the base sweep above, so (linreg, "full") is not re-promised.
+    for v in config.get("workload_n_vdpus", []):
+        for wl in config.get("workloads", []):
+            for bs in config.get("batch_sizes", []):
+                if wl == "linreg" and bs == "full":
+                    continue
+                for k in config.get("workload_merge_every", []):
+                    keys.add((wl, v, "fp32", k, "baseline", "avg", bs))
     return keys
 
 
@@ -127,8 +144,9 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
     missing = expected_keys(fresh.get("config", {})) - set(f_cells)
     for key in sorted(missing, key=str):
         findings.append(
-            "missing throughput cell (n_vdpus={}, precision={}, "
-            "merge_every={}, pipeline={}, plan={})".format(*key))
+            "missing throughput cell (workload={}, n_vdpus={}, "
+            "precision={}, merge_every={}, pipeline={}, plan={}, "
+            "batch_size={})".format(*key))
 
     if not comparable(fresh.get("config", {}),
                       committed.get("config", {})):
@@ -143,8 +161,9 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
         if committed_sps > 0 and \
                 fresh_sps * max_regression < committed_sps:
             findings.append(
-                "throughput regression >{:.1f}x at (n_vdpus={}, "
-                "precision={}, merge_every={}, pipeline={}, plan={}): "
+                "throughput regression >{:.1f}x at (workload={}, "
+                "n_vdpus={}, precision={}, merge_every={}, pipeline={}, "
+                "plan={}, batch_size={}): "
                 "{:.1f} -> {:.1f} steps/s".format(
                     max_regression, *key, committed_sps, fresh_sps))
     return findings

@@ -23,10 +23,16 @@ six extra axes the follow-ups make first-class:
     (PR 4): ``avg`` (the default plan — identical to the base cells),
     ``slowmo`` (SlowMo outer momentum at the merge boundary),
     ``topk`` (top-k error-feedback sparsified wire: merge_bytes drops
-    below the dense int8 row) and ``adaptive`` (host-side cadence
+    below the dense int8 row), ``adaptive`` (host-side cadence
     controller; its ``merge_every`` column is the *starting* cadence —
-    the controller may grow it mid-fit).  Swept for fp32 cells at the
-    baseline pipeline over ``plan_n_vdpus``.
+    the controller may grow it mid-fit) and ``auto`` (v5: the unified
+    self-tuning controller ``fit(merge_plan="auto")`` — cost-model
+    prior + measured round times pick cadence AND wire format; like
+    adaptive, its ``merge_every`` column is the starting cadence and
+    the u(k) fit does not apply).  Swept for fp32 cells at the
+    baseline pipeline over ``plan_n_vdpus``.  The v5 acceptance row:
+    auto cells must land within ~10% steps/s of the best hand-tuned
+    plan cell at each ``plan_n_vdpus`` grid size.
 
   * ``workload`` / ``batch_size`` — the Workload-protocol axes (this
     repo's PR 5): the PIM-Opt companion workloads (linear SVM,
@@ -40,7 +46,7 @@ six extra axes the follow-ups make first-class:
 
 One sweep produces the tables plus the accuracy-vs-cadence /
 accuracy-vs-pipeline / accuracy-vs-plan / accuracy-vs-workload curves,
-in a single ``BENCH_scaling.json`` (schema bench_scaling/v4,
+in a single ``BENCH_scaling.json`` (schema bench_scaling/v5,
 documented in docs/BENCHMARKS.md).
 
 Merge-fraction model: the measured per-local-step time at cadence k is
@@ -99,9 +105,9 @@ PRECISIONS = ("fp32", "int16", "int8")
 # (name, overlap_merge, compression bits); swept for fp32 cells
 PIPELINES = (("baseline", False, 0), ("overlap", True, 0),
              ("int8", False, 8), ("overlap+int8", True, 8))
-# composed merge plans (PR 4), swept for fp32 cells at the baseline
-# pipeline; "avg" is the base cells' plan label
-PLANS = ("slowmo", "topk", "adaptive")
+# composed merge plans (PR 4; "auto" is v5), swept for fp32 cells at
+# the baseline pipeline; "avg" is the base cells' plan label
+PLANS = ("slowmo", "topk", "adaptive", "auto")
 TOPK_FRAC = 0.125
 # the Workload-protocol axis (v4): estimators timed through api.fit and
 # the minibatch sampling sizes ("full" = batch_size=None, the exact
@@ -124,6 +130,9 @@ def _plan(pname: str, k: int) -> MergePlan:
             bits=8, top_k_frac=TOPK_FRAC))
     if pname == "adaptive":
         return MergePlan(cadence=k, outer=AdaptiveCadence(k_max=32))
+    if pname == "auto":
+        from repro.tuning import AutoTune
+        return MergePlan(cadence=k, outer=AutoTune(k_max=32))
     if pname in ("avg", "int8"):
         return MergePlan(cadence=k, compression=_compression(
             8 if pname == "int8" else 0))
@@ -245,16 +254,18 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                     per_k[k] = us / timed_steps
                 t_local, t_merge, r2, valid = _fit_merge_model(
                     list(per_k), list(per_k.values()))
-                # the adaptive controller re-decides k mid-fit, so the
-                # u(k) model does not apply to its cells
-                if pname == "adaptive":
+                # controller-driven plans (adaptive, auto) re-decide k
+                # mid-fit, so the u(k) model does not apply to their
+                # cells
+                if pname in ("adaptive", "auto"):
                     valid = False
                 for k, us_step in per_k.items():
-                    # adaptive plans always run the state wire (the EF
-                    # buffer must keep one shape while k changes), so
-                    # their k=1 cells must be costed on the state tree,
-                    # not the cadence-1 partials wire
-                    wire_k = max(k, 2) if pname == "adaptive" else k
+                    # controller plans always run the state wire (the
+                    # EF buffer must keep one shape while k changes),
+                    # so their k=1 cells must be costed on the state
+                    # tree, not the cadence-1 partials wire
+                    wire_k = max(k, 2) if pname in ("adaptive", "auto") \
+                        else k
                     wire = grid.merge_wire_spec(
                         local_fn, update_fn, w0, data,
                         merge_every=wire_k)
@@ -528,7 +539,7 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
         acc_v, key, rows=rows, features=features, steps=acc_steps)
 
     result = {
-        "schema": "bench_scaling/v4",
+        "schema": "bench_scaling/v5",
         "config": {
             "backend": jax.default_backend(),
             "smoke": smoke,

@@ -31,8 +31,10 @@ class PimMLConfig:
     # outer optimizer at the merge boundary: "avg" (plain average,
     # bit-exact with the pre-plan engine), "slowmo" (slow momentum,
     # PIM-Opt / SlowMo), "nesterov" (the lookahead variant, sharing the
-    # slowmo hyperparameters), or "adaptive" (host-side cadence
-    # controller growing merge_every as merged deltas stabilize).
+    # slowmo hyperparameters), "adaptive" (host-side cadence
+    # controller growing merge_every as merged deltas stabilize), or
+    # "auto" (the repro.tuning controller: cost-model prior + measured
+    # round times pick cadence AND wire format).
     merge_outer: str = "avg"
     slowmo_beta: float = 0.5
     slowmo_outer_lr: float = 1.0
@@ -70,6 +72,7 @@ class PimMLConfig:
         from repro.distributed.compression import CompressionConfig
         from repro.distributed.merge_plan import (
             MergePlan, AverageCommit, SlowMo, Nesterov, AdaptiveCadence)
+        from repro.tuning import AutoTune
 
         compression = None
         if self.merge_compression_bits or self.merge_top_k_frac:
@@ -81,7 +84,8 @@ class PimMLConfig:
                                    outer_lr=self.slowmo_outer_lr),
                   "nesterov": Nesterov(beta=self.slowmo_beta,
                                        outer_lr=self.slowmo_outer_lr),
-                  "adaptive": AdaptiveCadence(k_max=self.adaptive_k_max)}
+                  "adaptive": AdaptiveCadence(k_max=self.adaptive_k_max),
+                  "auto": AutoTune(k_max=self.adaptive_k_max)}
         if self.merge_outer not in outers:
             raise ValueError(
                 f"merge_outer must be one of {sorted(outers)}, got "

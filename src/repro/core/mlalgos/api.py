@@ -276,7 +276,11 @@ class Program:
             callback: Optional[Callable] = None,
             sample_seed: int = 0) -> FitResult:
         """Train on the bound dataset (same option surface as
-        :func:`fit`, minus the binding)."""
+        :func:`fit`, minus the binding).  ``merge_plan`` accepts a
+        :class:`~repro.distributed.merge_plan.MergePlan`, ``None``
+        (exact default), or the string ``"auto"`` — the self-tuning
+        controller in ``repro.tuning`` picks cadence and wire format
+        and records its decisions in ``merge_state["tuning_trace"]``."""
         from repro.distributed import merge_plan as mp
 
         plan = mp.MergePlan.resolve(
@@ -335,6 +339,31 @@ class Program:
 
         return step, state0
 
+    def round_fn(self, k: int, *, batch_size: Optional[int] = None,
+                 sample_seed: int = 0):
+        """A jitted exact merge *round* at cadence ``k`` for external
+        drivers: ``round(state, batch) -> (state, metrics)`` where each
+        call runs ``k`` local steps per vDPU and merges once
+        (``merge_plan.cadence_round`` — the bit-exact default-plan
+        body).  Metric leaves come back with shape ``(k, ...)``, one
+        entry per local step.  Returns ``(round, state0)``; this is how
+        ``Trainer.for_program`` honours ``merge_every > 1`` while
+        keeping checkpoint/restore at merge boundaries."""
+        if k < 1:
+            raise ValueError(f"round_fn needs cadence k >= 1, got {k}")
+        from repro.distributed import merge_plan as mp
+
+        local_fn, update_fn, state0, _ = self._triple(
+            batch_size, sample_seed)
+        grid, data = self.grid, self.data
+
+        @jax.jit
+        def round(state, batch):
+            return mp.cadence_round(grid, local_fn, update_fn, k,
+                                    state, data)
+
+        return round, state0
+
 
 # ---------------------------------------------------------------------------
 # the generic entry point
@@ -350,11 +379,14 @@ def fit(workload: Workload, grid: PimGrid, X, y=None, *, steps: int,
         sample_seed: int = 0) -> FitResult:
     """Train any workload on the grid — THE entry point every layer
     above the algorithms (Trainer, configs, dry-run, benchmarks,
-    examples) goes through.  Resolves the merge-plan spelling once,
-    applies the workload's ``merge_caps`` (unsupported axes degrade
-    with a ``MergeFallbackWarning``), and dispatches to the workload's
-    ``run`` — the generic engine loop for gradient-style estimators,
-    an algorithm-owned loop for the rest (dtree)."""
+    examples) goes through.  Resolves the merge-plan spelling once
+    (``None`` = exact default, a ``MergePlan``, or the string
+    ``"auto"`` for the cost-model-driven self-tuning controller in
+    ``repro.tuning``), applies the workload's ``merge_caps``
+    (unsupported axes degrade with a ``MergeFallbackWarning``), and
+    dispatches to the workload's ``run`` — the generic engine loop for
+    gradient-style estimators, an algorithm-owned loop for the rest
+    (dtree)."""
     from repro.distributed import merge_plan as mp
 
     plan = mp.MergePlan.resolve(

@@ -391,6 +391,11 @@ class PimGrid:
         pass one spelling or the other, not both.  ``merge_plan=None``
         with the legacy kwargs at their defaults runs the exact engine
         in this file (bit-exact with the pre-plan releases).
+        ``merge_plan="auto"`` hands plan selection to the self-tuning
+        controller (``repro.tuning``): a roofline cost model ranks
+        candidate (cadence, wire-format) tuples, measured round times
+        refine the choice, and the decisions land in
+        ``merge_state["tuning_trace"]``.
 
         ``merge_every=k`` runs ``k`` vDPU-local update steps between
         hierarchical state merges (DESIGN — merge cadence).  ``k=1``

@@ -202,6 +202,27 @@ def wire_bytes(tree: Any, cfg: Optional[CompressionConfig]) -> int:
     return total
 
 
+def top_k_ladder(base_frac: float, *, bits: Optional[int] = 8,
+                 rungs: int = 2) -> Tuple[CompressionConfig, ...]:
+    """Top-k candidate ladder for the tuning controller
+    (``repro.tuning``): ``rungs`` configs at halving kept fractions
+    starting from ``base_frac``.  The controller drives the *adaptive*
+    top-k fraction by moving between rungs — every rung shares the same
+    state-shaped error-feedback buffer, so switching mid-fit never
+    reshapes the scan carry (dropped entries simply become the next
+    round's residual, exactly as with a fixed fraction).
+
+    >>> [c.top_k_frac for c in top_k_ladder(0.25, rungs=3)]
+    [0.25, 0.125, 0.0625]
+    """
+    if not 0.0 < base_frac <= 1.0:
+        raise ValueError(f"top_k_ladder needs 0 < base_frac <= 1, got "
+                         f"{base_frac}")
+    return tuple(CompressionConfig(bits=bits,
+                                   top_k_frac=base_frac / (2 ** r))
+                 for r in range(max(1, int(rungs))))
+
+
 def topk_sparsify(g: jax.Array, frac: float, error: jax.Array
                   ) -> Tuple[jax.Array, jax.Array]:
     """Keep the largest-|.|  ``frac`` of entries (error-feedback residual

@@ -46,7 +46,11 @@ cadence 1.  The ``OuterOptimizer`` decides how that delta commits:
   Rounds dispatch one at a time (the controller sits on the host, like
   the paper's CPU), always on the state wire so the EF buffer never
   changes shape, and each distinct ``k`` compiles once: revisiting a
-  cadence hits the grid's runner cache.
+  cadence hits the grid's runner cache.  Since the tuning extraction
+  this is a thin preset over ``repro.tuning.PlanController``; the
+  string spelling ``merge_plan="auto"`` (the ``tuning.AutoTune``
+  preset) extends the same controller to also choose the wire format
+  from a roofline cost-model prior refined by measured round times.
 
 DESIGN — the overlapped + compressed merge pipeline
 ---------------------------------------------------
@@ -344,48 +348,49 @@ class Nesterov(OuterOptimizer):
 
 @dataclasses.dataclass(frozen=True)
 class AdaptiveCadence(OuterOptimizer):
-    """Host-side cadence controller: start at the plan's ``cadence``
+    """Host-side cadence adaptation: start at the plan's ``cadence``
     and grow ``k`` by ``growth`` (up to ``k_max``) once the norms of
     ``patience + 1`` successive merged deltas agree to within
-    ``stable_ratio`` relative change.  ``k`` never shrinks.  The commit
-    itself is the plain average."""
+    ``stable_ratio`` relative change.  The commit itself is the plain
+    average.
+
+    This is now a thin *preset* over the unified
+    ``repro.tuning.PlanController`` (which folded the old private
+    cadence controller in): the wire format stays pinned to the plan's
+    ``compression`` and only the cadence moves.  With ``shrink=True``
+    a delta-norm spike past ``spike_ratio`` × the previous norm halves
+    ``k`` toward ``k_min`` — the trajectory is moving again, merge more
+    often; the default never shrinks, exactly the legacy behaviour.
+    For controller-chosen compression too, use ``merge_plan="auto"``
+    (the ``tuning.AutoTune`` preset)."""
 
     k_max: int = 16
     growth: int = 2
     stable_ratio: float = 0.5
     patience: int = 2
+    shrink: bool = False
+    spike_ratio: float = 4.0
+    k_min: int = 1
+
+    # the controlled-fit driver reads these; AdaptiveCadence pins the
+    # wire format so there is nothing to explore or hold for
+    explore_rounds = 0
+    min_steps_to_explore = 0
+    hold_rounds = 1
 
     def __post_init__(self):
         if self.k_max < 1 or self.growth < 2:
             raise ValueError(
                 f"AdaptiveCadence needs k_max >= 1 and growth >= 2, got "
                 f"k_max={self.k_max} growth={self.growth}")
-
-
-class _CadenceController:
-    """The mutable per-fit state behind :class:`AdaptiveCadence`."""
-
-    def __init__(self, cfg: AdaptiveCadence, k0: int):
-        self.cfg = cfg
-        self.k = max(1, int(k0))
-        self._prev: float | None = None
-        self._stable = 0
-        self.trace: list[int] = [self.k]
-
-    def observe(self, delta_norm: float) -> int:
-        """Feed one round's merged-delta norm; returns the cadence for
-        the next round."""
-        if self._prev is not None:
-            rel = abs(delta_norm - self._prev) / max(self._prev, 1e-12)
-            self._stable = self._stable + 1 \
-                if rel <= self.cfg.stable_ratio else 0
-        self._prev = delta_norm
-        if self._stable >= self.cfg.patience and self.k < self.cfg.k_max:
-            self.k = min(self.k * self.cfg.growth, self.cfg.k_max)
-            self._stable = 0
-            self._prev = None     # k changed -> delta magnitude re-bases
-        self.trace.append(self.k)
-        return self.k
+        if not 1 <= self.k_min <= self.k_max:
+            raise ValueError(
+                f"AdaptiveCadence needs 1 <= k_min <= k_max, got "
+                f"k_min={self.k_min} k_max={self.k_max}")
+        if self.spike_ratio <= 1.0:
+            raise ValueError(
+                f"AdaptiveCadence.spike_ratio must be > 1, got "
+                f"{self.spike_ratio}")
 
 
 # -- the plan ----------------------------------------------------------
@@ -409,11 +414,12 @@ class MergePlan:
             raise ValueError(
                 f"MergePlan.outer must be an OuterOptimizer, got "
                 f"{self.outer!r}")
-        if self.adaptive and self.overlap:
+        if (self.adaptive or self.auto) and self.overlap:
             raise ValueError(
-                "AdaptiveCadence cannot be combined with overlap=True: "
-                "the controller re-decides k per round on the host, the "
-                "overlap pipeline's pending buffer is shaped per-k")
+                "controller-driven plans (AdaptiveCadence / auto) "
+                "cannot be combined with overlap=True: the controller "
+                "re-decides k per round on the host, the overlap "
+                "pipeline's pending buffer is shaped per-k")
 
     @classmethod
     def from_legacy(cls, *, merge_every: int = 1,
@@ -425,15 +431,25 @@ class MergePlan:
                    compression=merge_compression)
 
     @classmethod
-    def resolve(cls, merge_plan: "MergePlan | None", *,
+    def resolve(cls, merge_plan: "MergePlan | str | None", *,
                 merge_every: int = 1, overlap_merge: bool = False,
                 merge_compression: Optional[CompressionConfig] = None
                 ) -> "MergePlan":
-        """The one resolution rule for the two ``fit`` spellings: a
-        given plan wins but must not be mixed with non-default legacy
-        kwargs; otherwise the kwargs build the plan.  Every entry point
-        accepting both spellings (``PimGrid.fit``, ``train_dtree``)
+        """The one resolution rule for the ``fit`` spellings: a given
+        plan wins but must not be mixed with non-default legacy kwargs;
+        otherwise the kwargs build the plan.  The string ``"auto"``
+        resolves to the self-tuning preset (``repro.tuning.AutoTune``:
+        the controller picks cadence and wire format from a roofline
+        prior plus measured round times).  Every entry point accepting
+        these spellings (``PimGrid.fit``, ``api.fit``, ``train_dtree``)
         funnels through here so the rule cannot drift."""
+        if isinstance(merge_plan, str):
+            if merge_plan != "auto":
+                raise ValueError(
+                    f"unknown merge_plan spelling {merge_plan!r}: the "
+                    f"only string form is 'auto' (or pass a MergePlan)")
+            from repro.tuning import auto_plan
+            merge_plan = auto_plan()
         if merge_plan is not None:
             if merge_every != 1 or overlap_merge or \
                     merge_compression is not None:
@@ -449,6 +465,13 @@ class MergePlan:
     @property
     def adaptive(self) -> bool:
         return isinstance(self.outer, AdaptiveCadence)
+
+    @property
+    def auto(self) -> bool:
+        """Whether the outer is the self-tuning ``AutoTune`` preset
+        (duck-typed so this module never imports ``repro.tuning`` at
+        module scope)."""
+        return bool(getattr(self.outer, "is_auto", False))
 
     @property
     def is_exact_default(self) -> bool:
@@ -902,10 +925,11 @@ def _delta_sq_norm(a, b):
 def run_fit(grid, plan: MergePlan, *, init_state, local_fn, update_fn,
             data, steps, callback, scan_chunk, engine, merge_state):
     """``fit`` driver for every non-default plan (overlap, compression,
-    SlowMo, adaptive cadence).  Mirrors ``PimGrid.fit``'s contract:
-    returns ``(state, history)`` with one entry per local step; reads
-    and writes the ``merge_state`` holder (``"error"``, ``"momentum"``,
-    and — for adaptive plans — ``"cadence_trace"``)."""
+    SlowMo, adaptive cadence, auto).  Mirrors ``PimGrid.fit``'s
+    contract: returns ``(state, history)`` with one entry per local
+    step; reads and writes the ``merge_state`` holder (``"error"``,
+    ``"momentum"``, and — for controller-driven plans —
+    ``"cadence_trace"`` / ``"tuning_trace"``)."""
     state = init_state
     history: list = []
     if steps > 0 and donating_backend():
@@ -914,16 +938,23 @@ def run_fit(grid, plan: MergePlan, *, init_state, local_fn, update_fn,
     compression = plan.compression
     outer = plan.outer
 
-    # state-wire plans (cadence > 1, and every adaptive round) carry the
-    # state tree on the wire; cadence-1 static plans carry the partials
+    # state-wire plans (cadence > 1, and every controlled round) carry
+    # the state tree on the wire; cadence-1 static plans carry the
+    # partials.  Auto plans may compress even though plan.compression
+    # is None (the controller chooses), so their EF buffer continues
+    # across fit calls through the same merge_state slot.
     ef = None
-    if compression is not None:
+    if compression is not None or plan.auto:
         ef = merge_state.get("error") if merge_state else None
         if ef is None:
-            wire_cadence = 2 if plan.adaptive else plan.cadence
-            wire = wire_spec(grid, local_fn, update_fn, state, data,
-                             merge_every=wire_cadence)
-            ef = init_merge_error(grid, wire)
+            if compression is not None:
+                wire_cadence = 2 if (plan.adaptive or plan.auto) \
+                    else plan.cadence
+                wire = wire_spec(grid, local_fn, update_fn, state, data,
+                                 merge_every=wire_cadence)
+                ef = init_merge_error(grid, wire)
+            # plan.auto without pinned compression: the controlled-fit
+            # driver allocates the shared state-shaped buffer itself
         elif steps > 0 and donating_backend():
             ef = _copy_tree(ef)
 
@@ -935,15 +966,22 @@ def run_fit(grid, plan: MergePlan, *, init_state, local_fn, update_fn,
         elif steps > 0 and donating_backend():
             mom = _copy_tree(mom)
 
-    if plan.adaptive:
-        state, history, ef, ctl = _run_adaptive(
+    if plan.adaptive or plan.auto:
+        # the controller extraction: adaptive/auto fits run under
+        # repro.tuning's PlanController (AdaptiveCadence is a preset
+        # of it — cadence only; AutoTune also selects the wire format
+        # from a roofline prior refined by measured round times)
+        from repro.tuning.controller import run_controlled_fit
+
+        state, history, ef, ctl = run_controlled_fit(
             grid, plan, state=state, ef=ef, local_fn=local_fn,
             update_fn=update_fn, data=data, steps=steps,
             callback=callback)
         if merge_state is not None:
-            if compression is not None:
+            if ef is not None:
                 merge_state["error"] = ef
-            merge_state["cadence_trace"] = list(ctl.trace)
+            merge_state["cadence_trace"] = list(ctl.cadence_trace)
+            merge_state["tuning_trace"] = ctl.trace_dict()
         return state, history
 
     done = 0
@@ -1042,38 +1080,3 @@ def run_fit(grid, plan: MergePlan, *, init_state, local_fn, update_fn,
         if not outer.plain_commit:
             merge_state["momentum"] = mom
     return state, history
-
-
-def _run_adaptive(grid, plan: MergePlan, *, state, ef, local_fn,
-                  update_fn, data, steps, callback):
-    """Adaptive-cadence driver: one merge round per dispatch (the
-    controller sits on the host), always on the state wire so the EF
-    buffer shape is cadence-independent.  Each distinct ``k`` compiles
-    once; revisiting a cadence hits the grid runner cache."""
-    ctl = _CadenceController(plan.outer, k0=plan.cadence)
-    history: list = []
-    done = 0
-    donating = donating_backend()
-    # the runner donates its carry on TPU/GPU — the round-start anchor
-    # must be a private copy there or its buffers are consumed by the
-    # dispatch before the norm reads them
-    prev = _copy_tree(state) if donating else state
-    while done < steps:
-        k = min(ctl.k, steps - done)
-        rs = pipeline_runners(
-            grid, local_fn, update_fn, merge_every=k, overlap=False,
-            compression=plan.compression, state_wire=True,
-            outer=plan.outer)
-        (state, ef, _), stacked = rs["runner"]((state, ef, ()), data,
-                                               length=1)
-        for j in range(k):
-            metrics = jax.tree.map(lambda x, j=j: x[0, j], stacked)
-            history.append(metrics)
-            if callback is not None:
-                callback(done + j, state, metrics)
-        done += k
-        # one scalar sync per round — the controller is host-side but
-        # the norm reduction stays on device
-        ctl.observe(float(jnp.sqrt(_delta_sq_norm(state, prev))))
-        prev = _copy_tree(state) if donating else state
-    return state, history, ef, ctl

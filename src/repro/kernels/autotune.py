@@ -1,317 +1,25 @@
-"""Block-shape selection for the Pallas kernels — measured or heuristic,
-with an on-disk cache.
+"""Back-compat shim: the block-shape autotuner moved to
+``repro.tuning.autotune`` (it is one axis of the unified tuning layer,
+next to the plan controller and the roofline cost model).  This module
+re-exports the full public surface — and the module-level cache state
+lives in ``repro.tuning.autotune``, so mixing old and new import paths
+never splits the cache."""
 
-The kernels (`fxp_matmul`, `kmeans_assign`, `split_hist`) take their
-block shapes as parameters but historically ran with fixed constants
-chosen for one TPU generation.  The right shapes depend on four things —
-which kernel, the operand dtype (int8 tiles are (32, 128), f32 (8, 128)),
-the problem shape, and the backend (Mosaic wants MXU-aligned VMEM-sized
-tiles; the CPU/GPU ``interpret=True`` fallback executes the kernel body
-once *per grid step* in Python, so fewer/larger blocks win as long as
-they fit in memory).  This module owns that decision:
-
-* ``block_shapes(kernel, dtype, shape)`` — the dispatch-time entry
-  point.  Returns the measured table entry when one exists for the
-  ``(kernel, dtype, shape-bucket, backend)`` key, else the per-backend
-  heuristic.  Pure Python over static shapes, so it is free at trace
-  time.
-* ``autotune(kernel, shape, dtype)`` — the measured path: times each
-  candidate block shape on representative inputs with the real kernel
-  and persists the winner to the on-disk cache
-  (``$REPRO_AUTOTUNE_CACHE`` or ``~/.cache/repro/autotune_blocks.json``),
-  so the cost is paid once per machine, not per process.
-
-Cache keying: shapes are bucketed to the next power of two per
-dimension — a (300, 130) matmul and a (512, 256) one share an entry —
-and the backend rides in the key so a cache written on CPU never
-steers a TPU run.
-"""
-
-from __future__ import annotations
-
-import json
-import os
-import threading
-import time
-from typing import Dict, Optional, Sequence, Tuple
-
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-# interpret-mode blocks are capped by element budgets rather than VMEM:
-# the whole block materializes as a jnp array per grid step.
-_INTERPRET_ELEMS = 1 << 22       # ~16 MB of f32 per operand block
-_ONEHOT_ELEMS = 1 << 24          # split_hist materializes (bn, F, n*b*c)
-_VMEM_ELEMS = 1 << 20            # ~4 MB of f32 — conservative VMEM share
-
-_CACHE_ENV = "REPRO_AUTOTUNE_CACHE"
-_DEFAULT_CACHE = os.path.join("~", ".cache", "repro",
-                              "autotune_blocks.json")
-
-_lock = threading.Lock()
-_cache: Optional[dict] = None
-_cache_path_loaded: Optional[str] = None
-
-
-def cache_path() -> str:
-    return os.path.expanduser(os.environ.get(_CACHE_ENV, _DEFAULT_CACHE))
-
-
-def _load_cache() -> dict:
-    global _cache, _cache_path_loaded
-    path = cache_path()
-    with _lock:
-        if _cache is not None and _cache_path_loaded == path:
-            return _cache
-        entries: dict = {}
-        try:
-            with open(path) as f:
-                data = json.load(f)
-            if isinstance(data, dict):
-                entries = data.get("entries", {})
-        except (OSError, ValueError):
-            pass
-        _cache = entries
-        _cache_path_loaded = path
-        return _cache
-
-
-def _store(key: str, blocks: Dict[str, int], us: float):
-    global _cache, _cache_path_loaded
-    # merge into what's on disk, not just this process's view — a fresh
-    # process whose first act is autotune() must not wipe entries other
-    # runs persisted (loaded outside the non-reentrant lock)
-    entries = dict(_load_cache())
-    path = cache_path()
-    with _lock:
-        entries.update(_cache or {})
-        entries[key] = {"blocks": blocks, "us": round(us, 2),
-                        "time": time.time()}
-        try:
-            os.makedirs(os.path.dirname(path), exist_ok=True)
-            tmp = path + ".tmp"
-            with open(tmp, "w") as f:
-                json.dump({"version": 1, "entries": entries}, f, indent=1)
-            os.replace(tmp, path)
-        except OSError:
-            pass                    # cache is best-effort
-        _cache = entries
-        _cache_path_loaded = path
-
-
-def reset_cache_for_tests():
-    """Drop the in-memory cache so a changed $REPRO_AUTOTUNE_CACHE is
-    picked up (tests point it at tmp dirs)."""
-    global _cache, _cache_path_loaded
-    with _lock:
-        _cache = None
-        _cache_path_loaded = None
-
-
-# ---------------------------------------------------------------------------
-# keys and heuristics
-# ---------------------------------------------------------------------------
-
-def shape_bucket(shape: Sequence[int]) -> Tuple[int, ...]:
-    """Next power of two per dim: nearby problem sizes share a table
-    entry (and a measurement)."""
-    return tuple(1 if d <= 1 else 1 << (int(d) - 1).bit_length()
-                 for d in shape)
-
-
-def table_key(kernel: str, dtype, shape: Sequence[int],
-              backend: Optional[str] = None) -> str:
-    backend = backend or jax.default_backend()
-    bucket = "x".join(str(d) for d in shape_bucket(shape))
-    return f"{kernel}|{jnp.dtype(dtype).name}|{bucket}|{backend}"
-
-
-def _round_up(x: int, m: int) -> int:
-    return -(-x // m) * m
-
-
-def _heuristic(kernel: str, dtype, shape: Sequence[int],
-               backend: str) -> Dict[str, int]:
-    on_tpu = backend == "tpu"
-    itemsize = jnp.dtype(dtype).itemsize
-    sublane = {1: 32, 2: 16}.get(itemsize, 8)
-
-    if kernel == "fxp_matmul":
-        M, K, N = shape
-        if on_tpu:
-            # MXU-aligned tiles: minor dims multiples of 128, majors of
-            # the dtype sublane count; the legacy constants are the caps
-            return {"block_m": min(_round_up(M, sublane), 256),
-                    "block_n": min(_round_up(N, 128), 256),
-                    "block_k": min(_round_up(K, 128), 512)}
-        # interpret mode: one grid step if the operand blocks fit the
-        # budget, else keep M/N whole and chunk K (the sequential axis)
-        if M * K + K * N + M * N <= _INTERPRET_ELEMS:
-            return {"block_m": M, "block_n": N, "block_k": K}
-        bk = max(1, _INTERPRET_ELEMS // max(M + N, 1))
-        return {"block_m": M, "block_n": N, "block_k": min(K, bk)}
-
-    if kernel == "kmeans_assign":
-        N, D, K = shape
-        if on_tpu:
-            bn = min(_round_up(N, 8), 1024)
-            while bn > 8 and bn * D + K * D + K * D > _VMEM_ELEMS:
-                bn //= 2
-            return {"block_n": bn}
-        if N * D <= _INTERPRET_ELEMS:
-            return {"block_n": N}
-        return {"block_n": max(1, _INTERPRET_ELEMS // max(D, 1))}
-
-    if kernel == "split_hist":
-        N, F, nbc = shape
-        # the kernel materializes a (bn, F, nbc) one-hot per grid step
-        # (interpret) / VMEM tile (TPU) — bound bn by the one-hot budget
-        budget = _ONEHOT_ELEMS if not on_tpu else _VMEM_ELEMS
-        bn = max(1, budget // max(F * nbc, 1))
-        bn = min(N, bn, 1024 if not on_tpu else 512)
-        if on_tpu:
-            bn = max(8, (bn // 8) * 8)
-        return {"block_n": bn}
-
-    raise ValueError(f"unknown kernel {kernel!r}")
-
-
-def block_shapes(kernel: str, dtype, shape: Sequence[int],
-                 backend: Optional[str] = None) -> Dict[str, int]:
-    """Measured-or-heuristic block shapes for one kernel call.
-
-    Consults the on-disk table first (measured entries win), then the
-    per-backend heuristic.  Measured entries are clamped to the actual
-    shape — a table tuned at bucket size 512 must not hand a 512-wide
-    block to a 300-row call.
-
-    >>> block_shapes("fxp_matmul", "int8", (64, 128, 32),
-    ...              backend="cpu")
-    {'block_m': 64, 'block_n': 32, 'block_k': 128}
-    """
-    backend = backend or jax.default_backend()
-    entry = _load_cache().get(table_key(kernel, dtype, shape, backend))
-    if entry is not None:
-        blocks = dict(entry["blocks"])
-    else:
-        blocks = _heuristic(kernel, dtype, shape, backend)
-    dims = {"fxp_matmul": {"block_m": 0, "block_k": 1, "block_n": 2},
-            "kmeans_assign": {"block_n": 0},
-            "split_hist": {"block_n": 0}}[kernel]
-    for name, axis in dims.items():
-        blocks[name] = max(1, min(int(blocks[name]), int(shape[axis])))
-    return blocks
-
-
-# ---------------------------------------------------------------------------
-# measured autotuning
-# ---------------------------------------------------------------------------
-
-def _time_call(fn, iters: int = 3) -> float:
-    jax.block_until_ready(fn())            # compile + warm
-    best = float("inf")
-    for _ in range(iters):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn())
-        best = min(best, time.perf_counter() - t0)
-    return best * 1e6
-
-
-def _candidates(kernel: str, dtype, shape: Sequence[int],
-                backend: str) -> list:
-    heur = _heuristic(kernel, dtype, shape, backend)
-    cands = [heur]
-    if kernel == "fxp_matmul":
-        M, K, N = shape
-        for bm, bn, bk in ((256, 256, 512), (128, 128, 512),
-                           (M, N, K), (M, N, min(K, 1024))):
-            cands.append({"block_m": bm, "block_n": bn, "block_k": bk})
-    else:
-        N = shape[0]
-        base = heur["block_n"]
-        for bn in (N, base * 2, base // 2, 512, 128):
-            if bn and bn > 0:
-                cands.append({"block_n": int(bn)})
-    # clamp + dedup, preserving order
-    out, seen = [], set()
-    for c in cands:
-        c = {k: max(1, min(int(v), int(shape[
-            {"block_m": 0, "block_k": 1, "block_n": 2}[k]
-            if kernel == "fxp_matmul" else 0])))
-            for k, v in c.items()}
-        key = tuple(sorted(c.items()))
-        if key not in seen:
-            seen.add(key)
-            out.append(c)
-    return out
-
-
-def autotune(kernel: str, shape: Sequence[int], dtype=None,
-             *, interpret: Optional[bool] = None) -> Dict[str, int]:
-    """Measure candidate block shapes for ``(kernel, shape)`` on this
-    backend, persist the winner, and return it.
-
-    ``shape`` is the kernel's logical problem shape: ``(M, K, N)`` for
-    ``fxp_matmul``, ``(N, D, K)`` for ``kmeans_assign``,
-    ``(N, F, n_nodes*n_bins*n_classes)`` for ``split_hist``.
-    """
-    from repro.kernels import fxp_matmul as _fxp
-    from repro.kernels import kmeans_assign as _km
-    from repro.kernels import split_hist as _sh
-    from repro.kernels.ops import INTERPRET
-
-    backend = jax.default_backend()
-    interpret = INTERPRET if interpret is None else interpret
-    rng = np.random.default_rng(0)
-
-    if kernel == "fxp_matmul":
-        dtype = dtype or jnp.int8
-        M, K, N = shape
-        a = jnp.asarray(rng.integers(-100, 100, (M, K)), dtype)
-        b = jnp.asarray(rng.integers(-100, 100, (K, N)), dtype)
-
-        def run(blocks):
-            return jax.jit(lambda a, b: _fxp.fxp_matmul(
-                a, b, interpret=interpret, **blocks))(a, b)
-    elif kernel == "kmeans_assign":
-        dtype = dtype or jnp.float32
-        N, D, K = shape
-        x = jnp.asarray(rng.normal(size=(N, D)), dtype)
-        c = jnp.asarray(rng.normal(size=(K, D)), dtype)
-        w = jnp.ones((N,), jnp.float32)
-
-        def run(blocks):
-            return jax.jit(lambda x, c, w: _km.kmeans_assign(
-                x, c, w, interpret=interpret, **blocks))(x, c, w)
-    elif kernel == "split_hist":
-        dtype = dtype or jnp.float32
-        N, F, nbc = shape
-        n_nodes, n_bins, n_classes = 1, max(1, nbc), 1
-        node = jnp.zeros((N,), jnp.int32)
-        xb = jnp.asarray(rng.integers(0, n_bins, (N, F)), jnp.int32)
-        y = jnp.zeros((N,), jnp.int32)
-        w = jnp.ones((N,), jnp.float32)
-
-        def run(blocks):
-            return jax.jit(lambda n_, x_, y_, w_: _sh.split_hist(
-                n_, x_, y_, w_, n_nodes=n_nodes, n_bins=n_bins,
-                n_classes=n_classes, interpret=interpret, **blocks))(
-                    node, xb, y, w)
-    else:
-        raise ValueError(f"unknown kernel {kernel!r}")
-
-    best_blocks, best_us = None, float("inf")
-    for blocks in _candidates(kernel, dtype, shape, backend):
-        try:
-            us = _time_call(lambda b=blocks: run(b))
-        except Exception:           # a candidate may not lower — skip it
-            continue
-        if us < best_us:
-            best_blocks, best_us = blocks, us
-    if best_blocks is None:
-        best_blocks = _heuristic(kernel, dtype, shape, backend)
-        best_us = -1.0
-    _store(table_key(kernel, dtype, shape, backend), best_blocks,
-           best_us)
-    return dict(best_blocks)
+from repro.tuning.autotune import (  # noqa: F401
+    CANDIDATE_TABLE,
+    KERNEL_DIMS,
+    Measurement,
+    autotune,
+    block_shapes,
+    cache_path,
+    measure_candidates,
+    register_candidates,
+    reset_cache_for_tests,
+    shape_bucket,
+    table_key,
+    _candidates,
+    _heuristic,
+    _load_cache,
+    _store,
+    _time_call,
+)

@@ -34,12 +34,13 @@ non-block-aligned shapes internally — callers never see alignment
 constraints.
 
 Block shapes are no longer fixed constants: every kernel call asks
-``kernels.autotune.block_shapes`` for its tile sizes, keyed on
+``tuning.autotune.block_shapes`` for its tile sizes, keyed on
 ``(kernel, dtype, shape-bucket, backend)``.  Measured entries from the
 on-disk autotune cache win; otherwise a per-backend heuristic applies
 (MXU-aligned VMEM-bounded tiles on TPU, fewest-grid-steps blocks under
 interpret mode, where the kernel body runs once per grid step in
-Python).  See ``kernels/autotune.py``.
+Python).  See ``repro/tuning/autotune.py`` (``kernels/autotune.py`` is
+a back-compat re-export).
 
 Interaction with the scan engine's compile cache: ``PimGrid.make_runner``
 reads ``kernels_enabled()`` at trace time and bakes it into its cache
@@ -72,7 +73,7 @@ import jax.numpy as jnp
 
 from repro.core import lut as lut_mod
 from repro.core import quantize as qz
-from repro.kernels import autotune as _at
+from repro.tuning import autotune as _at
 from repro.kernels import fxp_matmul as _fxp
 from repro.kernels import kmeans_assign as _km
 from repro.kernels import lut_activation as _lut

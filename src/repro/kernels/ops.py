@@ -37,7 +37,7 @@ def lut_activation(x, table, *, x_min: float, x_max: float):
 
 @jax.jit
 def fxp_matmul(a, b):
-    from repro.kernels import autotune as _at
+    from repro.tuning import autotune as _at
     blocks = _at.block_shapes("fxp_matmul", a.dtype,
                               (a.shape[0], a.shape[1], b.shape[1]))
     return _fxp.fxp_matmul(a, b, interpret=INTERPRET, **blocks)
@@ -45,7 +45,7 @@ def fxp_matmul(a, b):
 
 @jax.jit
 def kmeans_assign(x, centroids, w=None):
-    from repro.kernels import autotune as _at
+    from repro.tuning import autotune as _at
     blocks = _at.block_shapes(
         "kmeans_assign", x.dtype,
         (x.shape[0], x.shape[1], centroids.shape[0]))
@@ -56,7 +56,7 @@ def kmeans_assign(x, centroids, w=None):
 @partial(jax.jit, static_argnames=("n_nodes", "n_bins", "n_classes"))
 def split_hist(node_idx, xbin, y, w=None, *, n_nodes: int, n_bins: int,
                n_classes: int):
-    from repro.kernels import autotune as _at
+    from repro.tuning import autotune as _at
     blocks = _at.block_shapes(
         "split_hist", jnp.float32,
         (xbin.shape[0], xbin.shape[1], n_nodes * n_bins * n_classes))

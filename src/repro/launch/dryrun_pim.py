@@ -52,8 +52,15 @@ error-feedback sparsifier on the slow hop.  All compose with
 ``--overlap-merge`` (the HLO overlap report applies unchanged) and
 ``--merge-every``.  ``adaptive`` is deliberately not lowered here: the
 controller is host-side and reuses the per-cadence runners this dry-run
-already lowers.  Any ``MergeFallbackWarning`` raised while building is
-surfaced in the output JSON (``merge_fallback_warnings``).
+already lowers.  ``--merge-plan auto`` runs the self-tuning layer's
+*cost-model pass* instead (``repro.tuning.CostModel`` on the lowered
+HLO of one merge round): the output JSON gains an ``auto_plan`` section
+with the chosen ``(cadence, wire format)``, per-format wire bytes, and
+the full ranked cost table, and the lowered artifact is the prior-best
+state-wire pipeline runner — the same one ``fit(merge_plan="auto")``
+dispatches on its first exploitation round.  Any
+``MergeFallbackWarning`` raised while building is surfaced in the
+output JSON (``merge_fallback_warnings``).
 """
 
 import argparse
@@ -120,6 +127,8 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     if compress_bits:
         compression = CompressionConfig(bits=compress_bits)
     outer = mp.AverageCommit()
+    extra = {}
+    force_pipeline = False
     if plan_name == "slowmo":
         outer = mp.SlowMo(beta=0.5)
     elif plan_name == "nesterov":
@@ -127,6 +136,36 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     elif plan_name == "topk":
         compression = CompressionConfig(
             bits=compress_bits or None, top_k_frac=0.125)
+    elif plan_name == "auto":
+        # the self-tuning layer's cost-model pass over the candidate
+        # grid: rank (cadence, wire-format) tuples from the lowered
+        # HLO of one merge round, emit the table, then lower the
+        # prior-best runner — the same artifact the controller's first
+        # exploitation round dispatches
+        from repro import tuning
+
+        preset = tuning.AutoTune()
+        model = tuning.CostModel.for_fit(grid, local_fn, update_fn,
+                                         w_spec, data_spec)
+        choices = tuning.candidate_choices(preset, compression)
+        cadences = tuning.cadence_ladder(max(merge_every, 1),
+                                         preset.k_max, preset.growth)
+        table = model.table(cadences=cadences, compressions=choices)
+        best = table[0]
+        extra["auto_plan"] = {
+            "chosen": {"cadence": int(best["cadence"]),
+                       "compression": best["compression"]},
+            "wire_bytes_by_format": {
+                tuning.compression_tag(c): int(model.wire_bytes(c))
+                for c in choices},
+            "cost_table": table,
+        }
+        merge_every = int(best["cadence"])
+        compression = {tuning.compression_tag(c): c
+                       for c in choices}[best["compression"]]
+        overlap = False
+        force_pipeline = True      # auto fits run the state-wire
+        # pipeline runner whatever the chosen wire format
     elif plan_name != "avg":
         raise SystemExit(
             f"--merge-plan {plan_name!r} is not lowerable here (the "
@@ -140,18 +179,18 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
             "optimizer (the sampler's step counter would be folded "
             "into its momentum — see core.mlalgos.api)")
 
-    if plan.is_exact_default:
+    if plan.is_exact_default and not force_pipeline:
         # the scan engine's own cached chunk runner — the artifact the
         # fit hot path dispatches, scanning `chunk` merge rounds
         runner = grid.make_runner(local_fn, update_fn,
                                   merge_every=merge_every)
         lowered = runner.lower(w_spec, data_spec, length=chunk)
-        return lowered, lowered.compile(), mesh
+        return lowered, lowered.compile(), mesh, extra
 
     # plan modes: lower the composed runner on its own carry layout —
     # (state[, pending], ef, mom); see distributed.merge_plan.run_fit
     from jax.sharding import NamedSharding, PartitionSpec as P
-    state_wire = merge_every > 1
+    state_wire = merge_every > 1 or force_pipeline
     rs = mp.pipeline_runners(grid, local_fn, update_fn,
                              merge_every=merge_every, overlap=overlap,
                              compression=compression,
@@ -187,7 +226,7 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
     else:
         carry = (w_spec, ef_spec, mom_spec)
     lowered = runner.lower(carry, data_spec, length=chunk)
-    return lowered, lowered.compile(), mesh
+    return lowered, lowered.compile(), mesh, extra
 
 
 def main():
@@ -214,24 +253,28 @@ def main():
                     help="error-feedback fixed-point width on the slow "
                          "hop (0 = exact merges)")
     ap.add_argument("--merge-plan", default="avg",
-                    choices=("avg", "slowmo", "nesterov", "topk"),
+                    choices=("avg", "slowmo", "nesterov", "topk",
+                             "auto"),
                     help="composed merge plan to lower: slowmo/nesterov "
                          "add the outer-momentum carry leaf, topk the "
-                         "top-k EF sparsifier on the slow hop")
+                         "top-k EF sparsifier on the slow hop; auto "
+                         "runs the repro.tuning cost model over the "
+                         "candidate grid, emits the ranked cost table "
+                         "+ chosen plan, and lowers the prior-best "
+                         "runner")
     args = ap.parse_args()
 
     import warnings as _warnings
     from repro.distributed.merge_plan import MergeFallbackWarning
     with _warnings.catch_warnings(record=True) as caught:
         _warnings.simplefilter("always", MergeFallbackWarning)
-        lowered, compiled, mesh = build(args.multi_pod, rows=args.rows,
-                                        merge_every=args.merge_every,
-                                        chunk=args.chunk,
-                                        overlap=args.overlap_merge,
-                                        compress_bits=args.compress_bits,
-                                        plan_name=args.merge_plan,
-                                        workload=args.workload,
-                                        batch_size=args.batch_size)
+        lowered, compiled, mesh, extra = build(
+            args.multi_pod, rows=args.rows,
+            merge_every=args.merge_every, chunk=args.chunk,
+            overlap=args.overlap_merge,
+            compress_bits=args.compress_bits,
+            plan_name=args.merge_plan, workload=args.workload,
+            batch_size=args.batch_size)
     fallback_warnings = [str(w.message) for w in caught
                          if issubclass(w.category, MergeFallbackWarning)]
     mem = compiled.memory_analysis()
@@ -268,6 +311,7 @@ def main():
         "roofline": terms,
         "collectives": parsed.summary()["collective_by_group"],
     }
+    out.update(extra)              # auto: chosen plan + ranked cost table
     if args.overlap_merge:
         report = ra.merge_overlap_report(hlo_text)
         out["merge_overlap"] = report

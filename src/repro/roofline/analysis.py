@@ -530,6 +530,66 @@ def roofline_terms(parsed: ParsedHLO, cost: dict, *, n_chips: int,
     }
 
 
+def predict_round(parsed: ParsedHLO, *, n_chips: int = 1,
+                  cadence: int = 1, wire_bytes: float = 0.0,
+                  overlap: bool = False, baseline_cadence: int = 1,
+                  encode_bytes: float = 0.0,
+                  wire_bw: float = None) -> dict:
+    """Per-round time prediction for a candidate merge plan — the
+    consumable entry point the tuning layer builds its cost model on
+    (``repro.tuning.CostModel``).
+
+    ``parsed`` is the ``analyze_hlo`` of ONE lowered merge round at
+    ``baseline_cadence`` (normally 1).  The prediction decomposes a
+    candidate round into:
+
+    * ``t_local_s`` — per-local-step compute/memory bound, read off the
+      roofline terms of the lowered round and normalised by
+      ``baseline_cadence``.  Kernel block shapes are already baked into
+      the lowered HLO, so they enter the model through ``parsed``.
+    * ``t_merge_s`` — the merge cost: the round's fast-hop collectives
+      (``ici_s``) plus the slow "host hop" modelled analytically from
+      the candidate's compressed ``wire_bytes`` over the DCN bandwidth
+      (``max`` with the lowered ``dcn_s`` — the wire-bytes term models
+      the same hop the HLO's cross-pod collectives implement, so the
+      two are never double counted).  ``encode_bytes`` adds the
+      encode/decode traffic a compressed wire costs (a few passes over
+      the dense tree), so compression only wins when the wire saving
+      beats its encode cost.  ``wire_bw`` overrides the slow hop's
+      bandwidth (default ``hw.DCN_BW_PER_CHIP``): a single-chip grid
+      has no inter-chip link at all — its "slow hop" is an in-memory
+      reduction moving at ``hw.HBM_BW`` — and pricing it at DCN speed
+      would make compression look like a win on a hop that is pure
+      compute (``repro.tuning.CostModel`` passes the right one).
+    * a candidate round then costs ``cadence * t_local + t_merge``, or
+      with ``overlap=True`` only the merge time that ``cadence`` local
+      steps cannot hide.
+
+    Returns a dict with those terms plus ``round_s`` and
+    ``us_per_step`` (the ranking key).
+    """
+    terms = roofline_terms(parsed, {}, n_chips=n_chips)
+    base = max(int(baseline_cadence), 1)
+    t_local = max(terms["compute_s"], terms["memory_s"]) / base
+    t_encode = float(encode_bytes) / hw.HBM_BW
+    bw = hw.DCN_BW_PER_CHIP if wire_bw is None else float(wire_bw)
+    t_merge = terms["ici_s"] + t_encode + \
+        max(terms["dcn_s"], float(wire_bytes) / bw)
+    k = max(int(cadence), 1)
+    exposed = max(0.0, t_merge - k * t_local) if overlap else t_merge
+    round_s = k * t_local + exposed
+    return {
+        "cadence": k,
+        "overlap": bool(overlap),
+        "wire_bytes": float(wire_bytes),
+        "t_local_s": float(t_local),
+        "t_merge_s": float(t_merge),
+        "exposed_merge_s": float(exposed),
+        "round_s": float(round_s),
+        "us_per_step": float(round_s / k * 1e6),
+    }
+
+
 # ---------------------------------------------------------------------------
 # analytic model FLOPs (6·N·D convention) for the "useful compute" ratio
 # ---------------------------------------------------------------------------

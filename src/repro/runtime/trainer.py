@@ -31,6 +31,8 @@ Production posture for 1000+ nodes (DESIGN.md §6):
 from __future__ import annotations
 
 import dataclasses
+import queue
+import threading
 import time
 from typing import Any, Callable, Dict, Optional
 
@@ -81,6 +83,94 @@ class TrainerConfig:
     # host-side one by one.  False keeps the per-leaf legacy flush as
     # the parity oracle.
     fused_finite: bool = True
+    # Fully asynchronous metrics sink: flush windows are handed to a
+    # background consumer thread instead of materializing at the
+    # boundary, so log-boundary flushes cost the hot loop nothing.
+    # Synchronization points stay exactly where correctness needs
+    # them — the sink is drained (all queued windows verified finite)
+    # before every checkpoint save, before a log callback fires, and
+    # at run end — so a checkpoint still never covers unverified steps
+    # and ``history`` is complete when ``run`` returns.  A non-finite
+    # window detected on the consumer raises on the main loop at the
+    # next poll/drain and triggers the same restore-and-replay path as
+    # the synchronous flush.  False keeps the in-line flush (the
+    # parity oracle).
+    async_metrics: bool = False
+
+
+class _MetricsSink:
+    """Background consumer for flush windows (``async_metrics=True``).
+
+    The main loop ``submit``\\ s whole pending windows (lists of
+    ``(step, metrics, dt, stragglers)`` tuples); a single daemon thread
+    runs the trainer's ``_flush`` on them in submission order, so
+    ``history`` ordering is identical to the synchronous path.  A
+    window that fails the finite check parks its exception; ``poll``
+    re-raises it on the main thread, and while an exception is parked
+    (or a ``reset`` is discarding) subsequent queued windows are
+    *skipped*, not flushed — they cover post-failure steps that the
+    restore/replay is about to roll back, and must never reach
+    ``history``.
+    """
+
+    def __init__(self, flush_fn: Callable):
+        self._flush = flush_fn
+        self._q: queue.Queue = queue.Queue()
+        self._exc: Optional[BaseException] = None
+        self._skip = False
+        self._lock = threading.Lock()
+        self._thread = threading.Thread(
+            target=self._consume, name="trainer-metrics-sink",
+            daemon=True)
+        self._thread.start()
+
+    def _consume(self):
+        while True:
+            window = self._q.get()
+            try:
+                if window is None:
+                    return
+                with self._lock:
+                    skip = self._skip or self._exc is not None
+                if not skip:
+                    self._flush(window)
+            except BaseException as e:  # parked for the main thread
+                with self._lock:
+                    self._exc = e
+            finally:
+                self._q.task_done()
+
+    def submit(self, window: list):
+        self._q.put(window)
+
+    def poll(self):
+        """Re-raise (and clear) a consumer exception on the caller."""
+        with self._lock:
+            exc, self._exc = self._exc, None
+        if exc is not None:
+            raise exc
+
+    def drain(self):
+        """Block until every submitted window is verified + appended,
+        then surface any failure — the pre-checkpoint / pre-callback /
+        end-of-run synchronization point."""
+        self._q.join()
+        self.poll()
+
+    def reset(self):
+        """Discard everything still queued without flushing it (the
+        failure path: queued windows cover steps the restore is rolling
+        back) and clear any parked exception."""
+        with self._lock:
+            self._skip = True
+        self._q.join()
+        with self._lock:
+            self._skip = False
+            self._exc = None
+
+    def close(self):
+        self._q.put(None)
+        self._thread.join(timeout=30.0)
 
 
 class Trainer:
@@ -127,13 +217,19 @@ class Trainer:
                 raise ValueError(
                     "pass either TrainerConfig.merge_plan or the legacy "
                     "merge_every/merge_compression knobs, not both")
-            if getattr(plan, "adaptive", False):
+            if isinstance(plan, str):
+                from repro.distributed import merge_plan as mp
+                plan = mp.MergePlan.resolve(plan)
+            if getattr(plan, "adaptive", False) or \
+                    getattr(plan, "auto", False):
                 raise ValueError(
-                    "TrainerConfig.merge_plan cannot be adaptive: the "
-                    "Trainer aligns flush/checkpoint boundaries to a "
-                    "FIXED cadence, but AdaptiveCadence re-decides k "
-                    "mid-run — a boundary computed from the starting "
-                    "cadence could checkpoint vDPU-unsynced state")
+                    "TrainerConfig.merge_plan cannot be adaptive or "
+                    "auto: the Trainer aligns flush/checkpoint "
+                    "boundaries to a FIXED cadence, but controller-"
+                    "driven plans (AdaptiveCadence, merge_plan=\"auto\")"
+                    " re-decide k mid-run — a boundary computed from "
+                    "the starting cadence could checkpoint "
+                    "vDPU-unsynced state")
             self._merge_every = plan.cadence
             self._merge_compression = plan.compression
         else:
@@ -146,6 +242,13 @@ class Trainer:
         self._restarts = 0
         self.straggler_steps = 0
         self.history: list = []
+        self._sink: Optional[_MetricsSink] = None
+        # round-granular dispatch (Trainer.for_program at cadence > 1):
+        # step_fn then runs _steps_per_call local steps per call and
+        # returns stacked (k, ...) metrics; _round_factory(k) builds
+        # the remainder round for a partial final window
+        self._steps_per_call = 1
+        self._round_factory: Optional[Callable[[int], Callable]] = None
 
         self.ckpt = None
         if config.ckpt_dir:
@@ -176,35 +279,68 @@ class Trainer:
         checkpoint/restart, straggler tracking and fused finite checks
         through one call instead of hand-wiring ``step_fn``.
 
-        One trainer step = one merge-per-step training step over the
-        program's resident data (the batch function is a no-op: the
-        dataset never moves, insight I4).  ``config.batch_size`` turns
-        on the on-device minibatch sampler; its step counter rides in
-        the checkpointed state, so restore-and-replay resumes the epoch
-        schedule exactly where it left off.
+        At the default cadence, one trainer step = one merge-per-step
+        training step over the program's resident data (the batch
+        function is a no-op: the dataset never moves, insight I4).
+        ``config.batch_size`` turns on the on-device minibatch sampler;
+        its step counter rides in the checkpointed state, so
+        restore-and-replay resumes the epoch schedule exactly where it
+        left off.
 
-        The trainer's flush/checkpoint boundary math counts *steps*, so
-        this entry requires a cadence-1 exact plan (``merge_every`` /
-        ``merge_plan`` beyond the default are refused — run cadence
-        fits through ``api.fit``/``PimGrid.fit``, which own the round
-        structure).
+        Exact cadence plans (``merge_every=k`` or
+        ``merge_plan=MergePlan(cadence=k)``) are driven
+        round-granularly: each dispatch runs one
+        :meth:`~repro.core.mlalgos.api.Program.round_fn` merge round
+        (``k`` local steps, one merge), history still gets one entry
+        per local step, and the trainer's existing boundary deferral
+        aligns every checkpoint/log flush to a merge boundary — state
+        is only checkpointed when the vDPU copies have been re-synced.
+        Plans that need an EF/momentum carry or re-decide cadence
+        mid-run (overlap, compression, stateful outers, adaptive,
+        auto) are still refused — run those through ``api.fit`` /
+        ``PimGrid.fit``, which own the pipeline carry.
         """
+        from repro.distributed import merge_plan as mp
+
         config = config if config is not None else TrainerConfig()
-        plan = config.merge_plan
-        non_default = (config.merge_every != 1
-                       or config.merge_compression is not None
-                       or (plan is not None and not getattr(
-                           plan, "is_exact_default", False)))
-        if non_default or (plan is not None and plan.cadence != 1):
+        if config.merge_plan is None:
+            plan = mp.MergePlan.resolve(
+                None, merge_every=config.merge_every,
+                merge_compression=config.merge_compression)
+        else:
+            plan = mp.MergePlan.resolve(config.merge_plan)
+        unsupported = (plan.overlap or plan.compression is not None
+                       or type(plan.outer) is not mp.AverageCommit)
+        if unsupported:
             raise ValueError(
-                "Trainer.for_program drives merge-per-step training "
-                "(the trainer's boundary math counts steps, and the "
-                "one-step step_fn has no EF/momentum carry); run "
-                "cadence/pipeline plans through api.fit or PimGrid.fit")
-        step_fn, state0 = program.step_fn(
-            batch_size=config.batch_size, sample_seed=sample_seed)
-        return cls(step_fn, state0, lambda step: None, config,
-                   state_placer=state_placer, merge_state=merge_state)
+                "Trainer.for_program drives exact merge rounds only "
+                "(no EF/momentum carry rides in the one-round "
+                "round_fn); run overlap/compression/outer-optimizer/"
+                "adaptive/auto plans through api.fit or PimGrid.fit")
+        cadence = plan.cadence
+        if cadence == 1:
+            step_fn, state0 = program.step_fn(
+                batch_size=config.batch_size, sample_seed=sample_seed)
+            return cls(step_fn, state0, lambda step: None, config,
+                       state_placer=state_placer,
+                       merge_state=merge_state)
+        round_fn, state0 = program.round_fn(
+            cadence, batch_size=config.batch_size,
+            sample_seed=sample_seed)
+        tr = cls(round_fn, state0, lambda step: None, config,
+                 state_placer=state_placer, merge_state=merge_state)
+        tr._steps_per_call = cadence
+        rounds = {cadence: round_fn}
+
+        def factory(k, _p=program, _c=config, _s=sample_seed,
+                    _cache=rounds):
+            if k not in _cache:
+                _cache[k] = _p.round_fn(
+                    k, batch_size=_c.batch_size, sample_seed=_s)[0]
+            return _cache[k]
+
+        tr._round_factory = factory
+        return tr
 
     def _compression_tag(self) -> Optional[str]:
         cmp = self._merge_compression
@@ -300,53 +436,111 @@ class Trainer:
 
     def run(self, n_steps: int, callback: Optional[Callable] = None
             ) -> Dict[str, Any]:
+        if self.cfg.async_metrics:
+            self._sink = _MetricsSink(self._flush)
+        try:
+            return self._run(n_steps, callback)
+        finally:
+            if self._sink is not None:
+                self._sink.close()
+                self._sink = None
+
+    def _run(self, n_steps: int, callback: Optional[Callable]
+             ) -> Dict[str, Any]:
         step = self.start_step
         end = self.start_step + n_steps
         pending: list = []   # un-materialized (step, metrics, dt, strag)
         while step < end:
             try:
+                # surface any failure the background sink found in a
+                # previously submitted window (inside the try so it
+                # takes the same restore-and-replay path)
+                if self._sink is not None:
+                    self._sink.poll()
+                # round-granular dispatch (for_program at cadence > 1):
+                # one call = one merge round of `stride` local steps; a
+                # partial final round compiles through _round_factory
+                stride = 1
+                fn = self.step_fn
+                if self._steps_per_call > 1:
+                    stride = min(self._steps_per_call, end - step)
+                    if stride != self._steps_per_call:
+                        fn = self._round_factory(stride)
                 t0 = time.perf_counter()
                 batch = self.batch_fn(step)
                 # hot path: no float()/device_get here — the loss stays
                 # on-device and the step returns without blocking
-                self.state, metrics = self.step_fn(self.state, batch)
+                self.state, metrics = fn(self.state, batch)
                 dt = time.perf_counter() - t0
                 self._track_time(dt)
-                pending.append((step, metrics, dt, self.straggler_steps))
+                last = step + stride - 1
+                if stride == 1 and self._steps_per_call == 1:
+                    pending.append(
+                        (step, metrics, dt, self.straggler_steps))
+                else:
+                    # round metrics come back stacked (stride, ...) —
+                    # split into per-step history entries, sharing the
+                    # round's wall time evenly
+                    share = dt / stride
+                    for j in range(stride):
+                        mj = jax.tree.map(lambda x, j=j: x[j], metrics)
+                        pending.append((step + j, mj, share,
+                                        self.straggler_steps))
                 # a boundary that lands mid merge-round defers to the
                 # next merge (pending keeps accumulating): state is only
                 # globally meaningful — and safe to checkpoint — once
                 # the vDPU states have been re-synced
-                at_merge = ((step + 1) % self._merge_every == 0
-                            or step == end - 1)
+                at_merge = ((last + 1) % self._merge_every == 0
+                            or last == end - 1)
                 # the ckpt multiple this window covers must itself be
                 # past start_step — otherwise cadence > 1 would fire a
                 # near-initial checkpoint at the first merge boundary
-                # (the window [step-m+1, step] covering multiple 0)
+                # (the window [last-m+1, last] covering multiple 0)
                 at_ckpt = (self.ckpt is not None and at_merge
-                           and step % self.cfg.ckpt_every
+                           and last % self.cfg.ckpt_every
                            < self._merge_every
-                           and step - step % self.cfg.ckpt_every
+                           and last - last % self.cfg.ckpt_every
                            > self.start_step)
-                at_log = at_merge and step % self.cfg.log_every \
+                at_log = at_merge and last % self.cfg.log_every \
                     < self._merge_every
-                if at_ckpt or at_log or step == end - 1:
-                    # materialize + finite-check everything accumulated
-                    # since the last boundary (raises before a checkpoint
-                    # could capture a post-NaN state)
-                    flushed = self._flush(pending)
-                    pending = []
-                    if callback and at_log:
-                        callback(step, flushed[-1])
+                if at_ckpt or at_log or last == end - 1:
+                    if self._sink is not None:
+                        # async: hand the window to the consumer; only
+                        # synchronize where correctness demands it —
+                        # before a checkpoint, a callback, or run end
+                        self._sink.submit(pending)
+                        pending = []
+                        if at_ckpt or last == end - 1 or \
+                                (callback and at_log):
+                            self._sink.drain()
+                        if callback and at_log:
+                            callback(last, self.history[-1])
+                    else:
+                        # materialize + finite-check everything
+                        # accumulated since the last boundary (raises
+                        # before a checkpoint could capture a post-NaN
+                        # state)
+                        flushed = self._flush(pending)
+                        pending = []
+                        if callback and at_log:
+                            callback(last, flushed[-1])
                     if at_ckpt:
-                        self._save(step)
-                step += 1
+                        self._save(last)
+                step = last + 1
             except (FloatingPointError, RuntimeError) as e:  # failure path
                 pending = []
                 self._restarts += 1
                 if self.ckpt is None or self._restarts > \
                         self.cfg.max_restarts:
                     raise
+                if self._sink is not None:
+                    # queued windows cover steps the restore is about
+                    # to roll back — discard them unflushed
+                    self._sink.reset()
+                # an in-flight async save must land before restore
+                # picks "latest", or replay could start from a
+                # checkpoint that is still being written
+                self.ckpt.wait()
                 # layout-robust restore (same path as construction):
                 # a seeded run resumed over bare pre-compression
                 # checkpoints must also *recover* through them
@@ -357,6 +551,8 @@ class Trainer:
                     ) from e
                 ck_step, self.state, _ = resumed
                 step = ck_step + 1          # replay from checkpoint
+        if self._sink is not None:
+            self._sink.drain()
         if self.ckpt:
             self._save(end - 1)
             self.ckpt.wait()

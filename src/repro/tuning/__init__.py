@@ -1,0 +1,64 @@
+"""repro.tuning — the unified self-tuning layer.
+
+One subsystem owns every plan-parameter selection the repo used to
+spread over four disconnected mechanisms:
+
+* ``tuning.autotune`` — kernel block shapes (measured-or-heuristic,
+  on-disk cache; re-homed from ``kernels/autotune.py``).
+* ``tuning.cost`` — :class:`CostModel`, the roofline-backed prior:
+  per-round time and wire bytes for a candidate ``(cadence,
+  compression, overlap)`` from the lowered HLO of one merge round.
+* ``tuning.controller`` — :class:`PlanController` (the cadence rule
+  folded in from ``AdaptiveCadence`` plus measured wire-format
+  selection) and ``run_controlled_fit``, the driver behind
+  ``fit(merge_plan="auto")``.
+* ``tuning.measurement`` — :class:`Measurement`, the one record all
+  measured/predicted timings speak.
+
+``fit(merge_plan="auto")`` is the user-facing entry point — see
+``MergePlan.resolve`` and docs/ARCHITECTURE.md "Self-tuning".
+
+This ``__init__`` loads ``cost``/``controller`` lazily (PEP 562):
+``kernels.dispatch`` imports ``tuning.autotune`` at module import time,
+and eagerly pulling the controller here would cycle back through the
+distributed layer.
+"""
+
+from repro.tuning.autotune import (  # noqa: F401
+    block_shapes,
+    measure_candidates,
+    register_candidates,
+)
+from repro.tuning.measurement import Measurement  # noqa: F401
+
+# NOTE: the `autotune` *function* is deliberately not re-exported here —
+# it would shadow the `repro.tuning.autotune` submodule attribute that
+# `from repro.tuning import autotune as _at` (kernels.dispatch) relies
+# on.  Call it as `tuning.autotune.autotune(...)`.
+
+_LAZY = {
+    "CostModel": ("repro.tuning.cost", "CostModel"),
+    "compression_tag": ("repro.tuning.cost", "compression_tag"),
+    "AutoTune": ("repro.tuning.controller", "AutoTune"),
+    "PlanController": ("repro.tuning.controller", "PlanController"),
+    "auto_plan": ("repro.tuning.controller", "auto_plan"),
+    "cadence_ladder": ("repro.tuning.controller", "cadence_ladder"),
+    "candidate_choices": ("repro.tuning.controller",
+                          "candidate_choices"),
+    "run_controlled_fit": ("repro.tuning.controller",
+                           "run_controlled_fit"),
+}
+
+__all__ = ["Measurement", "block_shapes", "measure_candidates",
+           "register_candidates", *sorted(_LAZY)]
+
+
+def __getattr__(name):
+    try:
+        mod_name, attr = _LAZY[name]
+    except KeyError:
+        raise AttributeError(
+            f"module {__name__!r} has no attribute {name!r}") from None
+    import importlib
+
+    return getattr(importlib.import_module(mod_name), attr)

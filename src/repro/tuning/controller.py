@@ -1,0 +1,415 @@
+"""The plan controller behind ``merge_plan="auto"`` — one host-side
+loop that owns every plan parameter the repo used to tune through four
+disconnected mechanisms.
+
+``PlanController`` folds the cadence rule that used to live as
+``merge_plan._CadenceController`` (``AdaptiveCadence`` is now a thin
+preset over it) together with wire-format selection:
+
+* **cadence** — grow ``k`` geometrically once successive merged-delta
+  norms stabilise (identical observe semantics to the old controller),
+  and optionally *shrink* — a delta-norm spike means the trajectory is
+  moving again, so halve ``k`` toward ``k_min`` and merge more often.
+* **compression** — candidates (exact / int8 EF / a top-k ladder from
+  ``compression.top_k_ladder``) are ranked by the roofline
+  ``CostModel`` prior, then revised by measured round times arriving
+  through the same :class:`~repro.tuning.measurement.Measurement`
+  record the kernel autotuner emits.  Short fits trust the prior
+  (exploration would eat the budget); long fits probe the top
+  candidates once each and exploit the measured winner.
+
+``run_controlled_fit`` is the fit driver for adaptive and auto plans:
+one merge round per dispatch while the controller is still deciding
+(always on the state wire, so the error-feedback buffer never changes
+shape across candidate switches), multi-round held dispatches once it
+has settled.  Every distinct ``(k, compression)`` compiles once —
+revisits ride the grid's runner cache, shared with the static-plan
+runners since the commit is the plain average.
+
+Decision traces land in ``merge_state["tuning_trace"]`` (see
+``docs/ARCHITECTURE.md`` "Self-tuning") so every choice is reproducible
+after the fact.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed import compression as comp
+from repro.distributed import merge_plan as mp
+from repro.distributed.compression import CompressionConfig
+from repro.tuning.cost import CostModel, compression_tag
+from repro.tuning.measurement import Measurement
+
+
+@dataclasses.dataclass(frozen=True)
+class AutoTune(mp.OuterOptimizer):
+    """The ``merge_plan="auto"`` preset: a host-side controller that
+    picks cadence AND wire format; the commit itself is the plain
+    average (so auto never changes what a merge *means*, only when and
+    how compressed it happens).
+
+    ``MergePlan(outer=AutoTune())`` with ``compression=None`` lets the
+    controller choose among exact / int8 / top-k wires; giving the plan
+    an explicit ``compression`` pins the wire and leaves only cadence
+    to the controller (the :class:`AdaptiveCadence` behaviour plus the
+    shrink rule)."""
+
+    k_max: int = 32
+    growth: int = 2
+    stable_ratio: float = 0.5
+    patience: int = 2
+    shrink: bool = True
+    spike_ratio: float = 4.0
+    k_min: int = 1
+    bits: int = 8
+    top_k_frac: float = 0.25
+    top_k_rungs: int = 2
+    explore_rounds: int = 1
+    min_steps_to_explore: int = 96
+    hold_rounds: int = 8
+    # minimum predicted relative win a non-exact wire needs before the
+    # prior alone may pick it: on small wires every candidate ties
+    # within nanoseconds of modeled link time, and an argmin over that
+    # noise would trade real encode compute for a fictional saving.
+    # Measured evidence (an explored fit) is never subject to this.
+    prior_margin: float = 0.05
+
+    is_auto = True
+
+    def __post_init__(self):
+        if self.k_max < 1 or self.growth < 2:
+            raise ValueError(
+                f"AutoTune needs k_max >= 1 and growth >= 2, got "
+                f"k_max={self.k_max} growth={self.growth}")
+        if not 1 <= self.k_min <= self.k_max:
+            raise ValueError(
+                f"AutoTune needs 1 <= k_min <= k_max, got "
+                f"k_min={self.k_min} k_max={self.k_max}")
+        if self.spike_ratio <= 1.0:
+            raise ValueError(
+                f"AutoTune.spike_ratio must be > 1, got "
+                f"{self.spike_ratio}")
+        if not 0.0 <= self.prior_margin < 1.0:
+            raise ValueError(
+                f"AutoTune.prior_margin must be in [0, 1), got "
+                f"{self.prior_margin}")
+
+
+def auto_plan(**kwargs) -> "mp.MergePlan":
+    """``MergePlan`` for the ``"auto"`` spelling — kwargs forward to
+    :class:`AutoTune`."""
+    return mp.MergePlan(outer=AutoTune(**kwargs))
+
+
+def cadence_ladder(k0: int, k_max: int, growth: int) -> List[int]:
+    """The cadences a controller can visit: ``k0, k0*growth, ...``
+    capped at ``k_max`` (the cost table enumerates exactly these)."""
+    ks = [max(1, int(k0))]
+    while ks[-1] < k_max:
+        ks.append(min(ks[-1] * growth, k_max))
+    return ks
+
+
+class PlanController:
+    """Mutable per-fit tuning state: the cadence rule folded in from
+    ``merge_plan._CadenceController`` plus measured-vs-prior wire-format
+    selection.  Pure host-side Python — ``observe``/``decide`` take and
+    return plain floats and ints, so the whole decision sequence is
+    testable against a numpy oracle without touching a device."""
+
+    def __init__(self, *, k0: int, k_max: int, growth: int = 2,
+                 stable_ratio: float = 0.5, patience: int = 2,
+                 shrink: bool = False, spike_ratio: float = 4.0,
+                 k_min: int = 1,
+                 choices: Sequence[Optional[CompressionConfig]] = (None,),
+                 prior: Optional[dict] = None,
+                 explore_rounds: int = 0,
+                 prior_margin: float = 0.0):
+        self.k = max(1, int(k0))
+        self.k_max = int(k_max)
+        self.growth = int(growth)
+        self.stable_ratio = float(stable_ratio)
+        self.patience = int(patience)
+        self.shrink = bool(shrink)
+        self.spike_ratio = float(spike_ratio)
+        self.k_min = max(1, int(k_min))
+        self._prev: Optional[float] = None
+        self._stable = 0
+        self.cadence_trace: List[int] = [self.k]
+
+        self.choices = list(choices)
+        self.prior_margin = float(prior_margin)
+        self.prior = dict(prior or {})          # tag -> predicted us/step
+        self.measured: dict = {}                # tag -> best measured us/step
+        self.cost_table: List[dict] = []
+        self.trace: List[dict] = []
+        # exploration queue: cost-ranked choice indices, each probed for
+        # ``explore_rounds`` scored (non-warmup) rounds before the
+        # controller commits to the measured winner
+        order = sorted(range(len(self.choices)),
+                       key=lambda i: self.prior.get(
+                           compression_tag(self.choices[i]), float(i)))
+        self._pending: List[int] = list(order) if explore_rounds > 0 \
+            and len(self.choices) > 1 else []
+        self._probe_left = {i: int(explore_rounds) for i in self._pending}
+        self._explored = bool(self._pending)
+        self.choice = self.choices[order[0]] if order else None
+
+    # -- the cadence rule (folded _CadenceController) ------------------
+
+    def observe(self, delta_norm: float) -> int:
+        """Feed one round's merged-delta norm; returns the cadence for
+        the next round.  Grow-on-stability exactly as the legacy
+        controller; with ``shrink`` enabled a spike (norm jumping past
+        ``spike_ratio`` × previous) halves ``k`` toward ``k_min`` and
+        re-bases before any growth logic runs."""
+        if self.shrink and self._prev is not None and \
+                delta_norm > self.spike_ratio * max(self._prev, 1e-12):
+            self.k = max(self.k_min, self.k // 2)
+            self._stable = 0
+            self._prev = None     # k changed -> delta magnitude re-bases
+            self.cadence_trace.append(self.k)
+            return self.k
+        if self._prev is not None:
+            rel = abs(delta_norm - self._prev) / max(self._prev, 1e-12)
+            self._stable = self._stable + 1 \
+                if rel <= self.stable_ratio else 0
+        self._prev = delta_norm
+        if self._stable >= self.patience and self.k < self.k_max:
+            self.k = min(self.k * self.growth, self.k_max)
+            self._stable = 0
+            self._prev = None     # k changed -> delta magnitude re-bases
+        self.cadence_trace.append(self.k)
+        return self.k
+
+    # -- wire-format selection ----------------------------------------
+
+    def decide(self) -> tuple:
+        """``(cadence, compression)`` for the next round: the head of
+        the exploration queue while probing; after exploration the
+        measured argmin; without exploration the prior argmin.  Modeled
+        (prior) and wall-clock (measured) microseconds are different
+        scales — a prediction from roofline hardware constants must
+        never be compared against a measured time on this host — so a
+        decision ranks within exactly one of the two, never across.
+
+        The prior-only branch additionally honours ``prior_margin``:
+        the exact wire (when it is a candidate) keeps the choice unless
+        the prior argmin beats it by more than that relative fraction.
+        On a small wire the modeled link times of every format tie
+        within nanoseconds, and a bare argmin would pick a compressed
+        wire on noise — paying real encode compute for a saving the
+        model can't resolve.  Measured timings are never margined."""
+        if self._pending:
+            self.choice = self.choices[self._pending[0]]
+        elif self._explored and self.measured:
+            self.choice = min(
+                self.choices,
+                key=lambda c: self.measured.get(compression_tag(c),
+                                                float("inf")))
+        elif len(self.choices) > 1:
+            best = min(
+                self.choices,
+                key=lambda c: self.prior.get(compression_tag(c),
+                                             float("inf")))
+            exact_us = self.prior.get("exact", float("inf"))
+            best_us = self.prior.get(compression_tag(best), float("inf"))
+            if None in self.choices and exact_us < float("inf") and \
+                    not best_us < exact_us * (1.0 - self.prior_margin):
+                best = None
+            self.choice = best
+        else:
+            self.choice = self.choices[0]
+        return self.k, self.choice
+
+    def observe_round(self, m: Measurement, choice=None) -> None:
+        """Feed one dispatched round's outcome: non-warmup timings
+        update the measured table (and retire exploration probes);
+        the delta norm feeds the cadence rule."""
+        tag = compression_tag(choice if choice is not None
+                              else self.choice)
+        if not m.warmup:
+            us = m.us_per_step()
+            cur = self.measured.get(tag)
+            self.measured[tag] = us if cur is None else min(cur, us)
+            if self._pending:
+                head = self._pending[0]
+                if compression_tag(self.choices[head]) == tag:
+                    self._probe_left[head] -= 1
+                    if self._probe_left[head] <= 0:
+                        self._pending.pop(0)
+        if m.delta_norm is not None:
+            self.observe(float(m.delta_norm))
+
+    def settled(self) -> bool:
+        """No exploration left and the cadence cannot grow further —
+        the driver may batch multiple rounds per dispatch (a shrink
+        spike unsettles it again)."""
+        return not self._pending and self.k >= self.k_max
+
+    def chosen(self) -> dict:
+        return {"cadence": int(self.k),
+                "compression": compression_tag(self.choice)}
+
+    def trace_dict(self) -> dict:
+        """The ``merge_state["tuning_trace"]`` payload: everything
+        needed to replay the decision sequence offline."""
+        return {
+            "choices": [compression_tag(c) for c in self.choices],
+            "prior_margin": self.prior_margin,
+            "prior_us_per_step": {t: round(v, 3)
+                                  for t, v in self.prior.items()},
+            "measured_us_per_step": {t: round(v, 3)
+                                     for t, v in self.measured.items()},
+            "cost_table": self.cost_table,
+            "decisions": list(self.trace),
+            "chosen": self.chosen(),
+            "cadence_trace": list(self.cadence_trace),
+        }
+
+
+def candidate_choices(preset, compression) -> list:
+    """The wire-format candidate set for one controlled fit: pinned to
+    the plan's compression when given, else exact / int8 / the adaptive
+    top-k ladder."""
+    if compression is not None or not getattr(preset, "is_auto", False):
+        return [compression]
+    return [None, CompressionConfig(bits=preset.bits),
+            *comp.top_k_ladder(preset.top_k_frac, bits=preset.bits,
+                               rungs=preset.top_k_rungs)]
+
+
+def run_controlled_fit(grid, plan, *, state, ef, local_fn, update_fn,
+                       data, steps, callback):
+    """Fit driver for adaptive and auto plans (called from
+    ``merge_plan.run_fit``).  One merge round per dispatch while the
+    controller is deciding — always on the state wire so the EF buffer
+    shape is independent of cadence and wire format — then held
+    multi-round dispatches once settled.  Returns ``(state, history,
+    ef, controller)``."""
+    preset = plan.outer
+    auto = getattr(preset, "is_auto", False)
+    choices = candidate_choices(preset, plan.compression)
+
+    prior: dict = {}
+    cost_rows: List[dict] = []
+    model = None
+    ef0 = None
+    donating = mp.donating_backend()
+    if len(choices) > 1:
+        # the prior, the ranked table, and the zero EF buffer are pure
+        # functions of the cached model and the candidate grid — cache
+        # the whole setup in one grid-cache entry so repeated short
+        # fits (the bench_scaling timed cells) pay one lookup, not a
+        # re-prediction of every candidate per call
+        from repro.kernels.dispatch import kernels_enabled
+        skey = ("tuning_setup", mp.fn_signature(local_fn),
+                mp.fn_signature(update_fn), kernels_enabled(),
+                int(plan.cadence), int(preset.k_max), int(preset.growth),
+                tuple(compression_tag(c) for c in choices))
+        setup = mp.cache_get(grid, skey)
+        if setup is None:
+            model = CostModel.for_fit(grid, local_fn, update_fn, state,
+                                      data)
+            for c in choices:
+                m = model.prediction(cadence=plan.cadence, compression=c)
+                prior[compression_tag(c)] = m.us_per_step()
+            cost_rows = model.table(
+                cadences=cadence_ladder(plan.cadence, preset.k_max,
+                                        preset.growth),
+                compressions=choices)
+            ef0 = mp.init_merge_error(grid, model.wire)
+            mp.cache_put(grid, skey, (model, prior, cost_rows, ef0),
+                         local_fn, update_fn)
+        else:
+            model, prior, cost_rows, ef0 = setup
+
+    explore = preset.explore_rounds if auto and len(choices) > 1 \
+        and steps >= preset.min_steps_to_explore else 0
+    ctl = PlanController(
+        k0=plan.cadence, k_max=preset.k_max, growth=preset.growth,
+        stable_ratio=preset.stable_ratio, patience=preset.patience,
+        shrink=getattr(preset, "shrink", False),
+        spike_ratio=getattr(preset, "spike_ratio", 4.0),
+        k_min=getattr(preset, "k_min", 1),
+        choices=choices, prior=prior, explore_rounds=explore,
+        prior_margin=getattr(preset, "prior_margin", 0.0))
+    ctl.cost_table = cost_rows
+
+    # one state-shaped EF buffer up front whenever any candidate
+    # compresses: every wire format shares it, so the controller can
+    # switch mid-fit without reshaping the scan carry
+    need_ef = any(c is not None for c in choices)
+    if need_ef and ef is None:
+        if ef0 is not None and not donating:
+            # the runner is functional off-TPU/GPU: the cached zeros
+            # are read, never consumed, so every fit can share them
+            ef = ef0
+        else:
+            # donating backends consume the carry's input buffers —
+            # each fit needs a private EF; reuse the model's wire spec
+            # (already traced for the prior) when it exists
+            wire = model.wire if model is not None else mp.wire_spec(
+                grid, local_fn, update_fn, state, data, merge_every=2)
+            ef = mp.init_merge_error(grid, wire)
+
+    history: list = []
+    done = 0
+    # the runner donates its carry on TPU/GPU — the round-start anchor
+    # must be a private copy there or its buffers are consumed by the
+    # dispatch before the norm reads them
+    prev = mp._copy_tree(state) if donating else state
+    hold_max = int(getattr(preset, "hold_rounds", 1))
+    seen_cfg: set = set()
+    round_i = 0
+    while done < steps:
+        k_dec, choice = ctl.decide()
+        k = min(k_dec, steps - done)
+        tag = compression_tag(choice)
+        rs = mp.pipeline_runners(
+            grid, local_fn, update_fn, merge_every=k, overlap=False,
+            compression=choice, state_wire=True,
+            outer=mp.AverageCommit())
+        hold = 1
+        if hold_max > 1 and ctl.settled():
+            hold = max(1, min(hold_max, (steps - done) // k))
+        warm = (k, tag) not in seen_cfg
+        seen_cfg.add((k, tag))
+        t0 = time.perf_counter()
+        (state, ef, _), stacked = rs["runner"]((state, ef, ()), data,
+                                               length=hold)
+        for r in range(hold):
+            for j in range(k):
+                metrics = jax.tree.map(lambda x, r=r, j=j: x[r, j],
+                                       stacked)
+                history.append(metrics)
+                if callback is not None:
+                    callback(done + r * k + j, state, metrics)
+        done += hold * k
+        # one scalar sync per dispatch — the controller is host-side
+        # but the norm reduction stays on device (it also makes the
+        # wall-clock below cover the dispatched work)
+        dn = float(jnp.sqrt(mp._delta_sq_norm(state, prev)))
+        dt = time.perf_counter() - t0
+        meas = Measurement(key=("plan", k, tag, False), seconds=dt,
+                           steps=hold * k, delta_norm=dn, warmup=warm,
+                           source="fit")
+        ctl.observe_round(meas, choice)
+        ctl.trace.append({
+            "round": round_i, "steps_done": done, "cadence": k,
+            "rounds_in_dispatch": hold, "compression": tag,
+            "warmup": warm,
+            "us_per_step": round(meas.us_per_step(), 3),
+            "predicted_us_per_step":
+                round(prior[tag], 3) if tag in prior else None,
+            "delta_norm": dn,
+        })
+        prev = mp._copy_tree(state) if donating else state
+        round_i += 1
+    return state, history, (ef if need_ef else None), ctl

@@ -3,6 +3,9 @@ shape bucketing, the on-disk measured cache, and dispatch integration."""
 
 import json
 import os
+import subprocess
+import sys
+import time
 
 import jax
 import jax.numpy as jnp
@@ -132,6 +135,141 @@ class TestMeasuredCache:
             entries = json.load(f)["entries"]
         assert "other|int8|64x64x64|cpu" in entries
         assert any(k.startswith("kmeans_assign|") for k in entries)
+
+
+_RACE_WORKER = r"""
+import json, os, sys
+from repro.tuning import autotune as at
+
+wid, iters = sys.argv[1], int(sys.argv[2])
+for i in range(iters):
+    # fresh-process view each write: reload from disk so entries merge
+    at.reset_cache_for_tests()
+    at._store(f"race{wid}k{i}|int8|64x64x64|cpu",
+              {"block_m": 8, "block_n": 8, "block_k": 8}, float(i))
+# whatever state the race left behind must parse as a complete doc
+# (the other process may have won any individual entry)
+with open(at.cache_path()) as f:
+    assert isinstance(json.load(f)["entries"], dict)
+print("ok")
+"""
+
+
+class TestConcurrentWriters:
+    """Two processes racing ``$REPRO_AUTOTUNE_CACHE`` must never leave
+    torn/invalid JSON on disk (per-writer temp file + atomic
+    ``os.replace``).  Last writer may win an *entry*, but every observable
+    file state is a complete document."""
+
+    def _spawn(self, tmp_cache, wid, iters):
+        env = dict(os.environ,
+                   REPRO_AUTOTUNE_CACHE=tmp_cache,
+                   PYTHONPATH=os.path.join(os.path.dirname(__file__),
+                                           os.pardir, "src"),
+                   JAX_PLATFORMS="cpu")
+        return subprocess.Popen(
+            [sys.executable, "-c", _RACE_WORKER, wid, str(iters)],
+            env=env, stdout=subprocess.PIPE, stderr=subprocess.PIPE,
+            text=True)
+
+    def test_racing_writers_never_corrupt_json(self, tmp_cache):
+        procs = [self._spawn(tmp_cache, "A", 30),
+                 self._spawn(tmp_cache, "B", 30)]
+        reads = 0
+        # poll the file while the race runs: every observable state must
+        # parse (os.replace makes each publish atomic)
+        while any(p.poll() is None for p in procs):
+            try:
+                with open(tmp_cache) as f:
+                    data = json.load(f)
+                assert isinstance(data.get("entries"), dict)
+                reads += 1
+            except FileNotFoundError:
+                pass
+            time.sleep(0.01)
+        for p in procs:
+            out, err = p.communicate(timeout=60)
+            assert p.returncode == 0, f"worker failed:\n{err}"
+            assert "ok" in out
+        with open(tmp_cache) as f:
+            entries = json.load(f)["entries"]
+        # both writers reload-before-store, so entries from both sides
+        # accumulate (an interleaved write may drop a handful, but the
+        # survivor set is well-formed and from the expected key space)
+        assert entries, "race left an empty cache"
+        for key, entry in entries.items():
+            assert key.startswith("race"), key
+            assert set(entry["blocks"]) == {"block_m", "block_n",
+                                            "block_k"}
+        assert any(k.startswith("raceA") for k in entries) \
+            or any(k.startswith("raceB") for k in entries)
+        # no temp droppings left behind
+        leftovers = [f for f in os.listdir(os.path.dirname(tmp_cache))
+                     if f.endswith(".tmp")]
+        assert leftovers == []
+
+    def test_sequential_processes_merge_entries(self, tmp_cache):
+        """The cross-process flavor of fresh-process merging: writer B
+        starting after writer A finished must keep A's entries."""
+        a = self._spawn(tmp_cache, "A", 2)
+        assert a.wait(timeout=120) == 0, a.communicate()[1]
+        b = self._spawn(tmp_cache, "B", 2)
+        assert b.wait(timeout=120) == 0, b.communicate()[1]
+        with open(tmp_cache) as f:
+            entries = json.load(f)["entries"]
+        assert "raceA" + "k1|int8|64x64x64|cpu" in entries
+        assert "raceB" + "k1|int8|64x64x64|cpu" in entries
+
+
+class TestResetIsolation:
+    """``reset_cache_for_tests`` audit: what the in-memory cache keys on
+    and what actually needs a reset."""
+
+    def test_env_repoint_is_keyed_without_reset(self, tmp_cache,
+                                                tmp_path, monkeypatch):
+        """The in-memory cache is keyed on the resolved path, so merely
+        repointing $REPRO_AUTOTUNE_CACHE is honored without a reset —
+        a test that forgets the fixture cannot serve another path's
+        entries."""
+        at._store(at.table_key("fxp_matmul", jnp.int8, (60, 120, 30),
+                               "cpu"),
+                  {"block_m": 2, "block_n": 2, "block_k": 2}, 1.0)
+        other = str(tmp_path / "other_cache.json")
+        monkeypatch.setenv("REPRO_AUTOTUNE_CACHE", other)
+        b = at.block_shapes("fxp_matmul", jnp.int8, (60, 120, 30),
+                            backend="cpu")
+        assert b != {"block_m": 2, "block_n": 2, "block_k": 2}
+
+    def test_same_path_mutation_needs_reset(self, tmp_cache):
+        """Mutating the file *under the same path* is what the reset is
+        for: the loaded dict is cached until reset drops it."""
+        key = at.table_key("fxp_matmul", jnp.int8, (60, 120, 30), "cpu")
+        at.block_shapes("fxp_matmul", jnp.int8, (60, 120, 30),
+                        backend="cpu")          # loads (empty) cache
+        with open(tmp_cache, "w") as f:
+            json.dump({"version": 1, "entries": {key: {
+                "blocks": {"block_m": 4, "block_n": 4, "block_k": 4},
+                "us": 1.0}}}, f)
+        stale = at.block_shapes("fxp_matmul", jnp.int8, (60, 120, 30),
+                                backend="cpu")
+        assert stale["block_m"] != 4            # still the loaded view
+        at.reset_cache_for_tests()
+        fresh = at.block_shapes("fxp_matmul", jnp.int8, (60, 120, 30),
+                                backend="cpu")
+        assert fresh == {"block_m": 4, "block_n": 4, "block_k": 4}
+
+    def test_store_after_reset_does_not_resurrect_memory(self, tmp_cache):
+        """After a reset, _store must rebuild its view from disk — the
+        dropped in-memory entries must not leak back in."""
+        at._store("ghost|int8|8x8x8|cpu",
+                  {"block_m": 1, "block_n": 1, "block_k": 1}, 1.0)
+        os.remove(tmp_cache)                    # disk truth: nothing
+        at.reset_cache_for_tests()
+        at._store("real|int8|8x8x8|cpu",
+                  {"block_m": 2, "block_n": 2, "block_k": 2}, 1.0)
+        with open(tmp_cache) as f:
+            entries = json.load(f)["entries"]
+        assert set(entries) == {"real|int8|8x8x8|cpu"}
 
 
 class TestKernelsUnderTunedBlocks:

@@ -240,3 +240,54 @@ class TestWorkloadAxisVersioning:
                "pipeline": "baseline"}
         v4 = dict(pre, workload="linreg", batch_size="full", plan="avg")
         assert bench_diff._cell_key(pre) == bench_diff._cell_key(v4)
+
+
+def _v5_artifact(*, drop_auto_cell=False):
+    """A v5 artifact: v4 plus the ``auto`` plan in ``config.plans``
+    (the self-tuning ``fit(merge_plan="auto")`` cells).  No new key
+    columns — auto rides the generic plans axis."""
+    art = _v4_artifact()
+    art["schema"] = "bench_scaling/v5"
+    art["config"]["plans"] = ["slowmo", "topk", "adaptive", "auto"]
+    plan_cells = [
+        {"n_vdpus": 4, "precision": "fp32", "merge_every": k,
+         "pipeline": "baseline", "plan": p, "steps_per_s": 80.0}
+        for k in (1, 4) for p in ("adaptive", "auto")]
+    if drop_auto_cell:
+        plan_cells = [c for c in plan_cells if c["plan"] != "auto"]
+    art["throughput"] += plan_cells
+    return art
+
+
+class TestAutoPlanVersioning:
+    def test_v5_fresh_vs_v4_committed_passes(self):
+        """The CI situation after this schema bump: the fresh sweep's
+        auto cells are extra columns over the committed v4 artifact —
+        no missing-cell or schema findings."""
+        assert bench_diff.diff(_v5_artifact(), _v4_artifact()) == []
+
+    def test_v5_fresh_vs_v2_committed_passes(self):
+        assert bench_diff.diff(_v5_artifact(), _artifact()) == []
+
+    def test_v5_auto_cells_promised_by_own_config(self):
+        """A sweep that silently dropped the auto cells must fail the
+        completeness check — plan="auto" flows through the generic
+        plans axis read from the FRESH config."""
+        findings = bench_diff.diff(_v5_artifact(drop_auto_cell=True),
+                                   _v4_artifact())
+        assert any("missing throughput cell" in f and "plan=auto" in f
+                   for f in findings)
+
+    def test_v5_vs_v5_regression_on_auto_cells(self):
+        fresh = _v5_artifact()
+        for c in fresh["throughput"]:
+            if c.get("plan") == "auto":
+                c["steps_per_s"] = 1.0
+        findings = bench_diff.diff(fresh, _v5_artifact())
+        assert any("regression" in f and "plan=auto" in f
+                   for f in findings)
+
+    def test_v4_committed_never_demands_auto_cells(self):
+        """Completeness is judged per-file: a committed v4 artifact
+        without auto cells stays valid as the comparison base."""
+        assert bench_diff.diff(_v4_artifact(), _v4_artifact()) == []

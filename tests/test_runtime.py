@@ -187,6 +187,74 @@ class TestFusedFiniteParity:
         with pytest.raises(FloatingPointError, match="non-finite loss"):
             tr.run(4)
 
+
+class TestAsyncMetricsSink:
+    """The background metrics consumer (``async_metrics=True``) against
+    the in-line flush: identical histories (order included), identical
+    failure/replay behavior, callbacks still see the verified entry."""
+
+    def _mk(self, tmp_path, *, async_metrics, fail_at=None,
+            log_every=100):
+        calls = {"n": 0}
+
+        def step_fn(state, batch):
+            calls["n"] += 1
+            w = state["w"] - 0.1 * batch["g"]
+            loss = jnp.sum(w ** 2)
+            if fail_at is not None and calls["n"] == fail_at:
+                loss = jnp.asarray(float("nan"))
+            return {"w": w}, {"loss": loss}
+
+        def batch_fn(step):
+            return {"g": jnp.ones((2,)) * (step % 3)}
+
+        cfg = TrainerConfig(
+            ckpt_dir=str(tmp_path / f"a{async_metrics}"),
+            ckpt_every=2, max_restarts=2, log_every=log_every,
+            async_metrics=async_metrics)
+        return Trainer(step_fn, {"w": jnp.ones((2,))}, batch_fn, cfg)
+
+    def test_history_parity(self, tmp_path):
+        out_a = self._mk(tmp_path, async_metrics=True).run(12)
+        out_s = self._mk(tmp_path, async_metrics=False).run(12)
+        assert [e["step"] for e in out_a["history"]] \
+            == [e["step"] for e in out_s["history"]]
+        for ea, es in zip(out_a["history"], out_s["history"]):
+            np.testing.assert_allclose(ea["loss"], es["loss"])
+
+    def test_nan_recovery_parity(self, tmp_path):
+        out_a = self._mk(tmp_path, async_metrics=True, fail_at=6).run(8)
+        out_s = self._mk(tmp_path, async_metrics=False,
+                         fail_at=6).run(8)
+        assert out_a["restarts"] == out_s["restarts"] == 1
+        assert out_a["final_step"] == out_s["final_step"] == 8
+        assert [e["step"] for e in out_a["history"]] \
+            == [e["step"] for e in out_s["history"]]
+
+    def test_poisoned_window_never_reaches_history(self, tmp_path):
+        """Same whole-window contract as the sync flush: the finite
+        prefix of a poisoned window must not survive into history."""
+        out = self._mk(tmp_path, async_metrics=True, fail_at=7).run(10)
+        assert out["restarts"] == 1
+        steps = [e["step"] for e in out["history"]]
+        assert steps.count(5.0) == 1 and steps.count(6.0) == 1
+
+    def test_callback_sees_verified_entry(self, tmp_path):
+        seen_a, seen_s = [], []
+        self._mk(tmp_path, async_metrics=True, log_every=3).run(
+            9, callback=lambda s, e: seen_a.append((s, e["loss"])))
+        self._mk(tmp_path, async_metrics=False, log_every=3).run(
+            9, callback=lambda s, e: seen_s.append((s, e["loss"])))
+        assert [s for s, _ in seen_a] == [s for s, _ in seen_s]
+        for (_, la), (_, ls) in zip(seen_a, seen_s):
+            np.testing.assert_allclose(la, ls)
+
+    def test_error_without_checkpoint_raises(self, tmp_path):
+        tr = self._mk(tmp_path, async_metrics=True, fail_at=2)
+        tr.ckpt = None
+        with pytest.raises(FloatingPointError, match="non-finite loss"):
+            tr.run(4)
+
     def test_vector_loss_reports_floating_point_error(self, tmp_path):
         """The fused flag supports array losses (jnp.all), so the
         failure branch must too: a NaN in a vector loss raises

@@ -347,12 +347,47 @@ class TestTrainerIntegration:
         np.testing.assert_allclose(np.asarray(tr.state),
                                    np.asarray(res.state), rtol=1e-6)
 
-    def test_for_program_refuses_cadence(self):
+    def test_for_program_cadence_matches_fit(self):
+        """Cadence plans drive round-granular dispatch: bit-compatible
+        final state with api.fit at the same cadence, one history entry
+        per local step (remainder round included)."""
         X, y, _ = datasets.regression(KEY, 256, 6)
         grid = make_cpu_grid(4)
         program = LinReg(lr=0.05).bind(grid, X, y)
-        with pytest.raises(ValueError, match="merge-per-step"):
-            Trainer.for_program(program, TrainerConfig(merge_every=4))
-        with pytest.raises(ValueError, match="merge-per-step"):
-            Trainer.for_program(
-                program, TrainerConfig(merge_plan=MergePlan(cadence=2)))
+        tr = Trainer.for_program(program, TrainerConfig(merge_every=4))
+        out = tr.run(10)                 # 2 full rounds + remainder 2
+        res = program.fit(steps=10, merge_every=4)
+        np.testing.assert_allclose(np.asarray(tr.state),
+                                   np.asarray(res.state), rtol=1e-6)
+        assert [e["step"] for e in out["history"]] == list(range(10))
+        assert all("loss" in e for e in out["history"])
+
+    def test_for_program_cadence_ckpt_on_merge_boundary(self, tmp_path):
+        """ckpt_every that lands mid-round defers to the next merge
+        boundary; resume restores the deferred step."""
+        X, y, _ = datasets.regression(KEY, 256, 6)
+        grid = make_cpu_grid(4)
+        program = LinReg(lr=0.05).bind(grid, X, y)
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=5,
+                            merge_plan=MergePlan(cadence=4),
+                            log_every=100)
+        tr = Trainer.for_program(program, cfg)
+        tr.run(16)       # merge boundaries at steps 3, 7, 11, 15
+        steps = {int(p.name.split("_")[1])
+                 for p in tmp_path.iterdir() if p.name.startswith("step_")}
+        assert steps and all((s + 1) % 4 == 0 for s in steps)
+        tr2 = Trainer.for_program(program, cfg)
+        assert tr2.start_step == 16
+
+    def test_for_program_refuses_pipeline_plans(self):
+        from repro.distributed.compression import CompressionConfig
+        X, y, _ = datasets.regression(KEY, 256, 6)
+        grid = make_cpu_grid(4)
+        program = LinReg(lr=0.05).bind(grid, X, y)
+        for plan in (MergePlan(cadence=2,
+                               compression=CompressionConfig(bits=8)),
+                     MergePlan(outer=SlowMo()),
+                     "auto"):
+            with pytest.raises(ValueError, match="exact merge rounds"):
+                Trainer.for_program(
+                    program, TrainerConfig(merge_plan=plan))

@@ -13,7 +13,11 @@ Checks, in order:
    committed one (a fresh artifact may ADD axes/columns — e.g. the v3
    plan axis over a committed v2 artifact — but never silently drop to
    an older schema).  The fresh file must have every top-level section
-   the committed one has (newer schemas are supersets).
+   the committed one has (newer schemas are supersets).  v5 adds the
+   ``auto`` entry to ``config.plans`` (the self-tuning
+   ``fit(merge_plan="auto")`` cells) — like every plan, it flows
+   through the generic ``plans`` axis below, so v5 artifacts need no
+   key-shape changes here.
 2. **completeness** — the fresh file must contain one throughput cell
    for every point of the cross-product its *own* config promises
    (n_vdpus x precision x merge_every, the pipeline axis applied to

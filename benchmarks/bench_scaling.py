@@ -44,9 +44,24 @@ six extra axes the follow-ups make first-class:
     cadences {1, 4} x ``batch_sizes``; base cells carry
     ``workload="linreg"``, ``batch_size="full"``.
 
+  * ``mesh``        — v6: where the grid's merge actually runs.
+    ``"none"`` cells are the emulated vmap grid; ``"PxD"`` cells run
+    the same engine under a real ``jax.sharding.Mesh`` via shard_map
+    (``core.pim.make_mesh_grid`` — P pods x D data devices,
+    hierarchical psums, the pod hop compressible).  Mesh cells appear
+    when the runtime has more than one device (CI forces 8 with
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``); on one
+    device the ``mesh_grids`` config list is empty and the promise
+    adapts.
+  * ``weak_scaling`` — v6: a separate section with *fixed rows per
+    vDPU* (the paper's weak-scaling protocol: grow the grid, keep the
+    per-DPU partition constant).  The full sweep reaches 10k+ emulated
+    vDPUs; the acceptance row is ``rows_per_s`` staying within the
+    same order of magnitude as the grid grows.
+
 One sweep produces the tables plus the accuracy-vs-cadence /
 accuracy-vs-pipeline / accuracy-vs-plan / accuracy-vs-workload curves,
-in a single ``BENCH_scaling.json`` (schema bench_scaling/v5,
+in a single ``BENCH_scaling.json`` (schema bench_scaling/v6,
 documented in docs/BENCHMARKS.md).
 
 Merge-fraction model: the measured per-local-step time at cadence k is
@@ -84,7 +99,7 @@ if __package__ in (None, ""):                 # `python benchmarks/bench_scaling
         os.path.abspath(__file__))))
 
 from benchmarks.common import time_fn
-from repro.core import datasets, make_cpu_grid
+from repro.core import datasets, make_cpu_grid, make_mesh_grid
 from repro.core.mlalgos import (make_linreg_step, train_linreg,
                                 train_logreg)
 from repro.core.mlalgos.linreg import closed_form
@@ -116,6 +131,38 @@ WORKLOADS = ("linreg", "svm", "multinomial")
 WORKLOAD_CADENCES = (1, 4)
 BATCH_SIZES = ("full", 32)
 WORKLOAD_VDPUS_FULL = (64,)
+# v6: real-mesh cells (shard_map engine) — only generated when the
+# runtime has > 1 device; int8 is the pipeline whose wire actually
+# crosses the pod hop compressed
+MESH_VDPUS_FULL = (64, 256)
+MESH_VDPUS_SMOKE = (16,)
+MESH_PIPELINES = ("baseline", "int8")
+# v6: weak scaling — fixed rows per vDPU, growing grid
+WEAK_VDPUS_FULL = (1024, 4096, 10240)
+WEAK_VDPUS_SMOKE = (64, 256)
+WEAK_ROWS_PER_VDPU = 16
+WEAK_FEATURES = 8
+WEAK_MERGE_EVERY = 4
+
+
+def _mesh_grid_or_none(v: int):
+    """A mesh grid for ``v`` vDPUs, or None when the runtime cannot
+    host one (single device, or ``v`` not divisible by the shard
+    count).  Two pods when the device count is even — the pod axis is
+    the compressible "host hop" — one otherwise."""
+    n_dev = len(jax.devices())
+    if n_dev < 2:
+        return None
+    pods = 2 if n_dev % 2 == 0 else 1
+    if v % n_dev:
+        return None
+    return make_mesh_grid(v, pods=pods)
+
+
+def _mesh_label(grid) -> str:
+    if grid is None or grid.mesh is None:
+        return "none"
+    return "x".join(str(grid.mesh.shape[a]) for a in grid.data_axes)
 
 
 def _compression(bits: int):
@@ -216,7 +263,7 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                     frac = (t_merge / k) / us_step if us_step > 0 else 0.0
                     cell = {
                         "algo": "linreg", "workload": "linreg",
-                        "batch_size": "full",
+                        "batch_size": "full", "mesh": "none",
                         "n_vdpus": v, "precision": prec,
                         "merge_every": k, "pipeline": pname,
                         "plan": "avg",
@@ -273,7 +320,8 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                         if valid and us_step > 0 else 0.0
                     cell = {
                         "algo": "linreg", "workload": "linreg",
-                        "batch_size": "full", "n_vdpus": v,
+                        "batch_size": "full", "mesh": "none",
+                        "n_vdpus": v,
                         "precision": prec, "merge_every": k,
                         "pipeline": "baseline", "plan": pname,
                         "us_per_step": round(us_step, 2),
@@ -295,6 +343,111 @@ def throughput_sweep(vdpus, precisions, cadences, X, y, *,
                           f"wire {cell['merge_bytes']:5d}B{note}",
                           flush=True)
     return cells
+
+
+def mesh_sweep(mesh_vdpus, X, y, *, timed_steps, warmup, iters):
+    """v6: linreg fp32 cells on the REAL mesh engine (shard_map over
+    ``make_mesh_grid``) at baseline and int8 pipelines.  Returns
+    ``(cells, mesh_labels)`` — the labels (e.g. ``["2x4"]``) land in
+    ``config.mesh_grids`` so the completeness promise matches exactly
+    what the runtime could generate (empty on a single device)."""
+    cells, labels = [], []
+    for v in mesh_vdpus:
+        grid = _mesh_grid_or_none(v)
+        if grid is None:
+            print(f"mesh v={v}: skipped (need >1 device and "
+                  f"divisibility)", flush=True)
+            continue
+        label = _mesh_label(grid)
+        if label not in labels:
+            labels.append(label)
+        data, n, local_fn, update_fn, w0 = make_linreg_step(
+            grid, X, y, lr=0.05)
+        for pname, overlap, bits in PIPELINES:
+            if pname not in MESH_PIPELINES:
+                continue
+            cfg = _compression(bits)
+            per_k = {}
+            for k in CADENCES:
+                us = time_fn(
+                    lambda k=k: grid.fit(
+                        init_state=w0, local_fn=local_fn,
+                        update_fn=update_fn, data=data,
+                        steps=timed_steps, merge_every=k,
+                        overlap_merge=overlap, merge_compression=cfg),
+                    warmup=warmup, iters=iters)
+                per_k[k] = us / timed_steps
+            t_local, t_merge, r2, valid = _fit_merge_model(
+                list(per_k), list(per_k.values()))
+            for k, us_step in per_k.items():
+                wire = grid.merge_wire_spec(
+                    local_fn, update_fn, w0, data, merge_every=k)
+                frac = (t_merge / k) / us_step if us_step > 0 else 0.0
+                cell = {
+                    "algo": "linreg", "workload": "linreg",
+                    "batch_size": "full", "mesh": label,
+                    "n_vdpus": v, "precision": "fp32",
+                    "merge_every": k, "pipeline": pname,
+                    "plan": "avg",
+                    "us_per_step": round(us_step, 2),
+                    "steps_per_s": round(1e6 / us_step, 1),
+                    "merge_fraction": round(min(frac, 1.0), 4),
+                    "merge_bytes": comp.wire_bytes(wire, cfg),
+                    "merge_fraction_overlapped": 0.0,
+                    "t_local_us_per_step": round(t_local, 2),
+                    "t_merge_us_per_round": round(t_merge, 2),
+                    "cadence_fit_r2": r2,
+                    "cadence_fit_valid": valid,
+                }
+                cells.append(cell)
+                print(f"linreg v={v:5d} fp32  mesh:{label:6s} "
+                      f"{pname:8s} k={k:2d}  "
+                      f"{cell['steps_per_s']:9.1f} steps/s  "
+                      f"wire {cell['merge_bytes']:5d}B", flush=True)
+    return cells, labels
+
+
+def weak_scaling_sweep(weak_vdpus, key, *, timed_steps, warmup, iters):
+    """v6: weak scaling — the grid grows, each vDPU keeps
+    ``WEAK_ROWS_PER_VDPU`` resident rows (the paper's protocol; strong
+    scaling shrinks the partition instead).  Rows record both the
+    emulated-grid run and, when the runtime has devices for it, the
+    mesh run of the same shape.  The headline column is ``rows_per_s``:
+    with a perfectly amortised merge it grows linearly with the grid."""
+    rows_out = []
+    for v in weak_vdpus:
+        n_rows = v * WEAK_ROWS_PER_VDPU
+        X, y, _ = datasets.regression(key, n_rows, WEAK_FEATURES)
+        grids = [make_cpu_grid(v)]
+        mesh_grid = _mesh_grid_or_none(v)
+        if mesh_grid is not None:
+            grids.append(mesh_grid)
+        for grid in grids:
+            label = _mesh_label(grid)
+            data, n, local_fn, update_fn, w0 = make_linreg_step(
+                grid, X, y, lr=0.05)
+            us = time_fn(
+                lambda: grid.fit(
+                    init_state=w0, local_fn=local_fn,
+                    update_fn=update_fn, data=data, steps=timed_steps,
+                    merge_every=WEAK_MERGE_EVERY),
+                warmup=warmup, iters=iters)
+            us_step = us / timed_steps
+            row = {
+                "workload": "linreg", "mesh": label,
+                "n_vdpus": v, "rows_per_vdpu": WEAK_ROWS_PER_VDPU,
+                "rows": n_rows, "features": WEAK_FEATURES,
+                "precision": "fp32",
+                "merge_every": WEAK_MERGE_EVERY,
+                "us_per_step": round(us_step, 2),
+                "steps_per_s": round(1e6 / us_step, 1),
+                "rows_per_s": round(n_rows * 1e6 / us_step, 1),
+            }
+            rows_out.append(row)
+            print(f"weak v={v:6d} rows={n_rows:7d} mesh:{label:6s} "
+                  f"{row['steps_per_s']:9.1f} steps/s  "
+                  f"{row['rows_per_s']:.3g} rows/s", flush=True)
+    return rows_out
 
 
 def _bind_workload(name, grid, key, *, rows, features):
@@ -352,7 +505,7 @@ def workload_sweep(vdpus, key, *, rows, features, timed_steps, warmup,
                     us_step = us / timed_steps
                     cell = {
                         "algo": wname, "workload": wname,
-                        "batch_size": bs_label,
+                        "batch_size": bs_label, "mesh": "none",
                         "n_vdpus": v, "precision": "fp32",
                         "merge_every": k, "pipeline": "baseline",
                         "plan": "avg",
@@ -524,6 +677,15 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
     cells += workload_sweep(workload_vdpus, key, rows=rows,
                             features=features, timed_steps=timed_steps,
                             warmup=warmup, iters=iters)
+    mesh_vdpus = MESH_VDPUS_SMOKE if smoke else MESH_VDPUS_FULL
+    mesh_cells, mesh_labels = mesh_sweep(
+        mesh_vdpus, X, y, timed_steps=timed_steps, warmup=warmup,
+        iters=iters)
+    cells += mesh_cells
+    weak_vdpus = WEAK_VDPUS_SMOKE if smoke else WEAK_VDPUS_FULL
+    weak_rows = weak_scaling_sweep(
+        weak_vdpus, key, timed_steps=timed_steps, warmup=warmup,
+        iters=max(1, iters - 1))
     acc_v = 16 if smoke else 64
     acc_steps = 60 if smoke else 200
     curves = accuracy_sweep(acc_v, CADENCES, key,
@@ -539,9 +701,13 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
         acc_v, key, rows=rows, features=features, steps=acc_steps)
 
     result = {
-        "schema": "bench_scaling/v5",
+        "schema": "bench_scaling/v6",
         "config": {
             "backend": jax.default_backend(),
+            # splitting one CPU into N host devices changes absolute
+            # throughput (the emulated cells lose threads) — device
+            # topology is part of regression comparability
+            "n_devices": len(jax.devices()),
             "smoke": smoke,
             "rows": rows, "features": features,
             "timed_steps": timed_steps,
@@ -559,8 +725,18 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
             "workload_merge_every": list(WORKLOAD_CADENCES),
             "batch_sizes": list(BATCH_SIZES),
             "accuracy_n_vdpus": acc_v, "accuracy_steps": acc_steps,
+            # v6: mesh_grids holds the labels the runtime could
+            # actually build ([] on one device — the promise adapts)
+            "mesh_grids": mesh_labels,
+            "mesh_n_vdpus": [v for v in mesh_vdpus
+                             if _mesh_grid_or_none(v) is not None],
+            "mesh_pipelines": list(MESH_PIPELINES),
+            "weak_n_vdpus": list(weak_vdpus),
+            "weak_rows_per_vdpu": WEAK_ROWS_PER_VDPU,
+            "weak_merge_every": WEAK_MERGE_EVERY,
         },
         "throughput": cells,
+        "weak_scaling": weak_rows,
         "accuracy_vs_cadence": curves,
         "accuracy_vs_pipeline": pipe_curves,
         "accuracy_vs_plan": plan_curves,
@@ -569,7 +745,8 @@ def run(*, smoke: bool = False, out: str = "BENCH_scaling.json"):
     with open(out, "w") as f:
         json.dump(result, f, indent=1)
     print(f"wrote {os.path.abspath(out)} "
-          f"({len(cells)} throughput cells, {len(curves)} accuracy rows, "
+          f"({len(cells)} throughput cells, {len(weak_rows)} weak-"
+          f"scaling rows, {len(curves)} accuracy rows, "
           f"{len(pipe_curves)} pipeline rows, {len(plan_curves)} plan "
           f"rows, {len(workload_curves)} workload rows)",
           flush=True)

@@ -10,5 +10,5 @@ Layers:
                     (linreg / logreg / dtree / kmeans / svm / multinomial)
 """
 
-from repro.core.pim import PimGrid, make_cpu_grid  # noqa: F401
+from repro.core.pim import PimGrid, make_cpu_grid, make_mesh_grid  # noqa: F401
 from repro.core import quantize, lut, datasets  # noqa: F401

@@ -140,7 +140,15 @@ class Quantized:
     scale: jax.Array
 
     def dequantize(self, dtype=jnp.float32) -> jax.Array:
-        return self.values.astype(dtype) * self.scale.astype(dtype)
+        # The product is formed in float32 and cast ONCE: casting the
+        # scale to a narrow dtype first (bf16/f16) would round twice and
+        # desynchronize this emulation from the mesh collectives, which
+        # dequantize their int32 psum total in f32
+        # (collectives.quantized_psum_ef) — the two must stay
+        # bit-identical for the hop-size-1 parity tests to cover the
+        # mesh path.
+        return (self.values.astype(jnp.float32)
+                * self.scale.astype(jnp.float32)).astype(dtype)
 
 
 jax.tree_util.register_pytree_node(

@@ -72,10 +72,16 @@ def quantized_psum(x: jax.Array, axis: str, *, bits: int = 8
     the same grid (required for correct integer summation).
     """
     qmax = 2 ** (bits - 1) - 1
-    amax = jax.lax.pmax(jnp.max(jnp.abs(x)), axis)
+    # quantization math runs in float32 whatever the leaf dtype — the
+    # same cast core.quantize.quantize_symmetric performs — so a
+    # participant's grid here is bit-identical to the mesh=None
+    # emulation's (bf16/f16 leaves quantized in native precision would
+    # round to a different grid)
+    x32 = x.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(x32)), axis)
     scale = jnp.maximum(amax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(x / scale), -qmax - 1, qmax).astype(jnp.int32)
-    total = jax.lax.psum(q, axis)
+    q = jnp.clip(jnp.round(x32 / scale), -qmax - 1, qmax)
+    total = jax.lax.psum(q.astype(jnp.int32), axis)
     return (total.astype(jnp.float32) * scale).astype(x.dtype)
 
 
@@ -83,13 +89,23 @@ def quantized_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
                       bits: int = 8) -> Tuple[jax.Array, jax.Array]:
     """Error-feedback variant: returns (reduced, new_error).  The residual
     of this round's quantization is added to the next round's input, which
-    keeps compressed SGD within O(1) of exact (see core.quantize.ef_*)."""
+    keeps compressed SGD within O(1) of exact (see core.quantize.ef_*).
+
+    With a single participant on ``axis`` this is bit-identical to
+    ``core.quantize.ef_quantize`` by construction: the grid is computed
+    in float32 (matching ``quantize_symmetric``'s cast), the local
+    dequantized wire is the f32 product cast once to the leaf dtype
+    (matching ``Quantized.dequantize``), and the residual subtracts that
+    wire cast to the *input's* dtype (exactly ``ef_quantize``'s
+    ``q.dequantize(grad.dtype)``), whatever dtype the error buffer
+    carries."""
     qmax = 2 ** (bits - 1) - 1
     target = x + error
-    amax = jax.lax.pmax(jnp.max(jnp.abs(target)), axis)
+    t32 = target.astype(jnp.float32)
+    amax = jax.lax.pmax(jnp.max(jnp.abs(t32)), axis)
     scale = jnp.maximum(amax, 1e-12) / qmax
-    q = jnp.clip(jnp.round(target / scale), -qmax - 1, qmax)
-    new_error = target - q * scale
+    q = jnp.clip(jnp.round(t32 / scale), -qmax - 1, qmax)
+    new_error = target - (q * scale).astype(x.dtype)
     total = jax.lax.psum(q.astype(jnp.int32), axis)
     return (total.astype(jnp.float32) * scale).astype(x.dtype), new_error
 
@@ -118,10 +134,14 @@ def sparse_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
         local_wire = kept
         total = jax.lax.psum(kept, axis)
     else:
+        # f32 quantization math + single-rounded dequant, matching the
+        # mesh=None emulation (topk_sparsify + quantize_symmetric /
+        # Quantized.dequantize) bit-for-bit at hop size 1
         qmax = 2 ** (bits - 1) - 1
-        amax = jax.lax.pmax(jnp.max(jnp.abs(kept)), axis)
+        k32 = kept.astype(jnp.float32)
+        amax = jax.lax.pmax(jnp.max(jnp.abs(k32)), axis)
         scale = jnp.maximum(amax, 1e-12) / qmax
-        q = jnp.clip(jnp.round(kept / scale), -qmax - 1, qmax)
+        q = jnp.clip(jnp.round(k32 / scale), -qmax - 1, qmax)
         local_wire = (q * scale).astype(x.dtype)
         total = (jax.lax.psum(q.astype(jnp.int32), axis)
                  .astype(jnp.float32) * scale).astype(x.dtype)

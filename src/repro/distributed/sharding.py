@@ -86,13 +86,15 @@ def shard_hint(x: jax.Array, *logical_axes: Optional[str]) -> jax.Array:
     rules = _RULES.get()
     if rules is None:
         return x
-    spec = list(rules.spec(*logical_axes))
+    # extra logical axes beyond the array's rank are dropped, not just
+    # Noned — with_sharding_constraint rejects a spec longer than ndim
+    spec = list(rules.spec(*logical_axes))[:x.ndim]
     for i, ax in enumerate(spec):
         if ax is None:
             continue
         size = rules.mesh.shape[ax] if isinstance(ax, str) else \
             int(__import__("numpy").prod([rules.mesh.shape[a] for a in ax]))
-        if i >= x.ndim or x.shape[i] % size:
+        if x.shape[i] % size:
             spec[i] = None
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(rules.mesh, P(*spec)))

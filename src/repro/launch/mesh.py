@@ -26,3 +26,22 @@ def make_host_mesh(data: int = 1, model: int = 1):
     """Small mesh over however many (fake or real) local devices exist —
     used by tests that exercise sharded code paths on CPU."""
     return jax.make_mesh((data, model), ("data", "model"))
+
+
+def make_pim_mesh(pods: int = 1, data: int | None = None):
+    """The PIM engine's data mesh: axes ``("pod", "data")`` — the layout
+    ``PimGrid`` shards its vDPU axis over (``core.pim.make_mesh_grid``).
+
+    ``pod`` is the slow "host hop" (DCN between pods; the compressible
+    axis), ``data`` the fast ICI axis inside a pod.  ``data=None`` takes
+    every local device not consumed by ``pods``, so the same call works
+    on 1 real CPU device and under
+    ``XLA_FLAGS=--xla_force_host_platform_device_count=8``.
+    """
+    n = len(jax.devices())
+    if n % pods:
+        raise ValueError(
+            f"pods={pods} does not divide the {n} available devices")
+    if data is None:
+        data = n // pods
+    return jax.make_mesh((pods, data), ("pod", "data"))

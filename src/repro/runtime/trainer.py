@@ -268,6 +268,10 @@ class Trainer:
                         f"settings")
                 self.state = state
                 self.start_step = step + 1
+                if merge_state is not None:
+                    for k in ("tuning_trace", "cadence_trace"):
+                        if extra.get(f"merge_{k}") is not None:
+                            merge_state[k] = extra[f"merge_{k}"]
 
     @classmethod
     def for_program(cls, program, config: "TrainerConfig" = None, *,
@@ -427,10 +431,17 @@ class Trainer:
         return tree["model"]
 
     def _save(self, step: int):
-        self.ckpt.save(step, self._wrap(self.state),
-                       extra={"data_step": step,
-                              "merge_compression":
-                              self._compression_tag()})
+        extra = {"data_step": step,
+                 "merge_compression": self._compression_tag()}
+        if self.merge_state is not None:
+            # controller decision traces are JSON-able host-side lists
+            # (not array pytrees), so they ride the manifest's extra
+            # rather than the v2 state layout — a resumed run keeps its
+            # tuning history instead of starting the log over
+            for k in ("tuning_trace", "cadence_trace"):
+                if self.merge_state.get(k) is not None:
+                    extra[f"merge_{k}"] = self.merge_state[k]
+        self.ckpt.save(step, self._wrap(self.state), extra=extra)
 
     # -- main loop ----------------------------------------------------------
 

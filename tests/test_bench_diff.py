@@ -291,3 +291,98 @@ class TestAutoPlanVersioning:
         """Completeness is judged per-file: a committed v4 artifact
         without auto cells stays valid as the comparison base."""
         assert bench_diff.diff(_v4_artifact(), _v4_artifact()) == []
+
+
+def _v6_artifact(*, mesh_grids=("2x4",), drop_mesh_cell=False,
+                 drop_weak_row=False):
+    """A v6 artifact: v5 plus the real-mesh cells (``mesh`` column,
+    promised via ``config.mesh_grids``) and the ``weak_scaling``
+    section (promised via ``config.weak_n_vdpus``)."""
+    art = _v5_artifact()
+    art["schema"] = "bench_scaling/v6"
+    art["config"]["mesh_grids"] = list(mesh_grids)
+    art["config"]["mesh_n_vdpus"] = [16]
+    art["config"]["mesh_pipelines"] = ["baseline", "int8"]
+    art["config"]["weak_n_vdpus"] = [64, 256]
+    art["config"]["weak_rows_per_vdpu"] = 16
+    mesh_cells = [
+        {"n_vdpus": 16, "precision": "fp32", "merge_every": k,
+         "pipeline": p, "plan": "avg", "mesh": m, "steps_per_s": 40.0}
+        for m in mesh_grids for k in (1, 4)
+        for p in ("baseline", "int8")]
+    if drop_mesh_cell:
+        mesh_cells = mesh_cells[:-1]
+    art["throughput"] += mesh_cells
+    weak = [{"workload": "linreg", "mesh": "none", "n_vdpus": v,
+             "rows_per_vdpu": 16, "steps_per_s": 30.0}
+            for v in (64, 256)]
+    if drop_weak_row:
+        weak = weak[:-1]
+    art["weak_scaling"] = weak
+    return art
+
+
+class TestMeshAxisVersioning:
+    def test_v6_fresh_vs_v5_committed_passes(self):
+        """The CI situation after this schema bump: the fresh sweep's
+        mesh cells and weak_scaling section are extra over the
+        committed v5 artifact — no missing-cell or schema findings."""
+        assert bench_diff.diff(_v6_artifact(), _v5_artifact()) == []
+
+    def test_v6_fresh_vs_v2_committed_passes(self):
+        assert bench_diff.diff(_v6_artifact(), _artifact()) == []
+
+    def test_v6_mesh_completeness_checked_against_own_config(self):
+        findings = bench_diff.diff(_v6_artifact(drop_mesh_cell=True),
+                                   _v5_artifact())
+        assert any("missing throughput cell" in f and "mesh=2x4" in f
+                   for f in findings)
+
+    def test_single_device_runtime_promises_no_mesh_cells(self):
+        """config.mesh_grids is EMPTY when the generating runtime had
+        one device — the promise adapts, so a devicesless CI sweep
+        never flags missing mesh cells."""
+        art = _v6_artifact(mesh_grids=())
+        assert bench_diff.diff(art, art) == []
+
+    def test_v6_missing_weak_row_flagged(self):
+        findings = bench_diff.diff(_v6_artifact(drop_weak_row=True),
+                                   _v5_artifact())
+        assert any("missing weak-scaling row" in f and "256" in f
+                   for f in findings)
+
+    def test_v5_committed_never_demands_weak_rows(self):
+        """A committed pre-v6 artifact promises no weak rows and stays
+        valid as the comparison base."""
+        assert bench_diff.diff(_v5_artifact(), _v5_artifact()) == []
+
+    def test_v6_vs_v6_regression_on_mesh_cells(self):
+        fresh = _v6_artifact()
+        for c in fresh["throughput"]:
+            if c.get("mesh") == "2x4":
+                c["steps_per_s"] = 1.0
+        findings = bench_diff.diff(fresh, _v6_artifact())
+        assert any("regression" in f and "mesh=2x4" in f
+                   for f in findings)
+
+    def test_device_topology_change_skips_regression(self, capsys):
+        """Forcing 8 host devices runs the emulated cells on 1/8 of
+        the CPU — a topology change, not a regression.  config
+        n_devices joins the comparability key."""
+        fresh = _v6_artifact()
+        fresh["config"]["n_devices"] = 8
+        fresh["throughput"][0] = dict(fresh["throughput"][0],
+                                      steps_per_s=1.0)
+        committed = _v6_artifact()
+        committed["config"]["n_devices"] = 1
+        assert bench_diff.diff(fresh, committed) == []
+        assert "skipped" in capsys.readouterr().out
+
+    def test_default_mesh_key_keeps_old_cells_comparable(self):
+        """A pre-v6 cell (no mesh column) and a v6 mesh="none" cell
+        share a key, so emulated-grid cells compare across versions."""
+        pre = {"n_vdpus": 1, "precision": "fp32", "merge_every": 1,
+               "pipeline": "baseline"}
+        v6 = dict(pre, workload="linreg", batch_size="full", plan="avg",
+                  mesh="none")
+        assert bench_diff._cell_key(pre) == bench_diff._cell_key(v6)

@@ -13,7 +13,8 @@ from repro.launch.mesh import make_host_mesh
 from repro.distributed import collectives as coll
 from repro.distributed import compression as comp
 from repro.distributed.overlap import microbatched_grads
-from repro.distributed.sharding import LogicalRules, make_rules
+from repro.distributed.sharding import (LogicalRules, make_rules,
+                                        shard_hint, use_rules)
 from repro.launch import shardings as sh
 from repro.roofline import analysis as ra
 
@@ -112,6 +113,27 @@ class TestShardingTables:
         from repro.distributed.sharding import make_rules as mk
         # emulate a 16-wide model axis table decision
         assert rules.table["heads"] in ("model", None)
+
+    def test_shard_hint_truncates_extra_logical_axes(self):
+        """A hint naming more logical axes than the array has dims must
+        drop the extras, not pass an over-long PartitionSpec to
+        with_sharding_constraint (which rejects any spec longer than
+        the array's rank, even on a 1-device mesh) — the decode paths
+        hint 4 axes onto arrays that are 2-D/3-D in some shapes."""
+        rules = make_rules(MESH, n_heads=4, n_kv_heads=2)
+        x = jnp.zeros((4, 8))
+        with use_rules(rules):
+            y = shard_hint(x, "batch", "seq", "heads", "head_dim")
+        assert y.shape == x.shape
+
+    def test_shard_hint_nondivisible_dim_replicates(self):
+        rules = make_rules(MESH, n_heads=4, n_kv_heads=2)
+        # odd dims can't split over any >1 mesh axis; on the 1-wide
+        # host mesh everything divides — the contract is "no crash,
+        # shape preserved" either way
+        with use_rules(rules):
+            y = shard_hint(jnp.zeros((3, 5, 7)), "batch", "seq", "ff")
+        assert y.shape == (3, 5, 7)
 
     def test_param_axes_mapping(self):
         import jax.tree_util as jtu

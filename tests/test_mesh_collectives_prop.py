@@ -1,0 +1,115 @@
+"""Hypothesis property tests: mesh collectives vs the ``mesh=None``
+emulation, bit-for-bit at hop size 1 across random shapes, values,
+dtypes and bit widths (the systematic sweep behind the fixed cases in
+``tests/test_mesh_collectives.py``)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantize as qz
+from repro.distributed import collectives as coll
+from repro.distributed import compression as comp
+from repro.distributed.compression import CompressionConfig
+
+
+def _hop1(fn, *args):
+    stacked = jax.tree.map(lambda x: x[None], args)
+    out = jax.vmap(fn, axis_name="hop")(*stacked)
+    return jax.tree.map(lambda x: x[0], out)
+
+
+def _bits_equal(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    assert a.dtype == b.dtype, (a.dtype, b.dtype)
+    np.testing.assert_array_equal(a.view(np.uint8), b.view(np.uint8))
+
+
+def _array(seed, n, dtype, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (n,))
+    return (scale * x).astype(dtype)
+
+
+ARRAY = dict(seed=st.integers(0, 10_000), n=st.integers(1, 128),
+             dtype=st.sampled_from([jnp.float32, jnp.bfloat16,
+                                    jnp.float16]),
+             scale=st.sampled_from([1e-6, 1.0, 3.0, 1e4]))
+
+
+@given(bits=st.integers(2, 16), **ARRAY)
+@settings(max_examples=60, deadline=None)
+def test_quantized_psum_ef_bit_parity(seed, n, dtype, scale, bits):
+    x = _array(seed, n, dtype, scale)
+    e = _array(seed + 1, n, dtype, scale * 0.1)
+    got, got_err = _hop1(
+        lambda v, r: coll.quantized_psum_ef(v, r, "hop", bits=bits),
+        x, e)
+    q, want_err = qz.ef_quantize(x, e, bits=bits)
+    _bits_equal(got, q.dequantize(x.dtype))
+    _bits_equal(got_err, want_err)
+
+
+@given(bits=st.integers(2, 16), **ARRAY)
+@settings(max_examples=40, deadline=None)
+def test_quantized_psum_bit_parity(seed, n, dtype, scale, bits):
+    x = _array(seed, n, dtype, scale)
+    got = _hop1(lambda v: coll.quantized_psum(v, "hop", bits=bits), x)
+    want = qz.quantize_symmetric(x, bits=bits).dequantize(x.dtype)
+    _bits_equal(got, want)
+
+
+@given(bits=st.sampled_from([None, 2, 8, 16]),
+       frac=st.floats(0.05, 0.95), **ARRAY)
+@settings(max_examples=60, deadline=None)
+def test_sparse_psum_ef_bit_parity(seed, n, dtype, scale, bits, frac):
+    x = _array(seed, n, dtype, scale)
+    e = _array(seed + 1, n, dtype, scale * 0.1)
+    got, got_err = _hop1(
+        lambda v, r: coll.sparse_psum_ef(v, r, "hop", frac=frac,
+                                         bits=bits), x, e)
+    cfg = CompressionConfig(bits=bits, top_k_frac=frac)
+    want, want_err = comp.ef_compress_tree({"g": x}, {"g": e}, cfg)
+    _bits_equal(got, want["g"])
+    _bits_equal(got_err, want_err["g"])
+
+
+@given(seed=st.integers(0, 10_000), n=st.integers(1, 64),
+       lim=st.sampled_from([1, 100, 2 ** 20]),
+       participants=st.integers(1, 4))
+@settings(max_examples=40, deadline=None)
+def test_integer_leaf_passthrough_is_exact(seed, n, lim, participants):
+    """Integer leaves cross the compressed slow hop as exact psums —
+    whatever the participant count (int32 addition is associative)."""
+    rng = np.random.default_rng(seed)
+    leaf = jnp.asarray(rng.integers(-lim, lim, (participants, n)),
+                       jnp.int32)
+    err = jnp.zeros_like(leaf)
+
+    def reduce_fn(t, e):
+        return comp.compressed_reduce(t, e, CompressionConfig(bits=8))
+
+    got, _ = jax.vmap(jax.vmap(reduce_fn, axis_name="data"),
+                      axis_name="pod")(
+        {"c": leaf[:, None]}, {"c": err[:, None]})
+    want = np.asarray(leaf).sum(axis=0)
+    for i in range(participants):
+        np.testing.assert_array_equal(np.asarray(got["c"][i, 0]), want)
+
+
+@given(bits=st.integers(2, 16), **ARRAY)
+@settings(max_examples=40, deadline=None)
+def test_ef_never_loses_mass(seed, n, dtype, scale, bits):
+    """wire + residual == target (in the promoted precision): the
+    invariant that bounds compressed training O(1) from exact."""
+    x = _array(seed, n, jnp.float32, scale)
+    e = _array(seed + 1, n, jnp.float32, scale * 0.1)
+    got, got_err = _hop1(
+        lambda v, r: coll.quantized_psum_ef(v, r, "hop", bits=bits),
+        x, e)
+    np.testing.assert_allclose(np.asarray(got) + np.asarray(got_err),
+                               np.asarray(x + e),
+                               rtol=1e-5, atol=1e-5 * scale)

@@ -1,0 +1,482 @@
+"""Real-mesh execution parity harness — the correctness spine for
+``PimGrid.fit`` running under a real ``jax.sharding.Mesh``
+(``core.pim.make_mesh_grid`` -> shard_map hierarchical psums).
+
+Runs under ``XLA_FLAGS=--xla_force_host_platform_device_count=8`` (the
+CI ``tier-1-multidevice`` job) and pins every workload x plan cell
+against two oracles:
+
+  * the python per-step engine ON THE SAME MESH — bit-exact for every
+    cell (same collectives, same order of operations, so any drift is
+    an engine bug, not float noise),
+  * the emulated vmap grid (``make_cpu_grid``) — tight allclose for
+    exact wires (the only difference is psum association order) and
+    oracle-bounded for compressed wires: at hop size 2 each pod
+    quantizes its half independently, so the summed wire legitimately
+    differs from quantizing the total; error feedback keeps the
+    trajectory O(1) from the exact one, which is the bound asserted.
+
+Also pinned here: integer-leaf bit-exactness across grids (int32 psum
+is associative), the error-feedback buffer's hop layout + ``P("pod")``
+sharding and its continuation across split fits, buffer-donation
+markers in the lowered runner HLO, Trainer checkpoint round-trips of
+mesh ``merge_state`` (EF + momentum + tuning trace), and the
+``merge_plan="auto"`` DCN pricing flip (``CostModel.n_chips``: the
+compressed wire wins the modeled merge on an 8-chip mesh and loses on
+the single-chip emulation).
+
+On a single-device runtime everything mesh-shaped is skipped; the
+construction smoke tests still run (a (1, 1) mesh is legal).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from jax.sharding import PartitionSpec as P
+
+from repro.configs.pim_ml import PimMLConfig
+from repro.core import datasets
+from repro.core.mlalgos import api, make_linreg_step
+from repro.core.pim import make_cpu_grid, make_mesh_grid
+from repro.distributed import merge_plan as mp
+from repro.distributed.compression import CompressionConfig
+from repro.distributed.merge_plan import MergePlan, SlowMo
+from repro.launch.mesh import make_pim_mesh
+from repro.runtime import Trainer, TrainerConfig
+from repro.tuning.cost import CostModel
+
+KEY = jax.random.PRNGKey(0)
+MULTI = len(jax.devices()) >= 8
+multidevice = pytest.mark.skipif(
+    not MULTI,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+N_VDPUS = 16
+STEPS = 16
+INT8 = CompressionConfig(bits=8)
+TOPK = CompressionConfig(bits=8, top_k_frac=0.25)
+
+PLAN_CELLS = {
+    "exact_k1": MergePlan(),
+    "exact_k4": MergePlan(cadence=4),
+    "int8_k1": MergePlan(compression=INT8),
+    "int8_k4": MergePlan(cadence=4, compression=INT8),
+    "topk_k4": MergePlan(cadence=4, compression=TOPK),
+    "overlap_k1": MergePlan(overlap=True),
+    "overlap_k4": MergePlan(cadence=4, overlap=True),
+    "overlap_int8_k4": MergePlan(cadence=4, overlap=True,
+                                 compression=INT8),
+    "slowmo_k4": MergePlan(cadence=4, outer=SlowMo(beta=0.5)),
+}
+# Exact wires differ from the vmap grid only by psum association order;
+# compressed wires re-grid per pod half (see module docstring), so they
+# get the loose bound plus the stay-near-exact oracle below.
+EXACT_CELLS = {"exact_k1", "exact_k4", "overlap_k1", "overlap_k4",
+               "slowmo_k4"}
+# compressed cell -> the exact cell whose trajectory EF must track
+EF_ORACLE = {"int8_k1": "exact_k1", "int8_k4": "exact_k4",
+             "topk_k4": "exact_k4", "overlap_int8_k4": "overlap_k4"}
+# top-k keeps each pod's LOCAL largest entries — a different survivor
+# set than the emulation's global top-k, so its cross-grid drift is
+# larger than pure quantization's (EF still bounds it); against the
+# EXACT trajectory it is looser still: at frac=0.25 and 4 merge rounds
+# most of the dropped mass is still parked in the EF buffer
+CELL_TOL = {"topk_k4": 0.1}
+ORACLE_TOL = {"topk_k4": 0.25}
+
+
+@functools.lru_cache(maxsize=None)
+def _grid(kind):
+    if kind == "mesh":
+        return make_mesh_grid(N_VDPUS, pods=2)
+    return make_cpu_grid(N_VDPUS)
+
+
+@functools.lru_cache(maxsize=None)
+def _linreg(kind):
+    grid = _grid(kind)
+    X, y, _ = datasets.regression(KEY, 192, 6)
+    data, n, lf, uf, w0 = make_linreg_step(grid, X, y, lr=0.05)
+    return grid, data, lf, uf, w0
+
+
+@functools.lru_cache(maxsize=None)
+def _cell_run(kind, cell, engine):
+    grid, data, lf, uf, w0 = _linreg(kind)
+    w, hist = grid.fit(init_state=w0, local_fn=lf, update_fn=uf,
+                       data=data, steps=STEPS, engine=engine,
+                       scan_chunk=4, merge_plan=PLAN_CELLS[cell])
+    losses = np.asarray([float(h["loss"]) for h in hist])
+    return np.asarray(w), losses
+
+
+# ---------------------------------------------------------------------------
+# construction (runs at any device count)
+# ---------------------------------------------------------------------------
+
+
+class TestMeshGridConstruction:
+    def test_pods_must_divide_devices(self):
+        with pytest.raises(ValueError, match="divide"):
+            make_pim_mesh(len(jax.devices()) + 1)
+
+    def test_make_mesh_grid_shards_and_reduces(self):
+        grid = make_mesh_grid(8)
+        assert grid.data_axes == ("pod", "data")
+        assert tuple(grid.mesh.axis_names) == ("pod", "data")
+        data, _ = grid.shard_rows(jnp.arange(16.0)[:, None])
+        out = grid.map_reduce(
+            lambda _, sl: {"s": jnp.sum(sl["X"] * sl["w"][:, None])},
+            None, data)
+        assert float(out["s"]) == 120.0
+
+    @multidevice
+    def test_eight_devices_eight_shards(self):
+        grid = _grid("mesh")
+        assert grid.n_shards == 8
+        assert grid.mesh.shape["pod"] == 2
+
+    @multidevice
+    def test_vdpus_must_divide_shards(self):
+        with pytest.raises(ValueError, match="divisible"):
+            make_mesh_grid(6, pods=2)
+
+
+# ---------------------------------------------------------------------------
+# the plan-cell parity matrix (the tentpole's spine)
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+class TestPlanCellParity:
+    @pytest.mark.parametrize("cell", sorted(PLAN_CELLS))
+    def test_scan_matches_python_on_mesh(self, cell):
+        """The compiled scan engine and the per-step python oracle run
+        the same mesh collectives — bit-exact, every cell."""
+        w_scan, h_scan = _cell_run("mesh", cell, "scan")
+        w_py, h_py = _cell_run("mesh", cell, "python")
+        np.testing.assert_array_equal(w_scan, w_py)
+        np.testing.assert_array_equal(h_scan, h_py)
+
+    @pytest.mark.parametrize("cell", sorted(PLAN_CELLS))
+    def test_mesh_matches_vmap_grid(self, cell):
+        w_mesh, h_mesh = _cell_run("mesh", cell, "scan")
+        w_vmap, h_vmap = _cell_run("vmap", cell, "scan")
+        tol = 1e-6 if cell in EXACT_CELLS else CELL_TOL.get(cell, 2e-2)
+        np.testing.assert_allclose(w_mesh, w_vmap, rtol=0, atol=tol)
+        assert h_mesh.shape == h_vmap.shape == (STEPS,)
+
+    @pytest.mark.parametrize("cell", sorted(EF_ORACLE))
+    def test_compressed_cells_stay_near_exact(self, cell):
+        """Error feedback bounds the compressed mesh trajectory O(1)
+        from the exact one — the oracle for cells whose wire cannot
+        match the single-hop emulation bit-for-bit."""
+        w_c, _ = _cell_run("mesh", cell, "scan")
+        w_e, _ = _cell_run("mesh", EF_ORACLE[cell], "scan")
+        np.testing.assert_allclose(w_c, w_e, rtol=0,
+                                   atol=ORACLE_TOL.get(cell, 0.05))
+
+
+# ---------------------------------------------------------------------------
+# every workload through the canonical entry point
+# ---------------------------------------------------------------------------
+
+
+def _workload_case(name):
+    cfg = PimMLConfig(workload=name)
+    if name == "linreg":
+        X, y, _ = datasets.regression(KEY, 256, 6)
+    elif name in ("logreg", "svm"):
+        X, y, _ = datasets.binary_classification(KEY, 256, 6)
+    elif name == "multinomial":
+        X, y = datasets.mixture_classification(KEY, 256, 6,
+                                               cfg.mn_classes)
+    elif name == "kmeans":
+        X, _, _ = datasets.blobs(KEY, 256, 4, k=cfg.km_clusters,
+                                 spread=0.3)
+        y = None
+    else:
+        X, y = datasets.mixture_classification(KEY, 256, 6,
+                                               cfg.dt_classes)
+    return cfg.workload_spec(), X, y
+
+
+@multidevice
+class TestWorkloadParity:
+    WORKLOADS = ("linreg", "logreg", "svm", "multinomial", "kmeans",
+                 "dtree")
+
+    @pytest.mark.parametrize("name", WORKLOADS)
+    def test_mesh_matches_vmap(self, name):
+        wl, X, y = _workload_case(name)
+        evals = {}
+        for kind in ("mesh", "vmap"):
+            res = api.fit(wl, _grid(kind), X, y, steps=8)
+            evals[kind] = res.eval(X, y)
+        assert evals["mesh"].keys() == evals["vmap"].keys()
+        for k in evals["mesh"]:
+            np.testing.assert_allclose(
+                np.asarray(evals["mesh"][k]),
+                np.asarray(evals["vmap"][k]),
+                rtol=1e-5, atol=1e-6, err_msg=f"{name}:{k}")
+
+    @pytest.mark.parametrize("name", ("svm", "multinomial"))
+    def test_plan_cells_on_mesh(self, name):
+        """The PR 5 workloads ride the full plan surface on the mesh:
+        compressed + outer cells converge within the EF bound of the
+        exact cell."""
+        wl, X, y = _workload_case(name)
+        grid = _grid("mesh")
+        exact = api.fit(wl, grid, X, y, steps=16,
+                        merge_plan=MergePlan(cadence=4))
+        acc_exact = float(exact.eval(X, y)["accuracy"])
+
+        # int8: error feedback keeps the state itself near exact
+        int8 = api.fit(wl, grid, X, y, steps=16,
+                       merge_plan=MergePlan(cadence=4,
+                                            compression=INT8))
+        for leaf_c, leaf_e in zip(jax.tree.leaves(int8.state),
+                                  jax.tree.leaves(exact.state)):
+            np.testing.assert_allclose(
+                np.asarray(leaf_c), np.asarray(leaf_e),
+                rtol=0, atol=0.25)
+
+        # slowmo: a *different* optimizer (outer momentum moves ~2x per
+        # round), so the contract is convergence quality, not weights
+        slowmo = api.fit(wl, grid, X, y, steps=16,
+                         merge_plan=MergePlan(cadence=4,
+                                              outer=SlowMo(beta=0.5)))
+        acc_slowmo = float(slowmo.eval(X, y)["accuracy"])
+        assert acc_slowmo >= acc_exact - 0.15
+
+
+# ---------------------------------------------------------------------------
+# integer leaves: the wire's int passthrough is associative, so mesh
+# and vmap must agree bit-for-bit even under a compressed plan
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+class TestIntegerLeafExactness:
+    def _fit(self, grid):
+        def local_fn(state, sl):
+            pos = (sl["X"] > 0.0) * sl["w"][:, None]
+            return {"hist": jnp.sum(pos.astype(jnp.int32), axis=0),
+                    "mass": jnp.sum(sl["X"] * sl["w"][:, None], axis=0)}
+
+        def update_fn(state, merged):
+            state = {"hist": state["hist"] + merged["hist"],
+                     "w": state["w"] - 1e-3 * merged["mass"]}
+            return state, {"hist": merged["hist"]}
+
+        X = jax.random.normal(KEY, (96, 5))
+        data, _ = grid.shard_rows(X)
+        s0 = {"hist": jnp.zeros((5,), jnp.int32),
+              "w": jnp.zeros((5,), jnp.float32)}
+        state, hist = grid.fit(
+            init_state=s0, local_fn=local_fn, update_fn=update_fn,
+            data=data, steps=4, merge_plan=MergePlan(compression=INT8))
+        return (np.asarray(state["hist"]),
+                np.asarray([h["hist"] for h in hist]))
+
+    def test_int32_partials_bit_exact_across_grids(self):
+        h_mesh, hist_mesh = self._fit(_grid("mesh"))
+        h_vmap, hist_vmap = self._fit(_grid("vmap"))
+        np.testing.assert_array_equal(h_mesh, h_vmap)
+        np.testing.assert_array_equal(hist_mesh, hist_vmap)
+
+
+# ---------------------------------------------------------------------------
+# merge_state plumbing on the mesh
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+class TestMergeStateOnMesh:
+    def test_ef_buffer_hop_layout_and_sharding(self):
+        grid, data, lf, uf, w0 = _linreg("mesh")
+        holder = {}
+        grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                 steps=8, merge_plan=PLAN_CELLS["int8_k4"],
+                 merge_state=holder)
+        for leaf in jax.tree.leaves(holder["error"]):
+            assert leaf.shape[0] == 2          # one slice per pod
+            assert leaf.sharding.spec == P("pod")
+
+    def test_ef_continues_across_fit_calls(self):
+        grid, data, lf, uf, w0 = _linreg("mesh")
+        w_one, _ = grid.fit(init_state=w0, local_fn=lf, update_fn=uf,
+                            data=data, steps=16,
+                            merge_plan=PLAN_CELLS["int8_k4"])
+        holder = {}
+        w_half, _ = grid.fit(init_state=w0, local_fn=lf, update_fn=uf,
+                             data=data, steps=8,
+                             merge_plan=PLAN_CELLS["int8_k4"],
+                             merge_state=holder)
+        w_two, _ = grid.fit(init_state=w_half, local_fn=lf,
+                            update_fn=uf, data=data, steps=8,
+                            merge_plan=PLAN_CELLS["int8_k4"],
+                            merge_state=holder)
+        np.testing.assert_allclose(np.asarray(w_two),
+                                   np.asarray(w_one),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_slowmo_momentum_in_holder(self):
+        grid, data, lf, uf, w0 = _linreg("mesh")
+        holder = {}
+        grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                 steps=8, merge_plan=PLAN_CELLS["slowmo_k4"],
+                 merge_state=holder)
+        assert "momentum" in holder
+        # the OptState pytree carries a state-shaped momentum leaf
+        # (plus optimizer scalars like the step count)
+        shapes = [leaf.shape for leaf in
+                  jax.tree.leaves(holder["momentum"])]
+        assert w0.shape in shapes
+
+
+# ---------------------------------------------------------------------------
+# buffer donation: the scan carry must be marked donatable in the
+# lowered HLO on donating backends, and unmarked on CPU
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+class TestDonation:
+    def _pieces(self):
+        # a FRESH grid per test: make_runner caches per grid, and the
+        # donation decision is baked in at trace time
+        grid = make_mesh_grid(N_VDPUS, pods=2)
+        X, y, _ = datasets.regression(KEY, 192, 6)
+        data, n, lf, uf, w0 = make_linreg_step(grid, X, y, lr=0.05)
+        return grid, data, lf, uf, w0
+
+    def test_donating_backend_marks_carry(self, monkeypatch):
+        grid, data, lf, uf, w0 = self._pieces()
+        monkeypatch.setattr(mp, "donating_backend", lambda: True)
+        runner = grid.make_runner(lf, uf)
+        text = runner.lower(w0, data, length=2).as_text()
+        assert "jax.buffer_donor" in text
+
+    def test_cpu_backend_does_not_mark_carry(self):
+        grid, data, lf, uf, w0 = self._pieces()
+        assert not mp.donating_backend()
+        runner = grid.make_runner(lf, uf)
+        text = runner.lower(w0, data, length=2).as_text()
+        assert "jax.buffer_donor" not in text
+
+
+# ---------------------------------------------------------------------------
+# auto plan: the controller prices the DCN wire on a mesh
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+class TestAutoPlanOnMesh:
+    def test_auto_fit_runs_and_traces(self):
+        grid, data, lf, uf, w0 = _linreg("mesh")
+        holder = {}
+        w, hist = grid.fit(init_state=w0, local_fn=lf, update_fn=uf,
+                           data=data, steps=16, merge_plan="auto",
+                           merge_state=holder)
+        assert len(hist) == 16
+        trace = holder["tuning_trace"]
+        assert trace["choices"]                 # candidates considered
+        assert trace["cost_table"]              # roofline-priced rows
+
+    def test_n_chips_tracks_mesh(self):
+        for kind, expect in (("mesh", 8), ("vmap", 1)):
+            grid, data, lf, uf, w0 = _linreg(kind)
+            model = CostModel.for_fit(grid, lf, uf, w0, data)
+            assert model.n_chips == expect
+
+    def _big_model(self, kind):
+        # a wire large enough (256 KiB) that the slow-hop pricing
+        # dominates the prediction either way
+        grid = _grid(kind)
+        data, _ = grid.shard_rows(jnp.zeros((32, 4)))
+        w0 = jnp.zeros((1 << 16,), jnp.float32)
+
+        def lf(w, sl):
+            return {"g": w * jnp.sum(sl["w"])}
+
+        def uf(w, merged):
+            return w - 1e-3 * merged["g"], {"m": merged["g"][0]}
+
+        return CostModel.for_fit(grid, lf, uf, w0, data)
+
+    def test_dcn_pricing_flips_the_compression_verdict(self):
+        """The CostModel wire_bw branch: on the 8-chip mesh the slow
+        hop crosses DCN, so the int8 wire's byte saving beats its
+        encode cost; on the single-chip emulation the same hop moves at
+        HBM speed and compression can never win the modeled merge."""
+        mesh = self._big_model("mesh")
+        vmap = self._big_model("vmap")
+        assert mesh.predict(cadence=4, compression=INT8)["t_merge_s"] \
+            < mesh.predict(cadence=4)["t_merge_s"]
+        assert vmap.predict(cadence=4, compression=INT8)["t_merge_s"] \
+            > vmap.predict(cadence=4)["t_merge_s"]
+
+
+# ---------------------------------------------------------------------------
+# Trainer checkpoint round-trip of mesh merge_state
+# ---------------------------------------------------------------------------
+
+
+@multidevice
+class TestTrainerMeshCheckpoint:
+    def _mesh_holder(self):
+        """A holder populated by real mesh fits: sharded hop-shaped EF
+        + SlowMo momentum + the auto controller's tuning trace."""
+        grid, data, lf, uf, w0 = _linreg("mesh")
+        holder = {}
+        grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                 steps=8,
+                 merge_plan=MergePlan(cadence=4, compression=INT8,
+                                      outer=SlowMo(beta=0.5)),
+                 merge_state=holder)
+        auto = {}
+        grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                 steps=16, merge_plan="auto", merge_state=auto)
+        holder["tuning_trace"] = auto["tuning_trace"]
+        return holder
+
+    def _trainer(self, tmp_path, holder):
+        def step_fn(state, batch):
+            w = state["w"] - 0.1 * batch["g"]
+            return {"w": w}, {"loss": jnp.sum(w ** 2)}
+
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=4,
+                            log_every=100, merge_compression=INT8)
+        return Trainer(step_fn, {"w": jnp.ones((3,))},
+                       lambda s: {"g": jnp.ones((3,))}, cfg,
+                       merge_state=holder)
+
+    def test_mesh_merge_state_round_trips(self, tmp_path):
+        holder = self._mesh_holder()
+        tr = self._trainer(tmp_path, holder)
+        tr.run(8)
+
+        # resume: the fresh holder is seeded with zeroed templates for
+        # the array buffers; the trace needs no seeding (it rides the
+        # checkpoint manifest as JSON)
+        holder2 = {
+            "error": jax.tree.map(jnp.zeros_like, holder["error"]),
+            "momentum": jax.tree.map(jnp.zeros_like,
+                                     holder["momentum"]),
+        }
+        tr2 = self._trainer(tmp_path, holder2)
+        assert tr2.start_step == 8
+        for got, want in zip(jax.tree.leaves(holder2["error"]),
+                             jax.tree.leaves(holder["error"])):
+            assert got.shape[0] == 2           # hop layout survives
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(want))
+        for got, want in zip(jax.tree.leaves(holder2["momentum"]),
+                             jax.tree.leaves(holder["momentum"])):
+            np.testing.assert_allclose(np.asarray(got),
+                                       np.asarray(want))
+        assert holder2["tuning_trace"] == holder["tuning_trace"]

@@ -17,7 +17,11 @@ Checks, in order:
    ``auto`` entry to ``config.plans`` (the self-tuning
    ``fit(merge_plan="auto")`` cells) — like every plan, it flows
    through the generic ``plans`` axis below, so v5 artifacts need no
-   key-shape changes here.
+   key-shape changes here.  v6 adds the ``mesh`` column (real
+   shard_map cells, promised via ``config.mesh_grids`` — a list of
+   mesh labels that is EMPTY when the generating runtime had one
+   device, so the promise adapts) and the ``weak_scaling`` section
+   (fixed rows-per-vDPU rows promised via ``config.weak_n_vdpus``).
 2. **completeness** — the fresh file must contain one throughput cell
    for every point of the cross-product its *own* config promises
    (n_vdpus x precision x merge_every, the pipeline axis applied to
@@ -31,7 +35,7 @@ Checks, in order:
    the *fresh* config, so added plan/workload columns never flag
    missing-cell errors on older committed artifacts.
 3. **regression** — for cells whose key (workload, n_vdpus, precision,
-   merge_every, pipeline, plan, batch_size) exists in both files *and*
+   merge_every, pipeline, plan, batch_size, mesh) exists in both files *and*
    whose configs are comparable (same backend, rows, features, smoke
    flag), fresh ``steps_per_s`` must be at least ``1/max_regression``
    of committed.  Pre-v4 cells read as ``workload="linreg"``,
@@ -59,13 +63,14 @@ import sys
 
 
 def _cell_key(cell: dict):
-    # pre-v3 artifacts have no "plan" column and pre-v4 none for
-    # "workload"/"batch_size" — their cells are the default-axis cells,
-    # so the defaults keep keys comparable across schema versions
+    # pre-v3 artifacts have no "plan" column, pre-v4 none for
+    # "workload"/"batch_size", pre-v6 none for "mesh" — their cells are
+    # the default-axis cells, so the defaults keep keys comparable
+    # across schema versions
     return (cell.get("workload", "linreg"), cell.get("n_vdpus"),
             cell.get("precision"), cell.get("merge_every"),
             cell.get("pipeline", "baseline"), cell.get("plan", "avg"),
-            cell.get("batch_size", "full"))
+            cell.get("batch_size", "full"), cell.get("mesh", "none"))
 
 
 def _schema_version(tag):
@@ -93,14 +98,15 @@ def expected_keys(config: dict):
             pnames = pipelines if prec in pipe_precisions else ["baseline"]
             for k in config.get("merge_every", []):
                 for p in pnames:
-                    keys.add(("linreg", v, prec, k, p, "avg", "full"))
+                    keys.add(("linreg", v, prec, k, p, "avg", "full",
+                              "none"))
     plan_precisions = set(config.get("plan_precisions", []))
     for v in config.get("plan_n_vdpus", []):
         for prec in plan_precisions:
             for k in config.get("merge_every", []):
                 for plan in config.get("plans", []):
                     keys.add(("linreg", v, prec, k, "baseline", plan,
-                              "full"))
+                              "full", "none"))
     # v4: the Workload-protocol axis.  linreg's full-batch cells belong
     # to the base sweep above, so (linreg, "full") is not re-promised.
     for v in config.get("workload_n_vdpus", []):
@@ -109,16 +115,35 @@ def expected_keys(config: dict):
                 if wl == "linreg" and bs == "full":
                     continue
                 for k in config.get("workload_merge_every", []):
-                    keys.add((wl, v, "fp32", k, "baseline", "avg", bs))
+                    keys.add((wl, v, "fp32", k, "baseline", "avg", bs,
+                              "none"))
+    # v6: real-mesh cells.  ``mesh_grids`` lists the mesh labels the
+    # generating runtime could actually build — empty on a single
+    # device — so the promise adapts to where the sweep ran.
+    for mesh in config.get("mesh_grids", []):
+        for v in config.get("mesh_n_vdpus", []):
+            for p in config.get("mesh_pipelines", []):
+                for k in config.get("merge_every", []):
+                    keys.add(("linreg", v, "fp32", k, p, "avg", "full",
+                              mesh))
     return keys
 
 
+def expected_weak_rows(config: dict):
+    """v6: the (n_vdpus) grid sizes the weak-scaling section promises
+    (each has at least the emulated-grid row; mesh rows are a bonus
+    keyed by runtime device count)."""
+    return set(config.get("weak_n_vdpus", []))
+
+
 def comparable(fresh_cfg: dict, committed_cfg: dict) -> bool:
-    """Absolute throughput is only meaningful within one workload size
-    and backend (docs/BENCHMARKS.md: compare like with like)."""
+    """Absolute throughput is only meaningful within one workload size,
+    backend, and device topology (docs/BENCHMARKS.md: compare like
+    with like — v6 sweeps under forced host devices run the emulated
+    cells on a fraction of the machine)."""
     return all(fresh_cfg.get(k) == committed_cfg.get(k)
-               for k in ("backend", "rows", "features", "smoke",
-                         "timed_steps"))
+               for k in ("backend", "n_devices", "rows", "features",
+                         "smoke", "timed_steps"))
 
 
 def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
@@ -150,7 +175,15 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
         findings.append(
             "missing throughput cell (workload={}, n_vdpus={}, "
             "precision={}, merge_every={}, pipeline={}, plan={}, "
-            "batch_size={})".format(*key))
+            "batch_size={}, mesh={})".format(*key))
+
+    # v6: weak-scaling completeness, judged against the file's OWN
+    # config like the throughput promise (older schemas promise none)
+    weak_present = {r.get("n_vdpus")
+                    for r in fresh.get("weak_scaling", [])}
+    for v in sorted(expected_weak_rows(fresh.get("config", {}))
+                    - weak_present):
+        findings.append(f"missing weak-scaling row (n_vdpus={v})")
 
     if not comparable(fresh.get("config", {}),
                       committed.get("config", {})):
@@ -167,7 +200,7 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
             findings.append(
                 "throughput regression >{:.1f}x at (workload={}, "
                 "n_vdpus={}, precision={}, merge_every={}, pipeline={}, "
-                "plan={}, batch_size={}): "
+                "plan={}, batch_size={}, mesh={}): "
                 "{:.1f} -> {:.1f} steps/s".format(
                     max_regression, *key, committed_sps, fresh_sps))
     return findings

@@ -1,8 +1,10 @@
-"""Sharded, async, mesh-shape-agnostic checkpointing.
+"""Sharded, async, mesh-shape-agnostic, crash-consistent checkpointing.
 
 Format: one directory per step containing
   * ``manifest.json`` — step, pytree structure, leaf shapes/dtypes,
-    logical sharding axes (NOT mesh-shape-specific), data-stream cursor
+    logical sharding axes (NOT mesh-shape-specific), data-stream cursor,
+    and (since the resilience PR) a ``checksums`` map: sha256 of every
+    payload file, verified on restore
   * ``arrays.npz``    — logical (unsharded) leaf values
 
 Because leaves are stored *logically*, restore works onto any mesh shape
@@ -11,19 +13,50 @@ own rules — e.g. after losing a pod, the same checkpoint reloads onto a
 (16,16) mesh.  Saving is async (background thread) so the train loop
 never blocks on I/O, and retention keeps the newest K checkpoints plus
 every K_keep-th for provenance.
+
+Crash consistency
+-----------------
+* Writes land in a ``.tmp`` sibling and are published with one
+  ``os.replace`` — a crash mid-write leaves no partial ``step_*`` dir.
+* ``manifest.json["checksums"]`` pins the payload bytes; ``restore``
+  verifies it and raises :class:`CheckpointCorruptError` (NOT a
+  ``ValueError`` — a template/structure mismatch stays ``ValueError``
+  so callers can tell layout drift from disk rot).
+* ``restore_latest`` quarantines a corrupt step (renames the dir to
+  ``*.corrupt`` so ``steps()`` stops offering it) and falls back to the
+  newest valid one instead of failing the restart.
+* A failed *background* write parks its exception and re-raises at the
+  next ``wait()`` or ``save()`` — never published, so ``latest_step()``
+  still names the last good snapshot.
+
+Deterministic torn-write fault injection (``repro.resilience.faults``):
+when an armed ``FaultPlan`` schedules ``torn_ckpt`` for this manager's
+save ordinal, the published ``arrays.npz`` is truncated after the
+atomic publish — exactly the failure mode the checksum manifest exists
+to catch.
 """
 
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
+import warnings
+import zipfile
 from typing import Any, Callable, Optional
 
 import jax
 import numpy as np
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint failed validation (checksum mismatch, unreadable
+    manifest/payload).  Deliberately not a ``ValueError``: structure
+    mismatches (template drift) keep raising ``ValueError`` and must
+    stay distinguishable from disk corruption."""
 
 
 def _flatten_with_names(tree):
@@ -35,6 +68,14 @@ def _flatten_with_names(tree):
     return names, leaves, treedef
 
 
+def _sha256(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for chunk in iter(lambda: f.read(1 << 20), b""):
+            h.update(chunk)
+    return h.hexdigest()
+
+
 class CheckpointManager:
     def __init__(self, directory: str, *, keep: int = 3,
                  keep_every: int = 0, async_save: bool = True):
@@ -43,6 +84,8 @@ class CheckpointManager:
         self.keep_every = keep_every
         self.async_save = async_save
         self._pending: Optional[threading.Thread] = None
+        self._pending_exc: Optional[BaseException] = None
+        self._save_ordinal = 0   # torn-write fault events key on this
         os.makedirs(directory, exist_ok=True)
 
     # -- save ---------------------------------------------------------------
@@ -52,7 +95,9 @@ class CheckpointManager:
 
         The device->host gather happens synchronously (cheap, and safe
         against later donation/mutation); compression+write happen in a
-        background thread when ``async_save``."""
+        background thread when ``async_save``.  A previous background
+        failure surfaces here (via ``wait``) before new work starts."""
+        self.wait()
         names, leaves, _ = _flatten_with_names(state)
         host = [np.asarray(jax.device_get(x)) for x in leaves]
         meta = {
@@ -61,31 +106,63 @@ class CheckpointManager:
             "extra": extra or {},
             "time": time.time(),
         }
+        ordinal = self._save_ordinal
+        self._save_ordinal += 1
 
         def write():
             path = os.path.join(self.dir, f"step_{step:010d}")
             tmp = path + ".tmp"
             os.makedirs(tmp, exist_ok=True)
-            np.savez(os.path.join(tmp, "arrays.npz"),
-                     **{f"a{i}": h for i, h in enumerate(host)})
+            arrays = os.path.join(tmp, "arrays.npz")
+            np.savez(arrays, **{f"a{i}": h for i, h in enumerate(host)})
+            meta["checksums"] = {"arrays.npz": _sha256(arrays)}
             with open(os.path.join(tmp, "manifest.json"), "w") as f:
                 json.dump(meta, f)
             if os.path.exists(path):
                 shutil.rmtree(path)
             os.replace(tmp, path)      # atomic publish
+            self._maybe_tear(path, ordinal)
             self._retain()
 
         if self.async_save:
-            self.wait()
-            self._pending = threading.Thread(target=write, daemon=True)
+            def guarded():
+                try:
+                    write()
+                except BaseException as exc:  # parked, raised at wait()
+                    self._pending_exc = exc
+
+            self._pending = threading.Thread(target=guarded, daemon=True)
             self._pending.start()
         else:
             write()
 
+    def _maybe_tear(self, path: str, ordinal: int) -> None:
+        """Deterministic torn-write injection: truncate the published
+        payload when an armed FaultPlan schedules it for this save
+        ordinal.  Zero work when nothing is armed."""
+        try:
+            from repro.resilience import faults as _faults
+        except ImportError:     # resilience not importable: nothing armed
+            return
+        plan = _faults.active()
+        if plan is None or not plan.saves_at(ordinal):
+            return
+        arrays = os.path.join(path, "arrays.npz")
+        size = os.path.getsize(arrays)
+        with open(arrays, "r+b") as f:
+            f.truncate(size // 2)
+
     def wait(self):
+        """Block until the in-flight write finishes; re-raise its
+        failure *here* (the first wait/save boundary), not at some later
+        save."""
         if self._pending is not None:
             self._pending.join()
             self._pending = None
+        if self._pending_exc is not None:
+            exc = self._pending_exc
+            self._pending_exc = None
+            raise exc
 
     # -- restore --------------------------------------------------------------
 
@@ -95,13 +172,52 @@ class CheckpointManager:
             if d.startswith("step_") and not d.endswith(".tmp"):
                 try:
                     out.append(int(d.split("_")[1]))
-                except ValueError:
+                except ValueError:   # quarantined (*.corrupt) and misc
                     pass
         return sorted(out)
 
     def latest_step(self) -> Optional[int]:
         s = self.steps()
         return s[-1] if s else None
+
+    def _step_path(self, step: int) -> str:
+        return os.path.join(self.dir, f"step_{step:010d}")
+
+    def validate(self, step: int) -> bool:
+        """Whether the checkpoint's bytes are intact: readable manifest,
+        payload present, checksums (when the manifest carries them —
+        pre-resilience checkpoints don't and validate on readability
+        alone) match."""
+        path = self._step_path(step)
+        try:
+            with open(os.path.join(path, "manifest.json")) as f:
+                meta = json.load(f)
+            sums = meta.get("checksums")
+            if sums is not None:
+                for fname, digest in sums.items():
+                    if _sha256(os.path.join(path, fname)) != digest:
+                        return False
+            else:
+                # legacy: at least require the payload to unzip
+                with np.load(os.path.join(path, "arrays.npz")):
+                    pass
+            return True
+        except (OSError, ValueError, KeyError, zipfile.BadZipFile):
+            return False
+
+    def quarantine(self, step: int) -> None:
+        """Move a corrupt step out of ``steps()``'s sight (renamed, not
+        deleted — post-mortems want the bytes)."""
+        path = self._step_path(step)
+        dest = path + ".corrupt"
+        n = 0
+        while os.path.exists(dest):
+            n += 1
+            dest = f"{path}.corrupt{n}"
+        os.replace(path, dest)
+        warnings.warn(
+            f"checkpoint step {step} failed validation — quarantined "
+            f"to {os.path.basename(dest)}", RuntimeWarning)
 
     def restore(self, step: int, template: Any,
                 placer: Optional[Callable[[str, np.ndarray], Any]] = None
@@ -110,8 +226,14 @@ class CheckpointManager:
 
         ``placer(name, host_array)`` lets the launcher device_put each
         leaf with mesh-appropriate sharding (elastic restore); default is
-        plain jnp.asarray."""
-        path = os.path.join(self.dir, f"step_{step:010d}")
+        plain jnp.asarray.  Raises :class:`CheckpointCorruptError` when
+        the bytes fail validation, ``ValueError`` when the structure
+        does not match the template."""
+        if not self.validate(step):
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} failed checksum/readability "
+                f"validation")
+        path = self._step_path(step)
         with open(os.path.join(path, "manifest.json")) as f:
             meta = json.load(f)
         data = np.load(os.path.join(path, "arrays.npz"))
@@ -131,11 +253,16 @@ class CheckpointManager:
         return jax.tree_util.tree_unflatten(treedef, out), meta["extra"]
 
     def restore_latest(self, template: Any, placer=None):
-        step = self.latest_step()
-        if step is None:
-            return None
-        state, extra = self.restore(step, template, placer)
-        return step, state, extra
+        """Newest *valid* checkpoint: corrupt steps are quarantined and
+        skipped (automatic fallback), structure mismatches propagate
+        (that is a caller bug, not disk rot)."""
+        for step in reversed(self.steps()):
+            if not self.validate(step):
+                self.quarantine(step)
+                continue
+            state, extra = self.restore(step, template, placer)
+            return step, state, extra
+        return None
 
     # -- retention ------------------------------------------------------------
 

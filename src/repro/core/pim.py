@@ -113,6 +113,8 @@ import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from jax.experimental.shard_map import shard_map
 
+from repro.resilience import faults as _faults
+
 
 def _tree_sum_leading(tree):
     return jax.tree.map(lambda x: jnp.sum(x, axis=0), tree)
@@ -455,6 +457,24 @@ class PimGrid:
             merge_plan, merge_every=merge_every,
             overlap_merge=overlap_merge,
             merge_compression=merge_compression)
+
+        # fault-injection hook (repro.resilience): when a FaultPlan is
+        # armed, non-controller fits run under the resilient driver —
+        # survivor-weighted merges, deterministic injection, rollback.
+        # Unarmed cost: this one None check.
+        ctx = _faults.armed_context()
+        if ctx is not None and not (plan.adaptive or plan.auto):
+            from repro.resilience import runtime as _resilient
+
+            fplan, recovery, ckpt, ckpt_every = ctx
+            state, history, _report = _resilient.drive_fit(
+                self, init_state=init_state, local_fn=local_fn,
+                update_fn=update_fn, data=data, steps=steps,
+                plan=plan, fault_plan=fplan, recovery=recovery,
+                ckpt=ckpt, ckpt_every_rounds=ckpt_every,
+                scan_chunk=scan_chunk, callback=callback,
+                merge_state=merge_state)
+            return state, history
 
         if not plan.is_exact_default:
             return mp.run_fit(

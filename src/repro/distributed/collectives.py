@@ -86,7 +86,8 @@ def quantized_psum(x: jax.Array, axis: str, *, bits: int = 8
 
 
 def quantized_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
-                      bits: int = 8) -> Tuple[jax.Array, jax.Array]:
+                      bits: int = 8, alive=None
+                      ) -> Tuple[jax.Array, jax.Array]:
     """Error-feedback variant: returns (reduced, new_error).  The residual
     of this round's quantization is added to the next round's input, which
     keeps compressed SGD within O(1) of exact (see core.quantize.ef_*).
@@ -98,21 +99,32 @@ def quantized_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
     (matching ``Quantized.dequantize``), and the residual subtracts that
     wire cast to the *input's* dtype (exactly ``ef_quantize``'s
     ``q.dequantize(grad.dtype)``), whatever dtype the error buffer
-    carries."""
+    carries.
+
+    ``alive`` (survivor merges — ``repro.resilience.survivor``): an
+    optional scalar bool per participant.  A dead participant transmits
+    an exactly-zero wire and *holds* its error residual (EF mass is
+    conserved, not dropped), so a revived participant re-injects what
+    it owed.  ``alive=None`` keeps the original code path bit-for-bit.
+    """
     qmax = 2 ** (bits - 1) - 1
     target = x + error
+    if alive is not None:
+        target = jnp.where(alive, target, jnp.zeros_like(target))
     t32 = target.astype(jnp.float32)
     amax = jax.lax.pmax(jnp.max(jnp.abs(t32)), axis)
     scale = jnp.maximum(amax, 1e-12) / qmax
     q = jnp.clip(jnp.round(t32 / scale), -qmax - 1, qmax)
     new_error = target - (q * scale).astype(x.dtype)
+    if alive is not None:
+        new_error = jnp.where(alive, new_error, error)
     total = jax.lax.psum(q.astype(jnp.int32), axis)
     return (total.astype(jnp.float32) * scale).astype(x.dtype), new_error
 
 
 def sparse_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
                    frac: float, bits: Optional[int] = 8,
-                   error_feedback: bool = True
+                   error_feedback: bool = True, alive=None
                    ) -> Tuple[jax.Array, jax.Array]:
     """Top-k sparsified (optionally fixed-point) all-reduce with error
     feedback — the communication-sparsification axis of PIM-Opt on the
@@ -127,8 +139,14 @@ def sparse_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
     Selection is ``core.quantize.topk_keep`` — exactly k survivors, the
     same definition the ``mesh=None`` emulation uses, so CPU tests keep
     covering this path's numerics.
+
+    ``alive`` gates a dead participant to a zero wire with its error
+    residual held, exactly like ``quantized_psum_ef`` — ``None`` keeps
+    the original path bit-for-bit.
     """
     target = x + error if error_feedback else x
+    if alive is not None:
+        target = jnp.where(alive, target, jnp.zeros_like(target))
     kept = qz.topk_keep(target, frac)
     if bits is None:
         local_wire = kept
@@ -146,6 +164,8 @@ def sparse_psum_ef(x: jax.Array, error: jax.Array, axis: str, *,
         total = (jax.lax.psum(q.astype(jnp.int32), axis)
                  .astype(jnp.float32) * scale).astype(x.dtype)
     new_error = (target - local_wire) if error_feedback else error
+    if alive is not None and error_feedback:
+        new_error = jnp.where(alive, new_error, error)
     return total, new_error
 
 

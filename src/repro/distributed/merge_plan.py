@@ -935,6 +935,17 @@ def run_fit(grid, plan: MergePlan, *, init_state, local_fn, update_fn,
     if steps > 0 and donating_backend():
         state = _copy_tree(state)
 
+    # Controller-driven plans reach run_fit even when a FaultPlan is
+    # armed (the resilient driver only covers static plans): make the
+    # gap loud instead of silently skipping injection.
+    from repro.resilience import faults as _faults
+    if _faults.active() is not None and (plan.adaptive or plan.auto):
+        warnings.warn(
+            "a FaultPlan is armed but this fit uses a controller-driven "
+            "plan (adaptive/auto); fault injection and recovery only "
+            "cover static plans — no faults will be injected",
+            MergeFallbackWarning, stacklevel=3)
+
     compression = plan.compression
     outer = plan.outer
 

@@ -1,0 +1,40 @@
+"""Fault-tolerant training runtime (robustness track).
+
+Real UPMEM deployments ship with faulty/disabled DPUs and transfer
+anomalies (PIM-Opt, arXiv:2404.07164; Benchmarking Memory-Centric
+Computing Systems, arXiv:2110.01709) — this package gives the engine a
+first-class failure model:
+
+* ``faults``    — a deterministic, seeded, round-indexed ``FaultPlan``
+  whose events (non-finite lanes, corrupted wire leaves, dead
+  lanes/pods, dispatch timeouts, torn checkpoints) are injected at the
+  host dispatch boundary, so every failure is replayable in tests and
+  compiled round bodies stay byte-identical to the fault-free engine.
+* ``survivor``  — survivor-weighted hierarchical merges: a dead-lane
+  mask rides the scan carry and the merge renormalises by surviving
+  lane count (exact and EF-compressed wires).
+* ``recovery``  — ``RecoveryPolicy``: exponential backoff, rollback to
+  the last validated checkpoint, and a plan-degradation ladder
+  (compressed wire → exact → halve cadence → drop overlap).
+* ``runtime``   — the resilient fit driver ``drive_fit`` that
+  ``PimGrid.fit`` routes to whenever a ``FaultPlan`` is armed.
+
+Nothing here runs unless a plan is armed (``faults.arm`` /
+``faults.armed``): the only unarmed cost is one ``is None`` check per
+``fit`` call.
+"""
+
+from repro.resilience.faults import (  # noqa: F401
+    FAULT_KINDS, DispatchTimeout, FaultEvent, FaultPlan, active, arm,
+    armed, armed_context, disarm)
+from repro.resilience.recovery import (  # noqa: F401
+    DivergenceDetector, RecoveryPolicy, replay_trace)
+from repro.resilience.runtime import drive_fit  # noqa: F401
+from repro.resilience.survivor import survivor_runners  # noqa: F401
+
+__all__ = [
+    "FAULT_KINDS", "DispatchTimeout", "FaultEvent", "FaultPlan",
+    "DivergenceDetector", "RecoveryPolicy", "replay_trace",
+    "arm", "disarm", "armed", "armed_context", "active", "drive_fit",
+    "survivor_runners",
+]

@@ -1,0 +1,310 @@
+"""Deterministic fault injection — seeded, round-indexed, replayable.
+
+DESIGN — why faults live at the host dispatch boundary
+------------------------------------------------------
+The scan engine compiles round bodies once and caches them by function
+signature (``merge_plan.cache_get``); baking a per-round fault check
+into the traced body would either poison that cache or tax every
+fault-free fit.  Instead a ``FaultPlan`` is a *host-side* schedule: the
+resilient driver (``resilience.runtime``) consults ``events_at(round)``
+between dispatches and applies each event to host-visible values —
+merged state, lane mask, checkpoint bytes.  Compiled code is therefore
+byte-identical to the fault-free engine, and an armed-but-idle plan
+costs one dict lookup per dispatched chunk.
+
+The five fault kinds and where they bite:
+
+``nan_lane``
+    One lane's local gradient goes non-finite.  The hierarchical merge
+    *averages* lanes, so a single NaN lane NaNs the merged state — the
+    injection poisons the post-merge state/metrics, which is exactly
+    what the lane fault propagates to (and what recovery must detect).
+``wire_bitflip``
+    A bit-corrupted wire leaf on the slow ``"pod"`` hop
+    (``distributed/collectives.py``): after the slow-axis psum the
+    corrupted word lands in the merged state, so the injection flips
+    one bit of one element of the merged state tree — high exponent
+    bits model the detectable blow-ups real transfer anomalies cause.
+``dead_lane`` / ``dead_pod``
+    A vDPU (or a whole slow-hop participant's worth of them) stops
+    responding.  The event zeroes entries of the survivor mask that
+    rides the resilient carry; the merge renormalises by surviving
+    lane count (``resilience.survivor``).
+``timeout``
+    A dispatch hangs: the driver sleeps ``duration_s`` and raises
+    ``DispatchTimeout`` — transient, retried after backoff.
+``torn_ckpt``
+    A checkpoint write is torn mid-flight: ``CheckpointManager``
+    truncates the published arrays file for the matching save ordinal
+    (``round`` counts *saves* for this kind), which the checksum
+    manifest must catch on restore.
+
+Determinism: ``FaultPlan.generate`` derives every event from
+``numpy.random.RandomState(seed)``, and the plan is a frozen value —
+replaying a fit with the same seed, data and recovery policy replays
+the identical failure history (the fault-matrix tests and the recovery
+trace replay rely on this).
+
+>>> p = FaultPlan.generate(seed=7, rounds=20, n_lanes=8,
+...                        rates={"nan_lane": 0.2})
+>>> p == FaultPlan.generate(seed=7, rounds=20, n_lanes=8,
+...                         rates={"nan_lane": 0.2})
+True
+>>> all(e.kind == "nan_lane" and 0 <= e.lane < 8 for e in p.events)
+True
+"""
+
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from typing import Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+FAULT_KINDS = ("nan_lane", "wire_bitflip", "dead_lane", "dead_pod",
+               "timeout", "torn_ckpt")
+
+
+class DispatchTimeout(RuntimeError):
+    """A (simulated) hung dispatch — transient; recovery retries it
+    after backoff without climbing the degradation ladder."""
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class FaultEvent:
+    """One scheduled failure.  ``round`` is the dispatch-round ordinal
+    (for ``torn_ckpt``: the save ordinal since arming).  The remaining
+    fields are kind-specific and ignored elsewhere."""
+
+    round: int
+    kind: str
+    lane: int = -1          # nan_lane / dead_lane target
+    pod: int = -1           # dead_pod target (slow-hop participant)
+    leaf: int = 0           # wire_bitflip: float-leaf index (mod #leaves)
+    index: int = 0          # wire_bitflip: element within the leaf
+    bit: int = 30           # wire_bitflip: bit of the f32 word to flip
+    duration_s: float = 0.0  # timeout: simulated hang before the raise
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(
+                f"unknown fault kind {self.kind!r}: one of {FAULT_KINDS}")
+        if self.round < 0:
+            raise ValueError(f"FaultEvent.round must be >= 0, got "
+                             f"{self.round}")
+
+    def describe(self) -> dict:
+        """JSON-able form for recovery traces."""
+        d = {"round": self.round, "kind": self.kind}
+        for f in ("lane", "pod"):
+            if getattr(self, f) >= 0:
+                d[f] = getattr(self, f)
+        if self.kind == "wire_bitflip":
+            d.update(leaf=self.leaf, index=self.index, bit=self.bit)
+        if self.kind == "timeout":
+            d["duration_s"] = self.duration_s
+        return d
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultPlan:
+    """An immutable, ordered schedule of :class:`FaultEvent`.
+
+    Hashable/comparable (it participates in nothing compiled — but the
+    tests compare regenerated plans for replay determinism).
+    """
+
+    events: Tuple[FaultEvent, ...] = ()
+    seed: Optional[int] = None
+    # logical pod count for dead_pod at mesh=None (the emulated grid
+    # has no slow axis, so the plan says how lanes group into pods); a
+    # real mesh's hop size wins when larger
+    pods: int = 1
+
+    def __post_init__(self):
+        object.__setattr__(self, "events",
+                           tuple(sorted(self.events)))
+
+    @classmethod
+    def generate(cls, seed: int, *, rounds: int, n_lanes: int,
+                 pods: int = 1, rates: Dict[str, float],
+                 saves: Optional[int] = None) -> "FaultPlan":
+        """Bernoulli-per-round schedule from one ``RandomState(seed)``.
+
+        ``rates`` maps fault kind -> per-round probability.
+        ``torn_ckpt`` rates are drawn over ``saves`` ordinals (default
+        ``rounds``).  Same arguments => identical plan, always.
+        """
+        rng = np.random.RandomState(seed)
+        events = []
+        for kind in FAULT_KINDS:  # fixed order => deterministic draws
+            rate = rates.get(kind, 0.0)
+            if rate <= 0.0:
+                continue
+            horizon = saves if (kind == "torn_ckpt" and
+                                saves is not None) else rounds
+            for r in range(horizon):
+                if rng.random_sample() >= rate:
+                    continue
+                if kind in ("nan_lane", "dead_lane"):
+                    events.append(FaultEvent(
+                        r, kind, lane=int(rng.randint(n_lanes))))
+                elif kind == "dead_pod":
+                    events.append(FaultEvent(
+                        r, kind, pod=int(rng.randint(max(pods, 1)))))
+                elif kind == "wire_bitflip":
+                    events.append(FaultEvent(
+                        r, kind, leaf=int(rng.randint(1 << 16)),
+                        index=int(rng.randint(1 << 16)),
+                        # high exponent bits: a detectable blow-up, the
+                        # transfer-anomaly signature worth testing
+                        bit=int(rng.randint(23, 31))))
+                elif kind == "timeout":
+                    events.append(FaultEvent(
+                        r, kind,
+                        duration_s=float(0.01 * rng.random_sample())))
+                else:  # torn_ckpt
+                    events.append(FaultEvent(r, kind))
+        return cls(events=tuple(events), seed=seed, pods=max(pods, 1))
+
+    # -- queries the driver uses ---------------------------------------
+
+    @property
+    def is_idle(self) -> bool:
+        return not self.events
+
+    def events_at(self, round_i: int, *, kinds=None
+                  ) -> Tuple[FaultEvent, ...]:
+        ks = FAULT_KINDS if kinds is None else kinds
+        return tuple(e for e in self.events
+                     if e.round == round_i and e.kind in ks
+                     and e.kind != "torn_ckpt")
+
+    def saves_at(self, ordinal: int) -> Tuple[FaultEvent, ...]:
+        """``torn_ckpt`` events for one save ordinal."""
+        return tuple(e for e in self.events
+                     if e.kind == "torn_ckpt" and e.round == ordinal)
+
+    def next_event_round(self, start: int) -> Optional[int]:
+        """Earliest dispatch-fault round >= ``start`` (``torn_ckpt`` is
+        save-indexed and never bounds a dispatch chunk)."""
+        rounds = [e.round for e in self.events
+                  if e.kind != "torn_ckpt" and e.round >= start]
+        return min(rounds) if rounds else None
+
+    def clear_between(self, a: int, b: int) -> "FaultPlan":
+        """A copy without dispatch events in ``[a, b)`` — lets a driver
+        mark a window as clean so chunked dispatch stays full-size."""
+        return dataclasses.replace(self, events=tuple(
+            e for e in self.events
+            if e.kind == "torn_ckpt" or not a <= e.round < b))
+
+    def describe(self) -> dict:
+        return {"seed": self.seed, "pods": self.pods,
+                "events": [e.describe() for e in self.events]}
+
+
+# -- arming ------------------------------------------------------------
+
+_ARMED: Optional[tuple] = None   # (plan, recovery, ckpt, ckpt_every)
+
+
+def arm(plan: FaultPlan, *, recovery=None, ckpt=None,
+        ckpt_every_rounds: int = 4) -> None:
+    """Arm ``plan`` process-wide: the next ``PimGrid.fit`` routes
+    through the resilient driver and injects its events.  ``recovery``
+    (a ``RecoveryPolicy``) and ``ckpt`` (a ``CheckpointManager`` or
+    directory) ride along so a fit entered through the ordinary API
+    recovers instead of merely failing."""
+    global _ARMED
+    if not isinstance(plan, FaultPlan):
+        raise TypeError(f"arm() takes a FaultPlan, got {plan!r}")
+    _ARMED = (plan, recovery, ckpt, int(ckpt_every_rounds))
+
+
+def disarm() -> None:
+    global _ARMED
+    _ARMED = None
+
+
+def active() -> Optional[FaultPlan]:
+    """The armed plan, or None — the engine's only unarmed-path cost."""
+    return _ARMED[0] if _ARMED is not None else None
+
+
+def armed_context() -> Optional[tuple]:
+    """``(plan, recovery, ckpt, ckpt_every_rounds)`` or None."""
+    return _ARMED
+
+
+@contextlib.contextmanager
+def armed(plan: FaultPlan, *, recovery=None, ckpt=None,
+          ckpt_every_rounds: int = 4):
+    """``with faults.armed(plan): grid.fit(...)`` — scoped arming that
+    always restores the previous context (tests nest safely)."""
+    global _ARMED
+    prev = _ARMED
+    arm(plan, recovery=recovery, ckpt=ckpt,
+        ckpt_every_rounds=ckpt_every_rounds)
+    try:
+        yield plan
+    finally:
+        _ARMED = prev
+
+
+# -- host-side injectors (applied to post-dispatch values) -------------
+
+
+def poison_tree(tree):
+    """What a non-finite lane propagates to through an averaging merge:
+    every inexact leaf goes NaN."""
+    return jax.tree.map(
+        lambda x: jnp.full_like(x, jnp.nan)
+        if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact) else x,
+        tree)
+
+
+def bitflip_tree(tree, *, leaf: int, index: int, bit: int):
+    """Flip ``bit`` of one element of one float32-viewable leaf — the
+    post-psum image of a corrupted wire word on the slow hop.  Host-side
+    numpy; indices wrap so generated events always land somewhere."""
+    flat, treedef = jax.tree.flatten(tree)
+    float_ix = [i for i, x in enumerate(flat)
+                if jnp.issubdtype(jnp.asarray(x).dtype, jnp.floating)
+                and np.size(x)]
+    if not float_ix:
+        return tree
+    i = float_ix[leaf % len(float_ix)]
+    host = np.array(jax.device_get(flat[i]), copy=True)
+    words = host.view(np.uint32) if host.dtype == np.float32 \
+        else host.astype(np.float32).view(np.uint32)
+    j = index % words.size
+    words.reshape(-1)[j] ^= np.uint32(1) << np.uint32(bit % 32)
+    corrupted = words.view(np.float32).astype(host.dtype) \
+        if host.dtype != np.float32 else words.view(np.float32)
+    flat[i] = jnp.asarray(corrupted.reshape(host.shape),
+                          dtype=flat[i].dtype)
+    return treedef.unflatten(flat)
+
+
+def kill_lanes(mask: np.ndarray, event: FaultEvent, *, pods: int
+               ) -> np.ndarray:
+    """Apply a dead_lane / dead_pod event to a host survivor mask of
+    shape ``(n_vdpus,)``.  A pod is a contiguous block of
+    ``n_vdpus // pods`` lanes — the slice a slow-hop participant owns
+    on a mesh, or the plan's logical grouping at ``mesh=None``."""
+    mask = np.array(mask, copy=True)
+    n = mask.shape[0]
+    if event.kind == "dead_lane":
+        mask[event.lane % n] = 0.0
+    elif event.kind == "dead_pod":
+        pods = max(pods, 1)
+        per = max(n // pods, 1)
+        p = event.pod % pods
+        mask[p * per:(p + 1) * per] = 0.0
+    else:
+        raise ValueError(f"not a lane-kill event: {event.kind!r}")
+    return mask

@@ -1,0 +1,138 @@
+"""Recovery policy: backoff, validated rollback, plan degradation.
+
+DESIGN — the recovery ladder
+----------------------------
+A divergence (non-finite state, loss spike, corrupted wire) is handled
+in escalating stages, each recorded as a JSON-able event so the whole
+recovery history replays offline exactly like tuning traces do:
+
+1. **Backoff + rollback** — sleep ``backoff_base_s * factor^(n-1)``
+   (capped) and restore the last *validated* checkpoint (checksums
+   verified, corrupt steps quarantined — ``checkpoint.manager``).
+2. **Degradation ladder** — after ``degrade_after`` consecutive
+   divergences the plan steps down one rung:
+   compressed wire → exact; then halve the cadence via the tuning
+   controller's shrink rule (``repro.tuning.controller.shrink_k`` — the
+   same steps a delta-norm spike walks); then drop overlap.  A plan
+   with no rung left means the policy is exhausted and the failure
+   propagates.
+3. **Give up** — after ``max_restarts`` recoveries the original
+   exception is re-raised (the bare counter the Trainer used to have,
+   now the *last* resort instead of the only one).
+
+Timeouts (``DispatchTimeout``) are treated as transient: they back off
+and retry but never climb the ladder — a hung wire says nothing about
+the numerics of the plan.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from collections import deque
+from typing import List, Optional
+
+from repro.distributed import merge_plan as mp
+from repro.resilience.faults import DispatchTimeout  # noqa: F401
+
+
+@dataclasses.dataclass(frozen=True)
+class RecoveryPolicy:
+    """Immutable recovery configuration (hashable, trace-friendly)."""
+
+    max_restarts: int = 8
+    backoff_base_s: float = 0.05
+    backoff_factor: float = 2.0
+    backoff_max_s: float = 2.0
+    degrade_after: int = 2     # consecutive divergences per rung
+    min_cadence: int = 1
+    spike_factor: float = 0.0  # 0 = loss-spike detection disabled
+    spike_window: int = 8
+
+    def __post_init__(self):
+        if self.max_restarts < 0:
+            raise ValueError("max_restarts must be >= 0")
+        if self.backoff_factor < 1.0:
+            raise ValueError("backoff_factor must be >= 1.0")
+        if self.degrade_after < 1:
+            raise ValueError("degrade_after must be >= 1")
+
+    def backoff_s(self, restarts: int) -> float:
+        """Exponential backoff for the ``restarts``-th recovery
+        (1-based), capped at ``backoff_max_s``."""
+        if restarts <= 0:
+            return 0.0
+        return min(self.backoff_max_s,
+                   self.backoff_base_s *
+                   self.backoff_factor ** (restarts - 1))
+
+    def degrade(self, plan: "mp.MergePlan"
+                ) -> Optional["mp.MergePlan"]:
+        """One rung down the ladder, or ``None`` when exhausted.
+
+        compressed wire -> exact, then halve cadence (the controller's
+        shrink rule), then drop overlap.
+        """
+        from repro.tuning.controller import shrink_k
+
+        if plan.compression is not None:
+            return dataclasses.replace(plan, compression=None)
+        if plan.cadence > self.min_cadence:
+            return dataclasses.replace(
+                plan, cadence=shrink_k(plan.cadence, self.min_cadence))
+        if plan.overlap:
+            return dataclasses.replace(plan, overlap=False)
+        return None
+
+    def detector(self) -> "DivergenceDetector":
+        return DivergenceDetector(factor=self.spike_factor,
+                                  window=self.spike_window)
+
+
+class DivergenceDetector:
+    """Host-side loss monitor: non-finite is always divergence; with
+    ``factor > 0`` a loss above ``factor`` x the window median is too
+    (the blown-up-but-finite signature a high-exponent bitflip leaves).
+    """
+
+    def __init__(self, *, factor: float = 0.0, window: int = 8):
+        self.factor = float(factor)
+        self.window: deque = deque(maxlen=max(int(window), 1))
+
+    def observe(self, loss: float) -> bool:
+        """Feed one scalar loss; True = divergence (the sample is then
+        discarded so a post-rollback window is not poisoned)."""
+        loss = float(loss)
+        if not math.isfinite(loss):
+            return True
+        if self.factor > 0.0 and len(self.window) >= 2:
+            med = sorted(self.window)[len(self.window) // 2]
+            if loss > self.factor * max(med, 1e-12):
+                return True
+        self.window.append(loss)
+        return False
+
+    def reset(self) -> None:
+        self.window.clear()
+
+
+def replay_trace(trace: List[dict], *, start_plan: "mp.MergePlan"
+                 ) -> List[str]:
+    """Offline replay of a recovery trace: fold the recorded ``degrade``
+    events over the starting plan and return the plan description after
+    every recovery event.  The last entry must equal the
+    ``final_plan`` the live run reported — the fault-matrix tests pin
+    exactly that, which is what makes the trace *replayable* rather
+    than merely descriptive."""
+    plan = start_plan
+    states = []
+    for ev in trace:
+        if ev.get("action") == "degrade":
+            plan = mp.MergePlan(
+                cadence=int(ev["to_cadence"]),
+                overlap=bool(ev.get("to_overlap", plan.overlap)),
+                compression=None if ev.get("to_compression") == "none"
+                else plan.compression,
+                outer=plan.outer)
+        states.append(plan.describe())
+    return states

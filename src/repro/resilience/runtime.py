@@ -1,0 +1,360 @@
+"""The resilient fit driver — injection, detection, rollback, ladder.
+
+``PimGrid.fit`` routes here whenever a ``FaultPlan`` is armed
+(``faults.arm``).  The driver owns the host-side round loop the way
+``tuning.run_controlled_fit`` owns the controlled one: compiled bodies
+(``survivor.survivor_runners``) stay fault-free and cache-stable, and
+every fault/recovery decision happens between dispatches.
+
+DESIGN — chunking under an armed plan
+-------------------------------------
+Idle armed plans must stay within 2% of unarmed throughput
+(``benchmarks/bench_resilience.py`` pins this), so the driver cannot
+drop to one-dispatch-per-round: it asks the plan for the next scheduled
+event round (``FaultPlan.next_event_round``) and scans every clean
+round in between as one chunk.  With no events that is the ordinary
+chunked scan; with events, only the faulty round runs solo.
+
+DESIGN — the recovery loop
+--------------------------
+Each dispatched round is validated on the host (fused finiteness check
+of the merged state + the ``DivergenceDetector`` on the round's loss)
+*before* its metrics enter the history or a checkpoint is written — so
+every checkpoint is a validated one by construction, and rollback can
+trust whatever ``CheckpointManager.restore_latest`` (checksums +
+quarantine) still offers.  On divergence the driver backs off
+exponentially, rolls back, and after ``degrade_after`` consecutive
+failures steps the plan down the degradation ladder
+(``RecoveryPolicy.degrade``).  Fault events fire exactly once (a fired
+set), so a replayed window after rollback is clean and the loop always
+makes progress.  Dead-lane masks are monotone: rollback restores the
+state, never resurrects a lane.
+
+Every decision is appended to a JSON-able trace, stored in
+``merge_state["tuning_trace"]["recovery"]`` next to the tuning traces,
+and ``recovery.replay_trace`` folds it back into the plan sequence —
+the post-mortem replays offline.
+"""
+
+from __future__ import annotations
+
+import time
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.distributed import merge_plan as mp
+from repro.resilience import faults as flt
+from repro.resilience import survivor
+from repro.resilience.recovery import RecoveryPolicy
+
+
+@jax.jit
+def _all_finite(tree) -> jax.Array:
+    """One fused scalar: every inexact leaf of ``tree`` is finite."""
+    flags = [jnp.all(jnp.isfinite(x)) for x in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)]
+    if not flags:
+        return jnp.asarray(True)
+    return jnp.all(jnp.stack(flags))
+
+
+@jax.jit
+def _sq_norm(tree) -> jax.Array:
+    """Global squared l2 norm over the inexact leaves (one scalar sync
+    — the blown-up-but-finite corruption signature a high-exponent
+    wire bitflip leaves is a norm jump, not a NaN)."""
+    terms = [jnp.sum(x.astype(jnp.float32) ** 2)
+             for x in jax.tree.leaves(tree)
+             if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact)]
+    if not terms:
+        return jnp.asarray(0.0, jnp.float32)
+    return sum(terms)
+
+
+def _round_loss(metrics) -> Optional[float]:
+    """The scalar the divergence detector watches: the mean of the
+    ``loss`` entry when metrics is a dict with one, else the mean of
+    the first inexact leaf, else None."""
+    leaf = None
+    if isinstance(metrics, dict) and "loss" in metrics:
+        leaf = metrics["loss"]
+    else:
+        for x in jax.tree.leaves(metrics):
+            if jnp.issubdtype(jnp.asarray(x).dtype, jnp.inexact):
+                leaf = x
+                break
+    if leaf is None:
+        return None
+    return float(jax.device_get(jnp.mean(leaf)))
+
+
+def _normalise_plan(plan: "mp.MergePlan") -> "mp.MergePlan":
+    """The survivor runner family covers cadence x compression with the
+    plain average commit; overlap and stateful outers degrade with a
+    warning (the fault model subsumes overlap's latency hiding, and an
+    outer's momentum has no masked-merge semantics yet)."""
+    import dataclasses as _dc
+
+    if plan.adaptive or plan.auto:
+        raise ValueError(
+            "fault injection does not drive controller plans "
+            "(adaptive/auto) — arm a static MergePlan instead")
+    if plan.overlap:
+        mp.warn_fallback("resilience", "overlap_merge",
+                         "the resilient driver dispatches per round; "
+                         "running without overlap")
+        plan = _dc.replace(plan, overlap=False)
+    if type(plan.outer) is not mp.AverageCommit:
+        mp.warn_fallback("resilience", f"outer={plan.outer!r}",
+                         "survivor merges commit the plain average; "
+                         "running without the outer optimizer")
+        plan = _dc.replace(plan, outer=mp.AverageCommit())
+    return plan
+
+
+def drive_fit(grid, *, init_state: Any, local_fn, update_fn, data,
+              steps: int, plan: "mp.MergePlan",
+              fault_plan: Optional[flt.FaultPlan] = None,
+              recovery: Optional[RecoveryPolicy] = None,
+              ckpt: "CheckpointManager | str | None" = None,
+              ckpt_every_rounds: int = 4, scan_chunk: int = 8,
+              callback=None, merge_state: Optional[dict] = None):
+    """Run ``steps`` local steps under fault injection.
+
+    Returns ``(state, history, report)`` — state/history exactly as
+    ``PimGrid.fit`` would, ``report`` the JSON-able recovery record
+    (``restarts``, ``fired`` events, ``trace``, ``final_plan``,
+    ``survivors``).  With ``recovery=None`` faults propagate as the
+    exceptions they cause (useful to assert the failure itself)."""
+    plan = _normalise_plan(plan)
+    fp = fault_plan if fault_plan is not None else \
+        (flt.active() or flt.FaultPlan())
+    if isinstance(ckpt, str):
+        # sync writes: the torn-write fault keys on the save ordinal,
+        # and rollback must see the bytes the schedule says exist
+        ckpt = CheckpointManager(ckpt, keep=4, async_save=False)
+
+    state = init_state
+    if steps > 0 and mp.donating_backend():
+        state = mp._copy_tree(state)
+    mask_host = np.ones((grid.n_vdpus,), np.float32)
+    mask = survivor.place_mask(grid, mask_host)
+    ef = None
+    if merge_state is not None and plan.compression is not None:
+        ef = merge_state.get("error")
+        if ef is not None and steps > 0 and mp.donating_backend():
+            ef = mp._copy_tree(ef)
+    if ef is None:
+        # always state-shaped, even for exact wires: the carry (and so
+        # the checkpoint layout) never changes shape as the recovery
+        # ladder drops compression
+        ef = mp.init_merge_error(grid, state)
+
+    # rollback target of last resort when no checkpoint exists yet —
+    # only reachable through the recovery path, so only copied then
+    origin = ((mp._copy_tree(state), mp._copy_tree(ef))
+              if recovery is not None else None)
+
+    cur = plan
+    detector = recovery.detector() if recovery is not None else None
+    history: list = []
+    trace: list = []
+    fired: set = set()
+    pods = max(mp.hop_size(grid), fp.pods)
+    done = 0
+    round_i = 0
+    restarts = 0
+    consec_div = 0
+    rounds_since_ckpt = 0
+    prev_sq_norm: Optional[float] = None
+
+    def wrapped():
+        return {"model": state, "mask": mask, "ef": ef}
+
+    def emit(stacked_np, hold, k):
+        # stacked_np is already host-side numpy (the chunk validation
+        # synced it): slicing here is basic numpy indexing, not one
+        # lazy device op per step — this is what keeps the armed-idle
+        # dispatch within the unarmed budget
+        nonlocal done
+        for r in range(hold):
+            for j in range(k):
+                m = jax.tree.map(lambda x, r=r, j=j: x[r, j], stacked_np)
+                history.append(m)
+                if callback is not None:
+                    callback(done, state, m)
+                done += 1
+
+    def save_boundary():
+        nonlocal rounds_since_ckpt
+        rounds_since_ckpt += 1
+        if ckpt is None or rounds_since_ckpt < max(ckpt_every_rounds, 1):
+            return
+        rounds_since_ckpt = 0
+        # arm fp around the (synchronous) save so torn-write events
+        # fire even when the plan came in as an argument rather than
+        # through faults.arm — the manager keys on the armed plan
+        with flt.armed(fp):
+            ckpt.save(done, wrapped(),
+                      extra={"done": done, "round": round_i,
+                             "plan": cur.describe(),
+                             "restarts": restarts})
+
+    def rollback():
+        nonlocal state, mask, ef, done, prev_sq_norm
+        prev_sq_norm = None   # norm magnitude re-bases after restore
+        restored = None
+        if ckpt is not None:
+            restored = ckpt.restore_latest(wrapped())
+        if restored is not None:
+            step_r, tree_r, _extra = restored
+            state, ef = tree_r["model"], tree_r["ef"]
+            done = int(step_r)
+        else:
+            state = mp._copy_tree(origin[0])
+            ef = mp._copy_tree(origin[1])
+            done = 0
+        # the mask is monotone — dead hardware stays dead across a
+        # rollback, whatever the snapshot says
+        mask = survivor.place_mask(grid, mask_host)
+        del history[done:]
+        if detector is not None:
+            detector.reset()
+        return done
+
+    while done < steps:
+        k = min(cur.cadence, steps - done)
+        rs = survivor.survivor_runners(
+            grid, local_fn, update_fn, merge_every=k,
+            compression=cur.compression)
+        full_rounds = max((steps - done) // k, 1)
+        pending = [e.round for e in fp.events
+                   if e.kind != "torn_ckpt" and e not in fired
+                   and e.round >= round_i]
+        nxt = min(pending) if pending else None
+        if nxt is not None and nxt <= round_i:
+            hold = 1
+        elif nxt is None:
+            hold = min(scan_chunk, full_rounds)
+        else:
+            hold = min(scan_chunk, full_rounds, nxt - round_i)
+        events = [e for e in fp.events_at(round_i) if e not in fired] \
+            if hold == 1 else []
+        try:
+            for e in events:
+                if e.kind == "timeout":
+                    fired.add(e)
+                    time.sleep(min(e.duration_s, 0.05))
+                    raise flt.DispatchTimeout(
+                        f"dispatch hung at round {round_i} "
+                        f"(injected, {e.duration_s:.3f}s)")
+            for e in events:
+                if e.kind in ("dead_lane", "dead_pod"):
+                    fired.add(e)
+                    mask_host = flt.kill_lanes(mask_host, e, pods=pods)
+                    mask = survivor.place_mask(grid, mask_host)
+
+            (state, mask, ef), stacked = rs["runner"](
+                (state, mask, ef), data, length=hold)
+            round_i += hold
+
+            for e in events:
+                if e.kind == "nan_lane":
+                    fired.add(e)
+                    state = flt.poison_tree(state)
+                    stacked = flt.poison_tree(stacked)
+                elif e.kind == "wire_bitflip":
+                    fired.add(e)
+                    state = flt.bitflip_tree(
+                        state, leaf=e.leaf, index=e.index, bit=e.bit)
+
+            # one host sync covers validation AND the emit below (the
+            # stacked metrics come down as numpy in the same transfer)
+            ok, sq, stacked_np = jax.device_get(
+                (_all_finite(state), _sq_norm(state), stacked))
+            if not bool(ok):
+                raise FloatingPointError(
+                    f"non-finite state after round {round_i}")
+            sq = float(sq)
+            if detector is not None and detector.factor > 0.0 and \
+                    prev_sq_norm is not None and \
+                    sq > detector.factor ** 2 * max(prev_sq_norm, 1.0):
+                raise FloatingPointError(
+                    f"state norm blow-up ({prev_sq_norm:.3g} -> "
+                    f"{sq:.3g} sq) after round {round_i}")
+            loss = _round_loss(
+                jax.tree.map(lambda x: x[-1, -1], stacked_np))
+            if detector is not None and loss is not None and \
+                    detector.observe(loss):
+                raise FloatingPointError(
+                    f"divergent loss {loss} after round {round_i}")
+            prev_sq_norm = sq
+
+            emit(stacked_np, hold, k)
+            consec_div = 0
+            if not events:
+                # a dispatch with injected events never checkpoints —
+                # a sub-threshold corruption must not become the state
+                # rollback later trusts; the next clean dispatch saves
+                save_boundary()
+        except (FloatingPointError, flt.DispatchTimeout) as exc:
+            t_fail = time.perf_counter()
+            if recovery is None:
+                raise
+            restarts += 1
+            if restarts > recovery.max_restarts:
+                raise
+            transient = isinstance(exc, flt.DispatchTimeout)
+            backoff = recovery.backoff_s(restarts)
+            time.sleep(backoff)
+            to_step = rollback()
+            trace.append({
+                "action": "rollback", "round": round_i,
+                "restarts": restarts, "error": type(exc).__name__,
+                "detail": str(exc), "to_step": to_step,
+                "backoff_s": backoff, "transient": transient,
+                "latency_s": time.perf_counter() - t_fail,
+            })
+            if not transient:
+                consec_div += 1
+                if consec_div >= recovery.degrade_after:
+                    nxt_plan = recovery.degrade(cur)
+                    if nxt_plan is not None:
+                        trace.append({
+                            "action": "degrade", "round": round_i,
+                            "from": cur.describe(),
+                            "to": nxt_plan.describe(),
+                            "to_cadence": nxt_plan.cadence,
+                            "to_overlap": nxt_plan.overlap,
+                            "to_compression": "none"
+                            if nxt_plan.compression is None
+                            else repr(nxt_plan.compression),
+                        })
+                        cur = nxt_plan
+                        consec_div = 0
+
+    if ckpt is not None:
+        ckpt.wait()
+    report = {
+        "restarts": restarts,
+        "rounds": round_i,
+        "survivors": int(mask_host.sum()),
+        "n_vdpus": grid.n_vdpus,
+        "start_plan": plan.describe(),
+        "final_plan": cur.describe(),
+        "fault_plan": fp.describe(),
+        "fired": [e.describe() for e in sorted(fired)],
+        "trace": trace,
+    }
+    if merge_state is not None:
+        merge_state["resilience_report"] = report
+        ts = merge_state.setdefault("tuning_trace", {})
+        if isinstance(ts, dict):
+            ts["recovery"] = trace
+        if cur.compression is not None:
+            merge_state["error"] = ef
+    return state, history, report

@@ -30,6 +30,7 @@ Production posture for 1000+ nodes (DESIGN.md §6):
 
 from __future__ import annotations
 
+import atexit
 import dataclasses
 import queue
 import threading
@@ -96,6 +97,26 @@ class TrainerConfig:
     # the synchronous flush.  False keeps the in-line flush (the
     # parity oracle).
     async_metrics: bool = False
+    # Structured recovery (repro.resilience.recovery.RecoveryPolicy or
+    # None).  When set, the failure path gains the resilient runtime's
+    # behaviour on top of plain restore-and-replay:
+    #   * exponential backoff before each restore
+    #     (``recovery.backoff_s``), and ``recovery.max_restarts``
+    #     replaces ``max_restarts`` as the give-up budget;
+    #   * loss-SPIKE detection at flush boundaries
+    #     (``recovery.spike_factor`` x running-median window) — a
+    #     diverging-but-finite run rolls back instead of checkpointing
+    #     its way into NaN;
+    #   * a cadence-degradation ladder for round-granular programs
+    #     (``Trainer.for_program`` at cadence > 1): after
+    #     ``recovery.degrade_after`` consecutive divergences the merge
+    #     cadence halves (the PlanController's shrink rule) down to
+    #     ``recovery.min_cadence``, trading merge traffic for
+    #     stability.  Decisions land in ``run()``'s
+    #     ``"recovery_trace"`` and — when a merge_state holder rides
+    #     along — ``merge_state["tuning_trace"]["recovery"]``, the
+    #     same ledger the resilient fit driver writes.
+    recovery: object = None
 
 
 class _MetricsSink:
@@ -118,11 +139,17 @@ class _MetricsSink:
         self._q: queue.Queue = queue.Queue()
         self._exc: Optional[BaseException] = None
         self._skip = False
+        self._closed = False
         self._lock = threading.Lock()
         self._thread = threading.Thread(
             target=self._consume, name="trainer-metrics-sink",
             daemon=True)
         self._thread.start()
+        # an interrupted run (KeyboardInterrupt, give-up raise) may die
+        # with windows still queued; best-effort close at interpreter
+        # exit lets them flush/park instead of vanishing with the
+        # daemon thread
+        atexit.register(self.close)
 
     def _consume(self):
         while True:
@@ -141,6 +168,11 @@ class _MetricsSink:
                 self._q.task_done()
 
     def submit(self, window: list):
+        with self._lock:
+            if self._closed:
+                raise RuntimeError(
+                    "metrics sink is closed — submitted window would "
+                    "never flush")
         self._q.put(window)
 
     def poll(self):
@@ -169,8 +201,18 @@ class _MetricsSink:
             self._exc = None
 
     def close(self):
+        """Idempotent shutdown: drains the queue (every window still
+        flushes or parks its exception — a failure found on the way out
+        stays visible to a later ``drain``/``poll``), stops the
+        consumer, and unhooks the atexit registration.  Safe to call
+        from ``run``'s finally AND from atexit in either order."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True
         self._q.put(None)
         self._thread.join(timeout=30.0)
+        atexit.unregister(self.close)
 
 
 class Trainer:
@@ -243,6 +285,14 @@ class Trainer:
         self.straggler_steps = 0
         self.history: list = []
         self._sink: Optional[_MetricsSink] = None
+        # structured-recovery state (cfg.recovery): divergence detector
+        # feeds at flush boundaries, consecutive-divergence counter
+        # drives the cadence ladder, and every decision is appended to
+        # the trace (mirrors the resilient fit driver's ledger)
+        self._detector = (config.recovery.detector()
+                          if config.recovery is not None else None)
+        self._consec_div = 0
+        self.recovery_trace: list = []
         # round-granular dispatch (Trainer.for_program at cadence > 1):
         # step_fn then runs _steps_per_call local steps per call and
         # returns stacked (k, ...) metrics; _round_factory(k) builds
@@ -443,24 +493,74 @@ class Trainer:
                     extra[f"merge_{k}"] = self.merge_state[k]
         self.ckpt.save(step, self._wrap(self.state), extra=extra)
 
+    # -- structured recovery (cfg.recovery) ---------------------------------
+
+    def _record_recovery(self, event: dict) -> None:
+        """Append to the trainer's recovery ledger and mirror it into
+        the merge-state holder under the same key the resilient fit
+        driver uses, so one holder accumulates one recovery history."""
+        self.recovery_trace.append(event)
+        if self.merge_state is not None:
+            ts = self.merge_state.setdefault("tuning_trace", {})
+            if isinstance(ts, dict):
+                lst = ts.setdefault("recovery", self.recovery_trace)
+                if lst is not self.recovery_trace:
+                    lst.append(event)
+
+    def _degrade_cadence(self, rec, *, reason: str) -> None:
+        """One rung of the cadence ladder: halve the merge cadence via
+        the PlanController's shrink rule and swap in the matching
+        ``round_fn``.  Only round-granular programs
+        (``Trainer.for_program`` at cadence > 1) have a cadence to
+        trade; step-granular trainers no-op.  Old merge boundaries are
+        multiples of the old cadence, and halving preserves
+        divisibility, so the replayed step stays boundary-aligned."""
+        if self._round_factory is None or \
+                self._steps_per_call <= rec.min_cadence:
+            return
+        from repro.tuning.controller import shrink_k
+
+        old = self._steps_per_call
+        new = shrink_k(old, rec.min_cadence)
+        if new == old:
+            return
+        self.step_fn = self._round_factory(new)
+        self._steps_per_call = new
+        self._merge_every = new
+        self._consec_div = 0
+        self._record_recovery({
+            "action": "degrade", "from_cadence": old,
+            "to_cadence": new, "restarts": self._restarts,
+            "reason": reason,
+        })
+
     # -- main loop ----------------------------------------------------------
 
     def run(self, n_steps: int, callback: Optional[Callable] = None
             ) -> Dict[str, Any]:
-        if self.cfg.async_metrics:
-            self._sink = _MetricsSink(self._flush)
+        # the sink reference survives the run (closed, not nulled): an
+        # interrupted run's parked window failure stays reachable via
+        # trainer._sink.drain()/poll() for post-mortems; the next run
+        # replaces it with a fresh sink
+        self._sink = (_MetricsSink(self._flush)
+                      if self.cfg.async_metrics else None)
         try:
             return self._run(n_steps, callback)
         finally:
             if self._sink is not None:
                 self._sink.close()
-                self._sink = None
 
     def _run(self, n_steps: int, callback: Optional[Callable]
              ) -> Dict[str, Any]:
         step = self.start_step
         end = self.start_step + n_steps
         pending: list = []   # un-materialized (step, metrics, dt, strag)
+        # rollback of last resort (cfg.recovery only): a failure BEFORE
+        # the first checkpoint lands replays from the run's entry state
+        # instead of giving up.  jax arrays are immutable so holding the
+        # references is a snapshot (the trainer path never donates).
+        origin = (jax.tree.map(lambda x: x, self.state)
+                  if self.cfg.recovery is not None else None)
         while step < end:
             try:
                 # surface any failure the background sink found in a
@@ -473,7 +573,7 @@ class Trainer:
                 # partial final round compiles through _round_factory
                 stride = 1
                 fn = self.step_fn
-                if self._steps_per_call > 1:
+                if self._round_factory is not None:
                     stride = min(self._steps_per_call, end - step)
                     if stride != self._steps_per_call:
                         fn = self._round_factory(stride)
@@ -485,7 +585,7 @@ class Trainer:
                 dt = time.perf_counter() - t0
                 self._track_time(dt)
                 last = step + stride - 1
-                if stride == 1 and self._steps_per_call == 1:
+                if self._round_factory is None:
                     pending.append(
                         (step, metrics, dt, self.straggler_steps))
                 else:
@@ -537,13 +637,33 @@ class Trainer:
                             callback(last, flushed[-1])
                     if at_ckpt:
                         self._save(last)
+                    # a boundary's whole window verified clean: the run
+                    # is converging again, reset the divergence streak
+                    self._consec_div = 0
                 step = last + 1
             except (FloatingPointError, RuntimeError) as e:  # failure path
                 pending = []
                 self._restarts += 1
-                if self.ckpt is None or self._restarts > \
-                        self.cfg.max_restarts:
+                rec = self.cfg.recovery
+                budget = (rec.max_restarts if rec is not None
+                          else self.cfg.max_restarts)
+                if self.ckpt is None or self._restarts > budget:
                     raise
+                t_fail = time.perf_counter()
+                if rec is not None:
+                    backoff = rec.backoff_s(self._restarts)
+                    time.sleep(backoff)
+                    if self._detector is not None:
+                        # replay re-feeds the rolled-back losses; the
+                        # spike window must not compare them against
+                        # their own pre-rollback copies
+                        self._detector.reset()
+                    if isinstance(e, FloatingPointError):
+                        self._consec_div += 1
+                        if self._consec_div >= rec.degrade_after:
+                            self._degrade_cadence(rec, reason=str(e))
+                else:
+                    backoff = 0.0
                 if self._sink is not None:
                     # queued windows cover steps the restore is about
                     # to roll back — discard them unflushed
@@ -557,10 +677,23 @@ class Trainer:
                 # checkpoints must also *recover* through them
                 resumed = self._restore_latest(self.state, None)
                 if resumed is None:
-                    raise RuntimeError(
-                        f"step {step} failed ({e}) with no checkpoint"
-                    ) from e
-                ck_step, self.state, _ = resumed
+                    if origin is None:
+                        raise RuntimeError(
+                            f"step {step} failed ({e}) with no "
+                            f"checkpoint") from e
+                    # recovery armed, nothing on disk yet: replay the
+                    # whole run from its entry state
+                    ck_step, self.state = self.start_step - 1, origin
+                else:
+                    ck_step, self.state, _ = resumed
+                if rec is not None:
+                    self._record_recovery({
+                        "action": "rollback", "step": step,
+                        "restarts": self._restarts,
+                        "error": type(e).__name__, "detail": str(e),
+                        "to_step": ck_step, "backoff_s": backoff,
+                        "latency_s": time.perf_counter() - t_fail,
+                    })
                 step = ck_step + 1          # replay from checkpoint
         if self._sink is not None:
             self._sink.drain()
@@ -569,7 +702,8 @@ class Trainer:
             self.ckpt.wait()
         return {"final_step": end, "restarts": self._restarts,
                 "stragglers": self.straggler_steps,
-                "history": self.history}
+                "history": self.history,
+                "recovery_trace": self.recovery_trace}
 
     def _flush(self, pending) -> list:
         """Materialize buffered step metrics into ``history``.
@@ -618,6 +752,21 @@ class Trainer:
         # one transfer for the window's metrics (fused path benefit —
         # device_get on an already-host tree is a no-op pass-through)
         mats = jax.device_get([m for _, m, _, _ in pending])
+        if self._detector is not None and self._detector.factor > 0.0:
+            # loss-SPIKE detection (cfg.recovery.spike_factor): a
+            # diverging-but-finite window fails the flush BEFORE
+            # anything is appended or checkpointed — same all-or-
+            # nothing contract as the finite check above
+            for (step, _, _, _), metrics in zip(pending, mats):
+                loss = metrics.get("loss") \
+                    if hasattr(metrics, "get") else None
+                if loss is None:
+                    continue
+                val = float(np.asarray(loss).mean())
+                if self._detector.observe(val):
+                    raise FloatingPointError(
+                        f"loss spike {val:.6g} at step {step} "
+                        f"(> {self._detector.factor}x window median)")
         for (step, _, dt, stragglers), metrics in zip(pending, mats):
             entry = dict(metrics, step=step, wall_time=dt,
                          stragglers=stragglers)

@@ -116,6 +116,15 @@ def cadence_ladder(k0: int, k_max: int, growth: int) -> List[int]:
     return ks
 
 
+def shrink_k(k: int, k_min: int = 1) -> int:
+    """THE cadence shrink rule: halve toward ``k_min``.  Shared by
+    ``PlanController.observe`` (delta-norm spike) and the recovery
+    degradation ladder (``repro.resilience.RecoveryPolicy.degrade``) so
+    divergence always walks the same cadence steps, whichever layer
+    reacts first."""
+    return max(max(1, int(k_min)), int(k) // 2)
+
+
 class PlanController:
     """Mutable per-fit tuning state: the cadence rule folded in from
     ``merge_plan._CadenceController`` plus measured-vs-prior wire-format
@@ -171,7 +180,7 @@ class PlanController:
         re-bases before any growth logic runs."""
         if self.shrink and self._prev is not None and \
                 delta_norm > self.spike_ratio * max(self._prev, 1e-12):
-            self.k = max(self.k_min, self.k // 2)
+            self.k = shrink_k(self.k, self.k_min)
             self._stable = 0
             self._prev = None     # k changed -> delta magnitude re-bases
             self.cadence_trace.append(self.k)

@@ -386,3 +386,55 @@ class TestMeshAxisVersioning:
         v6 = dict(pre, workload="linreg", batch_size="full", plan="avg",
                   mesh="none")
         assert bench_diff._cell_key(pre) == bench_diff._cell_key(v6)
+
+
+class TestMainErrorPaths:
+    """The CLI must state a missing or unparseable artifact in ONE
+    clear line (exit 1) — never a traceback the CI log buries."""
+
+    def _write(self, tmp_path, name, text):
+        p = tmp_path / name
+        p.write_text(text)
+        return str(p)
+
+    def test_missing_baseline_is_one_clear_line(self, tmp_path, capsys):
+        import json
+        fresh = self._write(tmp_path, "fresh.json",
+                            json.dumps(_artifact()))
+        rc = bench_diff.main([fresh, str(tmp_path / "nope.json")])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "bench_diff: FAIL cannot read committed artifact" in out
+        assert "Traceback" not in out
+
+    def test_missing_fresh_is_one_clear_line(self, tmp_path, capsys):
+        import json
+        committed = self._write(tmp_path, "committed.json",
+                                json.dumps(_artifact()))
+        rc = bench_diff.main([str(tmp_path / "gone.json"), committed])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "bench_diff: FAIL cannot read fresh artifact" in out
+
+    def test_unparseable_baseline_is_one_clear_line(self, tmp_path,
+                                                    capsys):
+        import json
+        fresh = self._write(tmp_path, "fresh.json",
+                            json.dumps(_artifact()))
+        committed = self._write(tmp_path, "committed.json",
+                                "{not json at all")
+        rc = bench_diff.main([fresh, committed])
+        out = capsys.readouterr().out
+        assert rc == 1
+        assert "bench_diff: FAIL committed artifact" in out
+        assert "not valid JSON" in out
+        assert "Traceback" not in out
+
+    def test_valid_pair_still_passes(self, tmp_path, capsys):
+        import json
+        fresh = self._write(tmp_path, "fresh.json",
+                            json.dumps(_artifact()))
+        committed = self._write(tmp_path, "committed.json",
+                                json.dumps(_artifact()))
+        assert bench_diff.main([fresh, committed]) == 0
+        assert "bench_diff: OK" in capsys.readouterr().out

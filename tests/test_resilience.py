@@ -1,0 +1,643 @@
+"""The fault-tolerant training runtime (``repro.resilience``):
+deterministic FaultPlan schedules and injectors, survivor-weighted
+merges, the recovery ladder (backoff -> rollback -> degradation),
+crash-consistent checkpoints (checksums, quarantine, torn writes), the
+armed-but-idle parity contract, and the full fault-matrix — every fault
+class against every wire format, with replayable recovery traces."""
+
+import os
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import CheckpointCorruptError, CheckpointManager
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import LinReg
+from repro.core.mlalgos.linreg import closed_form, make_linreg_step
+from repro.distributed.compression import CompressionConfig
+from repro.distributed.merge_plan import MergeFallbackWarning, MergePlan
+from repro.resilience import (DispatchTimeout, FaultEvent, FaultPlan,
+                              RecoveryPolicy, drive_fit, faults,
+                              replay_trace)
+from repro.resilience.recovery import DivergenceDetector
+from repro.runtime import Trainer, TrainerConfig
+
+KEY = jax.random.PRNGKey(0)
+MULTI = len(jax.devices()) >= 8
+multidevice = pytest.mark.skipif(
+    not MULTI,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+WIRES = {
+    "exact": None,
+    "int8ef": CompressionConfig(bits=8, error_feedback=True),
+    "topk": CompressionConfig(bits=8, error_feedback=True,
+                              top_k_frac=0.25),
+}
+
+
+def _problem(n_vdpus=8, rows=256, feats=6, lr=0.1):
+    X, y, _ = datasets.regression(KEY, rows, feats)
+    grid = make_cpu_grid(n_vdpus)
+    data, n, local_fn, update_fn, w0 = make_linreg_step(
+        grid, X, y, lr=lr)
+    return grid, X, y, data, local_fn, update_fn, w0
+
+
+def _err(w, X, y):
+    return float(jnp.linalg.norm(jnp.asarray(w) - closed_form(X, y)))
+
+
+class TestFaultPlan:
+    def test_generate_is_deterministic(self):
+        kw = dict(rounds=40, n_lanes=8, pods=2,
+                  rates={k: 0.1 for k in faults.FAULT_KINDS})
+        a = FaultPlan.generate(seed=3, **kw)
+        b = FaultPlan.generate(seed=3, **kw)
+        assert a == b and hash(a) == hash(b)
+        assert a != FaultPlan.generate(seed=4, **kw)
+
+    def test_generated_events_in_bounds(self):
+        p = FaultPlan.generate(
+            seed=11, rounds=200, n_lanes=8, pods=2,
+            rates={k: 0.2 for k in faults.FAULT_KINDS})
+        assert p.events            # 200 rounds at 20% each: non-empty
+        for e in p.events:
+            assert e.kind in faults.FAULT_KINDS
+            assert 0 <= e.round < 200
+            if e.kind in ("nan_lane", "dead_lane"):
+                assert 0 <= e.lane < 8
+            if e.kind == "dead_pod":
+                assert 0 <= e.pod < 2
+            if e.kind == "wire_bitflip":
+                assert 23 <= e.bit <= 30
+            if e.kind == "timeout":
+                assert 0.0 <= e.duration_s <= 0.01
+
+    def test_event_validation(self):
+        with pytest.raises(ValueError, match="kind"):
+            FaultEvent(0, "meteor_strike")
+        with pytest.raises(ValueError, match="round"):
+            FaultEvent(-1, "nan_lane")
+
+    def test_queries(self):
+        p = FaultPlan(events=(
+            FaultEvent(2, "nan_lane", lane=1),
+            FaultEvent(5, "timeout"),
+            FaultEvent(1, "torn_ckpt"),
+        ))
+        assert [e.kind for e in p.events_at(2)] == ["nan_lane"]
+        assert p.events_at(1) == ()          # torn is save-indexed
+        assert [e.kind for e in p.saves_at(1)] == ["torn_ckpt"]
+        assert p.next_event_round(0) == 2
+        assert p.next_event_round(3) == 5
+        assert p.next_event_round(6) is None
+        cleared = p.clear_between(0, 6)
+        assert cleared.next_event_round(0) is None
+        assert cleared.saves_at(1)           # torn events survive
+
+    def test_armed_contextmanager_restores(self):
+        outer_p = FaultPlan(seed=1)
+        inner_p = FaultPlan(seed=2)
+        assert faults.active() is None
+        with faults.armed(outer_p):
+            assert faults.active() is outer_p
+            with faults.armed(inner_p):
+                assert faults.active() is inner_p
+            assert faults.active() is outer_p
+        assert faults.active() is None
+        with pytest.raises(TypeError):
+            faults.arm("not a plan")
+
+
+class TestInjectors:
+    def test_poison_tree_nans_inexact_leaves_only(self):
+        tree = {"w": jnp.ones(3), "n": jnp.arange(4)}
+        out = faults.poison_tree(tree)
+        assert bool(jnp.isnan(out["w"]).all())
+        assert bool((out["n"] == tree["n"]).all())   # ints untouched
+
+    def test_bitflip_flips_exactly_one_element_and_roundtrips(self):
+        tree = {"a": jnp.ones((4, 4)), "b": jnp.zeros(7)}
+        once = faults.bitflip_tree(tree, leaf=0, index=5, bit=30)
+        diff = np.asarray(once["a"]) != np.asarray(tree["a"])
+        assert diff.sum() == 1
+        assert bool((np.asarray(once["b"]) == 0).all())
+        twice = faults.bitflip_tree(once, leaf=0, index=5, bit=30)
+        np.testing.assert_array_equal(np.asarray(twice["a"]),
+                                      np.asarray(tree["a"]))
+
+    def test_kill_lanes(self):
+        mask = np.ones(8, np.float32)
+        m1 = faults.kill_lanes(mask, FaultEvent(0, "dead_lane", lane=3),
+                               pods=2)
+        assert m1[3] == 0.0 and m1.sum() == 7.0
+        m2 = faults.kill_lanes(m1, FaultEvent(0, "dead_pod", pod=1),
+                               pods=2)
+        assert (m2[4:] == 0.0).all() and m2.sum() == 3.0
+        assert mask.sum() == 8.0             # input not mutated
+        with pytest.raises(ValueError, match="lane-kill"):
+            faults.kill_lanes(mask, FaultEvent(0, "timeout"), pods=2)
+
+
+class TestArmedIdleParity:
+    """The zero-overhead contract: unarmed fits never see the resilient
+    driver, and an armed-but-idle (empty) plan produces the same
+    training — bit-exact on the exact wire."""
+
+    def test_unarmed_fit_untouched(self):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        ms = {}
+        grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                 steps=8, merge_every=4, merge_state=ms)
+        assert "resilience_report" not in ms
+
+    def test_armed_idle_exact_wire_bit_exact(self):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        w_plain, h_plain = grid.fit(
+            init_state=w0, local_fn=lf, update_fn=uf, data=data,
+            steps=24, merge_every=4)
+        with faults.armed(FaultPlan()):
+            w_armed, h_armed = grid.fit(
+                init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                steps=24, merge_every=4)
+        np.testing.assert_array_equal(np.asarray(w_plain),
+                                      np.asarray(w_armed))
+        assert len(h_armed) == len(h_plain) == 24
+        for a, b in zip(h_plain, h_armed):
+            assert float(a["loss"]) == float(b["loss"])
+
+    def test_armed_idle_compressed_wire_close(self):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        cfg = WIRES["int8ef"]
+        w_plain, _ = grid.fit(
+            init_state=w0, local_fn=lf, update_fn=uf, data=data,
+            steps=24, merge_every=4, merge_compression=cfg)
+        with faults.armed(FaultPlan()):
+            w_armed, _ = grid.fit(
+                init_state=w0, local_fn=lf, update_fn=uf, data=data,
+                steps=24, merge_every=4, merge_compression=cfg)
+        np.testing.assert_allclose(np.asarray(w_plain),
+                                   np.asarray(w_armed), atol=2e-2)
+
+    def test_armed_controller_plan_warns_and_skips_injection(self):
+        grid, X, y, data, lf, uf, w0 = _problem(n_vdpus=4)
+        ms = {}
+        with faults.armed(FaultPlan(events=(
+                FaultEvent(0, "nan_lane", lane=0),))):
+            with pytest.warns(MergeFallbackWarning,
+                              match="controller-driven"):
+                w, _ = grid.fit(
+                    init_state=w0, local_fn=lf, update_fn=uf,
+                    data=data, steps=8, merge_plan="auto",
+                    merge_state=ms)
+        assert bool(jnp.isfinite(jnp.asarray(w)).all())
+
+
+class TestSurvivorMerges:
+    def test_dead_lane_still_converges(self, tmp_path):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        fp = FaultPlan(events=(FaultEvent(1, "dead_lane", lane=2),))
+        w, hist, rep = drive_fit(
+            grid, init_state=w0, local_fn=lf, update_fn=uf, data=data,
+            steps=48, plan=MergePlan(cadence=4), fault_plan=fp,
+            recovery=RecoveryPolicy(backoff_base_s=0.0),
+            ckpt=str(tmp_path))
+        assert rep["survivors"] == 7
+        assert len(hist) == 48
+        # the survivors converge to the least squares of *their* rows —
+        # near, not equal to, the full-data closed form
+        assert _err(w, X, y) < 5e-2
+
+    def test_dead_lanes_are_monotone_across_rollback(self, tmp_path):
+        """A lane killed before a divergence stays dead after the
+        rollback, whatever the restored snapshot says."""
+        grid, X, y, data, lf, uf, w0 = _problem()
+        fp = FaultPlan(events=(
+            FaultEvent(1, "dead_lane", lane=0),
+            FaultEvent(3, "nan_lane", lane=5),
+        ))
+        w, _, rep = drive_fit(
+            grid, init_state=w0, local_fn=lf, update_fn=uf, data=data,
+            steps=32, plan=MergePlan(cadence=4), fault_plan=fp,
+            recovery=RecoveryPolicy(backoff_base_s=0.0),
+            ckpt=str(tmp_path))
+        assert rep["restarts"] >= 1
+        assert rep["survivors"] == 7
+        assert bool(jnp.isfinite(jnp.asarray(w)).all())
+
+    def test_metrics_are_survivor_weighted(self, tmp_path):
+        """History after a lane death stays finite: the masked mean
+        excludes the dead lane instead of averaging in garbage."""
+        grid, X, y, data, lf, uf, w0 = _problem()
+        fp = FaultPlan(events=(FaultEvent(0, "dead_pod", pod=1),),
+                       pods=4)
+        w, hist, rep = drive_fit(
+            grid, init_state=w0, local_fn=lf, update_fn=uf, data=data,
+            steps=24, plan=MergePlan(cadence=4), fault_plan=fp,
+            recovery=RecoveryPolicy(backoff_base_s=0.0),
+            ckpt=str(tmp_path))
+        assert rep["survivors"] == 6     # 8 lanes, pod = 8//4 = 2 wide
+        assert all(np.isfinite(float(m["loss"])) for m in hist)
+
+    @multidevice
+    def test_mesh_survivor_matrix(self, tmp_path):
+        """The shard_map path: every wire survives a mixed fault plan
+        on a real (pod, data) mesh."""
+        from repro.core.pim import make_mesh_grid
+        X, y, _ = datasets.regression(KEY, 256, 8)
+        grid = make_mesh_grid(16, pods=2)
+        data, n, lf, uf, w0 = make_linreg_step(grid, X, y, lr=0.1)
+        ws = closed_form(X, y)
+        fp = FaultPlan(events=(
+            FaultEvent(2, "nan_lane", lane=3),
+            FaultEvent(4, "dead_pod", pod=1),
+            FaultEvent(6, "wire_bitflip", leaf=0, index=1, bit=29),
+        ))
+        pol = RecoveryPolicy(max_restarts=10, degrade_after=2,
+                             spike_factor=50.0, backoff_base_s=0.0)
+        for name, cfg in WIRES.items():
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                w, hist, rep = drive_fit(
+                    grid, init_state=w0, local_fn=lf, update_fn=uf,
+                    data=data, steps=48, plan=MergePlan(
+                        cadence=4, compression=cfg),
+                    fault_plan=fp, recovery=pol,
+                    ckpt=str(tmp_path / name), ckpt_every_rounds=2)
+            assert bool(jnp.isfinite(jnp.asarray(w)).all()), name
+            assert len(hist) == 48, name
+            assert rep["survivors"] == 8, name
+            assert float(jnp.linalg.norm(jnp.asarray(w) - ws)) < 1.0, \
+                name
+
+
+class TestFaultMatrix:
+    """Every fault class x every wire format: training finishes all
+    steps, the final state is finite, accuracy stays within a bounded
+    factor of the same wire's unfaulted baseline, and the recovery
+    trace replays to the reported final plan."""
+
+    _baseline: dict = {}
+
+    @classmethod
+    def _baseline_err(cls, wire, tmp_path):
+        if wire not in cls._baseline:
+            grid, X, y, data, lf, uf, w0 = _problem()
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                w, _, _ = drive_fit(
+                    grid, init_state=w0, local_fn=lf, update_fn=uf,
+                    data=data, steps=64,
+                    plan=MergePlan(cadence=4,
+                                   compression=WIRES[wire]))
+            cls._baseline[wire] = _err(w, X, y)
+        return cls._baseline[wire]
+
+    def _plan_for(self, kind):
+        if kind == "nan_lane":
+            return FaultPlan(events=(
+                FaultEvent(3, "nan_lane", lane=2),))
+        if kind == "wire_bitflip":
+            return FaultPlan(events=(
+                FaultEvent(3, "wire_bitflip", leaf=0, index=2,
+                           bit=30),))
+        if kind == "dead_lane":
+            return FaultPlan(events=(
+                FaultEvent(2, "dead_lane", lane=5),))
+        if kind == "dead_pod":
+            return FaultPlan(events=(
+                FaultEvent(2, "dead_pod", pod=1),), pods=4)
+        if kind == "timeout":
+            return FaultPlan(events=(
+                FaultEvent(3, "timeout", duration_s=0.002),))
+        # torn_ckpt alone never fails a run — tear EVERY save and pair
+        # with a later divergence, so the rollback must detect the torn
+        # bytes, quarantine them and fall back to the origin state
+        return FaultPlan(events=tuple(
+            FaultEvent(i, "torn_ckpt") for i in range(64)
+        ) + (FaultEvent(9, "nan_lane", lane=1),))
+
+    @pytest.mark.parametrize("wire", sorted(WIRES))
+    @pytest.mark.parametrize(
+        "kind", ["nan_lane", "wire_bitflip", "dead_lane", "dead_pod",
+                 "timeout", "torn_ckpt"])
+    def test_matrix(self, wire, kind, tmp_path):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        plan = MergePlan(cadence=4, compression=WIRES[wire])
+        fp = self._plan_for(kind)
+        pol = RecoveryPolicy(max_restarts=10, degrade_after=2,
+                             spike_factor=50.0, backoff_base_s=0.0)
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore")
+            w, hist, rep = drive_fit(
+                grid, init_state=w0, local_fn=lf, update_fn=uf,
+                data=data, steps=64, plan=plan, fault_plan=fp,
+                recovery=pol, ckpt=str(tmp_path),
+                ckpt_every_rounds=2)
+        # finite final state, full history
+        assert bool(jnp.isfinite(jnp.asarray(w)).all())
+        assert len(hist) == 64
+        assert all(np.isfinite(float(m["loss"])) for m in hist)
+        # oracle-bounded accuracy: within a constant factor of the same
+        # wire's own unfaulted error (lossy wires have intrinsic error
+        # a fault must not be graded against)
+        base = self._baseline_err(wire, tmp_path)
+        assert _err(w, X, y) <= 2.0 * base + 0.25, \
+            f"{wire}/{kind}: err {_err(w, X, y)} vs baseline {base}"
+        # replayable recovery trace: folding the recorded degrade
+        # events over the start plan lands on the reported final plan
+        states = replay_trace(rep["trace"], start_plan=plan)
+        final = states[-1] if states else plan.describe()
+        assert final == rep["final_plan"]
+        rollbacks = [e for e in rep["trace"]
+                     if e["action"] == "rollback"]
+        assert len(rollbacks) == rep["restarts"]
+        if kind == "timeout":
+            assert rep["restarts"] >= 1
+            assert all(e["transient"] for e in rollbacks)
+            # transient faults never climb the ladder
+            assert rep["final_plan"] == plan.describe()
+        if kind == "nan_lane":
+            assert rep["restarts"] >= 1
+        # wire_bitflip gets no restart floor: a flip that SHRINKS a
+        # weight (bit already set) is sub-threshold corruption the
+        # driver absorbs — the accuracy bound above is its contract
+        if kind == "torn_ckpt":
+            assert rep["restarts"] >= 1
+            corrupt = [d for d in os.listdir(tmp_path)
+                       if ".corrupt" in d]
+            assert corrupt, "torn checkpoint was never quarantined"
+
+    def test_recovery_none_propagates_the_failure(self):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        fp = FaultPlan(events=(FaultEvent(1, "nan_lane", lane=0),))
+        with pytest.raises(FloatingPointError, match="non-finite"):
+            drive_fit(grid, init_state=w0, local_fn=lf, update_fn=uf,
+                      data=data, steps=16, plan=MergePlan(cadence=4),
+                      fault_plan=fp)
+
+    def test_timeout_raises_dispatch_timeout_without_recovery(self):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        fp = FaultPlan(events=(
+            FaultEvent(1, "timeout", duration_s=0.001),))
+        with pytest.raises(DispatchTimeout):
+            drive_fit(grid, init_state=w0, local_fn=lf, update_fn=uf,
+                      data=data, steps=16, plan=MergePlan(cadence=4),
+                      fault_plan=fp)
+
+    def test_exhausted_restart_budget_reraises(self, tmp_path):
+        grid, X, y, data, lf, uf, w0 = _problem()
+        # one nan per round: even max degradation cannot outrun it
+        fp = FaultPlan(events=tuple(
+            FaultEvent(r, "nan_lane", lane=0) for r in range(64)))
+        with pytest.raises(FloatingPointError):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                drive_fit(grid, init_state=w0, local_fn=lf,
+                          update_fn=uf, data=data, steps=64,
+                          plan=MergePlan(cadence=4), fault_plan=fp,
+                          recovery=RecoveryPolicy(
+                              max_restarts=3, backoff_base_s=0.0),
+                          ckpt=str(tmp_path))
+
+
+class TestRecoveryPolicy:
+    def test_backoff_is_exponential_and_capped(self):
+        pol = RecoveryPolicy(backoff_base_s=0.1, backoff_factor=2.0,
+                             backoff_max_s=0.5)
+        assert pol.backoff_s(0) == 0.0
+        assert pol.backoff_s(1) == pytest.approx(0.1)
+        assert pol.backoff_s(2) == pytest.approx(0.2)
+        assert pol.backoff_s(10) == 0.5
+
+    def test_degradation_ladder_order(self):
+        pol = RecoveryPolicy(min_cadence=1)
+        plan = MergePlan(cadence=4, overlap=True,
+                         compression=WIRES["int8ef"])
+        p1 = pol.degrade(plan)
+        assert p1.compression is None and p1.cadence == 4
+        p2 = pol.degrade(p1)
+        assert p2.cadence == 2
+        p3 = pol.degrade(p2)
+        assert p3.cadence == 1
+        p4 = pol.degrade(p3)
+        assert p4.overlap is False
+        assert pol.degrade(p4) is None     # exhausted
+
+    def test_ladder_uses_the_controller_shrink_rule(self):
+        from repro.tuning.controller import shrink_k
+        pol = RecoveryPolicy(min_cadence=2)
+        plan = MergePlan(cadence=8)
+        assert pol.degrade(plan).cadence == shrink_k(8, 2)
+
+    def test_detector_spike_and_reset(self):
+        det = DivergenceDetector(factor=10.0, window=4)
+        for x in (1.0, 1.1, 0.9):
+            assert not det.observe(x)
+        assert det.observe(50.0)           # > 10x median
+        assert not det.observe(1.0)        # spike was not absorbed
+        assert det.observe(float("nan"))
+        det.reset()
+        assert not det.observe(1e9)        # fresh window: no median yet
+
+    def test_validation(self):
+        with pytest.raises(ValueError):
+            RecoveryPolicy(max_restarts=-1)
+        with pytest.raises(ValueError):
+            RecoveryPolicy(backoff_factor=0.5)
+        with pytest.raises(ValueError):
+            RecoveryPolicy(degrade_after=0)
+
+
+class TestCheckpointHardening:
+    def _save_one(self, tmp_path, step=0, async_save=False):
+        m = CheckpointManager(str(tmp_path), async_save=async_save)
+        state = {"w": jnp.arange(6.0), "n": jnp.asarray(3)}
+        m.save(step, state, extra={"tag": step})
+        m.wait()
+        return m, state
+
+    def test_atomic_publish_leaves_no_tmp(self, tmp_path):
+        m, _ = self._save_one(tmp_path)
+        assert not [d for d in os.listdir(tmp_path)
+                    if d.endswith(".tmp")]
+
+    def test_checksum_catches_corruption(self, tmp_path):
+        m, state = self._save_one(tmp_path)
+        assert m.validate(0)
+        arrays = os.path.join(m._step_path(0), "arrays.npz")
+        with open(arrays, "r+b") as f:
+            f.seek(os.path.getsize(arrays) // 2)
+            f.write(b"\xde\xad\xbe\xef")
+        assert not m.validate(0)
+        with pytest.raises(CheckpointCorruptError):
+            m.restore(0, state)
+
+    def test_structure_mismatch_stays_value_error(self, tmp_path):
+        m, state = self._save_one(tmp_path)
+        with pytest.raises(ValueError, match="structure"):
+            m.restore(0, {"different": jnp.zeros(2)})
+
+    def test_restore_latest_quarantines_and_falls_back(self, tmp_path):
+        m, state = self._save_one(tmp_path, step=0)
+        m.save(1, state, extra={"tag": 1})
+        m.wait()
+        arrays = os.path.join(m._step_path(1), "arrays.npz")
+        with open(arrays, "r+b") as f:
+            f.truncate(os.path.getsize(arrays) // 2)   # torn write
+        with pytest.warns(RuntimeWarning, match="quarantined"):
+            step, restored, extra = m.restore_latest(state)
+        assert step == 0 and extra["tag"] == 0
+        np.testing.assert_array_equal(np.asarray(restored["w"]),
+                                      np.asarray(state["w"]))
+        assert m.steps() == [0]            # corrupt step out of sight
+        assert [d for d in os.listdir(tmp_path) if ".corrupt" in d]
+
+    def test_legacy_checkpoint_without_checksums_validates(
+            self, tmp_path):
+        import json
+        m, state = self._save_one(tmp_path)
+        mpath = os.path.join(m._step_path(0), "manifest.json")
+        with open(mpath) as f:
+            meta = json.load(f)
+        del meta["checksums"]
+        with open(mpath, "w") as f:
+            json.dump(meta, f)
+        assert m.validate(0)               # readability-only fallback
+        _, extra = m.restore(0, state)
+        assert extra["tag"] == 0
+
+    def test_background_write_failure_surfaces_at_wait(
+            self, tmp_path, monkeypatch):
+        """Satellite: a failed async write re-raises at the first
+        wait()/save() boundary and never advances latest_step()."""
+        m, state = self._save_one(tmp_path, step=0, async_save=True)
+        assert m.latest_step() == 0
+
+        def boom(*a, **k):
+            raise OSError("disk full")
+
+        monkeypatch.setattr(np, "savez", boom)
+        m.save(1, state)                   # returns; failure is parked
+        with pytest.raises(OSError, match="disk full"):
+            m.wait()
+        assert m.latest_step() == 0        # never published
+        monkeypatch.undo()
+        monkeypatch.setattr(np, "savez", boom)
+        m.save(2, state)
+        with pytest.raises(OSError, match="disk full"):
+            m.save(3, state)               # surfaces at save() too
+        assert m.latest_step() == 0
+
+    def test_torn_write_injection_keys_on_save_ordinal(self, tmp_path):
+        fp = FaultPlan(events=(FaultEvent(1, "torn_ckpt"),))
+        with faults.armed(fp):
+            m = CheckpointManager(str(tmp_path), async_save=False)
+            state = {"w": jnp.arange(8.0)}
+            m.save(0, state)               # ordinal 0: intact
+            m.save(1, state)               # ordinal 1: torn
+        assert m.validate(0)
+        assert not m.validate(1)
+
+
+class TestTrainerRecovery:
+    """cfg.recovery on the fault-tolerant Trainer: backoff + rollback,
+    loss-spike detection at flush boundaries, and the cadence
+    degradation ladder for round-granular programs."""
+
+    def _program_trainer(self, tmp_path, recovery, merge_every=4):
+        X, y, _ = datasets.regression(KEY, 256, 6)
+        grid = make_cpu_grid(4)
+        program = LinReg(lr=0.05).bind(grid, X, y)
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=4,
+                            log_every=4, merge_every=merge_every,
+                            recovery=recovery)
+        return program, Trainer.for_program(program, cfg)
+
+    def test_clean_run_has_empty_trace_and_fit_parity(self, tmp_path):
+        pol = RecoveryPolicy(backoff_base_s=0.0, spike_factor=100.0)
+        program, tr = self._program_trainer(tmp_path, pol)
+        out = tr.run(16)
+        assert out["recovery_trace"] == [] and out["restarts"] == 0
+        res = program.fit(steps=16, merge_every=4)
+        np.testing.assert_allclose(np.asarray(tr.state),
+                                   np.asarray(res.state), rtol=1e-6)
+
+    def test_spike_triggers_backoff_and_rollback(self, tmp_path):
+        losses = iter([1.0, 1.0, 1.0, 1.0, 1e8] + [1.0] * 100)
+
+        def step_fn(state, batch):
+            return state + 1.0, {"loss": jnp.asarray(next(losses))}
+
+        pol = RecoveryPolicy(max_restarts=4, backoff_base_s=0.0,
+                             spike_factor=10.0)
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                            log_every=2, recovery=pol)
+        tr = Trainer(step_fn, jnp.zeros(2), lambda s: None, cfg)
+        out = tr.run(12)
+        assert out["restarts"] == 1
+        ev = out["recovery_trace"][0]
+        assert ev["action"] == "rollback"
+        assert "loss spike" in ev["detail"]
+        assert ev["to_step"] < ev["step"]
+        assert [e["step"] for e in out["history"]] == list(range(12))
+
+    def test_degradation_halves_program_cadence(self, tmp_path):
+        pol = RecoveryPolicy(max_restarts=6, backoff_base_s=0.0,
+                             degrade_after=2, min_cadence=1)
+        program, tr = self._program_trainer(tmp_path, pol)
+        orig, n_fail = tr.step_fn, {"left": 2}
+
+        def sabotaged(state, batch):
+            out = orig(state, batch)
+            if n_fail["left"] > 0:
+                n_fail["left"] -= 1
+                raise FloatingPointError("synthetic divergence")
+            return out
+
+        tr.step_fn = sabotaged
+        out = tr.run(16)
+        actions = [e["action"] for e in out["recovery_trace"]]
+        assert actions.count("rollback") == 2
+        assert "degrade" in actions
+        deg = next(e for e in out["recovery_trace"]
+                   if e["action"] == "degrade")
+        assert (deg["from_cadence"], deg["to_cadence"]) == (4, 2)
+        assert tr._steps_per_call == 2 and tr._merge_every == 2
+        # the degraded round_fn still yields one entry per local step
+        assert [e["step"] for e in out["history"]] == list(range(16))
+        assert bool(np.isfinite(np.asarray(tr.state[0])).all())
+
+    def test_recovery_trace_mirrored_into_merge_state(self, tmp_path):
+        ms = {}
+
+        def step_fn(state, batch):
+            return state + 1.0, {"loss": jnp.where(
+                state[0] == 5.0, jnp.nan, 1.0)}
+
+        pol = RecoveryPolicy(max_restarts=4, backoff_base_s=0.0)
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                            log_every=2, recovery=pol)
+        tr = Trainer(step_fn, jnp.zeros(1), lambda s: None, cfg,
+                     merge_state=ms)
+        with pytest.raises(FloatingPointError):
+            tr.run(20)        # deterministic NaN replays to give-up
+        assert ms["tuning_trace"]["recovery"] is tr.recovery_trace
+        assert tr.recovery_trace     # rollbacks were recorded
+
+    def test_recovery_budget_replaces_max_restarts(self, tmp_path):
+        def step_fn(state, batch):
+            return state + 1.0, {"loss": jnp.asarray(float("nan"))}
+
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                            log_every=2, max_restarts=0,
+                            recovery=RecoveryPolicy(
+                                max_restarts=2, backoff_base_s=0.0))
+        tr = Trainer(step_fn, jnp.zeros(1), lambda s: None, cfg)
+        with pytest.raises(FloatingPointError):
+            tr.run(8)
+        assert tr._restarts == 3       # 2 recoveries + the give-up

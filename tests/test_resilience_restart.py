@@ -1,0 +1,143 @@
+"""Restart-replay fidelity: SIGKILL a ``Trainer.for_program`` fit
+mid-cadence (in a subprocess), resume from its crash-consistent
+checkpoints, and require the resumed run to match an uninterrupted one
+bit-for-bit — model state, the on-device sampler counter, the
+error-feedback and SlowMo buffers riding the merge-state holder, the
+tuning trace, and every replayed history entry."""
+
+import os
+import signal
+import subprocess
+import sys
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import LinReg
+from repro.core.mlalgos.linreg import make_linreg_step
+from repro.distributed.compression import CompressionConfig
+from repro.distributed.merge_plan import MergePlan, SlowMo
+from repro.runtime import Trainer, TrainerConfig
+
+SRC = os.path.join(os.path.dirname(__file__), "..", "src")
+KEY = jax.random.PRNGKey(0)
+
+STEPS = 24          # cadence 4 -> ckpts at steps 7, 11, 15, 19 (+ final)
+KILL_DISPATCH = 3   # die inside the round covering steps 8-11
+
+
+def _setup():
+    """Deterministic problem + a merge-state holder seeded by a prior
+    compressed/SlowMo ``PimGrid.fit`` segment (``for_program`` refuses
+    such plans, so the buffers ride the trainer as checkpoint cargo)."""
+    X, y, _ = datasets.regression(KEY, 256, 6)
+    grid = make_cpu_grid(4)
+    data, n, lf, uf, w0 = make_linreg_step(grid, X, y, lr=0.1)
+    ms = {}
+    grid.fit(init_state=w0, local_fn=lf, update_fn=uf, data=data,
+             steps=8, merge_state=ms,
+             merge_plan=MergePlan(
+                 cadence=2,
+                 compression=CompressionConfig(bits=8,
+                                               error_feedback=True),
+                 outer=SlowMo()))
+    ms["tuning_trace"] = {"note": ["segment-done"]}
+    program = LinReg(lr=0.05).bind(grid, X, y)
+    return program, ms
+
+
+def _config(ckpt_dir):
+    return TrainerConfig(ckpt_dir=str(ckpt_dir), ckpt_every=4,
+                         log_every=4, merge_every=4, batch_size=8)
+
+
+# The crash victim: identical setup, but the sabotaged step_fn SIGKILLs
+# the process inside dispatch KILL_DISPATCH — after the round computed,
+# before the trainer records or checkpoints it (a mid-cadence crash).
+_CHILD = """
+import os, signal, sys
+sys.path.insert(0, {src!r})
+import jax
+sys.path.insert(0, {here!r})
+from test_resilience_restart import (_setup, _config, KILL_DISPATCH,
+                                     STEPS)
+from repro.runtime import Trainer
+
+program, ms = _setup()
+tr = Trainer.for_program(program, _config(sys.argv[1]), merge_state=ms)
+orig = tr.step_fn
+calls = {{"n": 0}}
+
+def sabotaged(state, batch):
+    out = orig(state, batch)
+    calls["n"] += 1
+    if calls["n"] == KILL_DISPATCH:
+        jax.block_until_ready(out[0])
+        # the step-7 save is async: drain the writer queue first so
+        # the crash tests resume fidelity, not save-queue timing
+        tr.ckpt.wait()
+        os.kill(os.getpid(), signal.SIGKILL)
+    return out
+
+tr.step_fn = sabotaged
+tr.run(STEPS)
+print("UNREACHABLE")
+"""
+
+
+def test_sigkill_resume_matches_uninterrupted_bit_for_bit(tmp_path):
+    ckpt_dir = tmp_path / "ckpt"
+    child = tmp_path / "crash_child.py"
+    child.write_text(_CHILD.format(
+        src=os.path.abspath(SRC),
+        here=os.path.dirname(os.path.abspath(__file__))))
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.abspath(SRC)
+    proc = subprocess.run(
+        [sys.executable, str(child), str(ckpt_dir)],
+        env=env, capture_output=True, text=True, timeout=600)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr
+    assert "UNREACHABLE" not in proc.stdout
+    # the crash left only merge-boundary checkpoints, newest at step 7
+    steps_on_disk = sorted(
+        int(d.split("_")[1]) for d in os.listdir(ckpt_dir)
+        if d.startswith("step_") and ".corrupt" not in d
+        and not d.endswith(".tmp"))
+    assert steps_on_disk and steps_on_disk[-1] == 7
+
+    # oracle: the same run, uninterrupted, in this process
+    program, ms_oracle = _setup()
+    tr_oracle = Trainer.for_program(
+        program, _config(tmp_path / "oracle"), merge_state=ms_oracle)
+    out_oracle = tr_oracle.run(STEPS)
+
+    # resume from the victim's checkpoints
+    program2, ms_resumed = _setup()
+    tr2 = Trainer.for_program(program2, _config(ckpt_dir),
+                              merge_state=ms_resumed)
+    assert tr2.start_step == 8          # replay re-enters mid-run
+    out2 = tr2.run(STEPS - tr2.start_step)
+
+    # model state and sampler counter: bit-for-bit
+    np.testing.assert_array_equal(np.asarray(tr2.state[0]),
+                                  np.asarray(tr_oracle.state[0]))
+    assert float(tr2.state[1]) == float(tr_oracle.state[1]) \
+        == float(STEPS)
+    # EF residual and SlowMo momentum round-tripped the crash
+    for key in ("error", "momentum"):
+        a = jax.tree.leaves(ms_resumed[key])
+        b = jax.tree.leaves(ms_oracle[key])
+        assert len(a) == len(b)
+        for la, lb in zip(a, b):
+            np.testing.assert_array_equal(np.asarray(la),
+                                          np.asarray(lb))
+    # tuning trace restored from the crashed run's manifest
+    assert ms_resumed["tuning_trace"]["note"] == ["segment-done"]
+    # replayed history is the uninterrupted history's tail, bit-equal
+    tail = out_oracle["history"][tr2.start_step:]
+    assert [e["step"] for e in out2["history"]] \
+        == [e["step"] for e in tail]
+    for a, b in zip(out2["history"], tail):
+        assert a["loss"] == b["loss"]

@@ -280,6 +280,70 @@ class TestAsyncMetricsSink:
         out = tr.run(3)
         assert len(out["history"]) == 3
 
+    def test_close_is_idempotent_and_rejects_late_submits(self):
+        from repro.runtime.trainer import _MetricsSink
+
+        sink = _MetricsSink(lambda window: None)
+        sink.submit([(0, {"loss": 1.0}, 0.0, 0)])
+        sink.close()
+        sink.close()                      # second close is a no-op
+        assert not sink._thread.is_alive()
+        with pytest.raises(RuntimeError, match="closed"):
+            sink.submit([(1, {"loss": 1.0}, 0.0, 0)])
+        sink.drain()                      # drained clean: no exception
+
+    def test_close_registered_with_atexit(self, monkeypatch):
+        import atexit
+
+        from repro.runtime.trainer import _MetricsSink
+
+        reg, unreg = [], []
+        monkeypatch.setattr(atexit, "register",
+                            lambda f, *a, **k: reg.append(f) or f)
+        monkeypatch.setattr(atexit, "unregister",
+                            lambda f: unreg.append(f))
+        sink = _MetricsSink(lambda window: None)
+        assert sink.close in reg          # interrupted runs still close
+        sink.close()
+        assert sink.close in unreg        # ...and don't leak the hook
+
+    def test_queued_window_failure_surfaces_at_drain_after_interrupt(
+            self):
+        """Regression (resilience satellite): a window still queued
+        when the run is interrupted must flush during close and park
+        its failure where a post-mortem ``drain()`` finds it — not
+        vanish with the daemon thread."""
+        import threading
+
+        gate = threading.Event()
+
+        def step_fn(state, batch):
+            calls = state["n"] + 1
+            if int(calls) == 5:
+                gate.set()                # let the consumer catch up
+                raise RuntimeError("interrupted")
+            loss = jnp.asarray(float("nan")) if int(calls) == 3 \
+                else jnp.sum(state["w"])
+            return {"w": state["w"], "n": calls}, {"loss": loss}
+
+        cfg = TrainerConfig(async_metrics=True, log_every=3,
+                            max_restarts=0)
+        tr = Trainer(step_fn, {"w": jnp.ones(2), "n": jnp.zeros(())},
+                     lambda s: None, cfg)
+        orig_flush = tr._flush
+
+        def gated_flush(window):
+            gate.wait(10.0)               # held until the interrupt
+            return orig_flush(window)
+
+        tr._flush = gated_flush
+        with pytest.raises(RuntimeError, match="interrupted"):
+            tr.run(9)
+        assert tr._sink is not None       # reference survives the run
+        with pytest.raises(FloatingPointError, match="non-finite"):
+            tr._sink.drain()
+        tr._sink.drain()                  # exception cleared once seen
+
 
 class TestData:
     def test_token_stream_deterministic(self):

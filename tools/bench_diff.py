@@ -215,10 +215,24 @@ def main(argv=None) -> int:
                          "factor below committed (default 2.0)")
     args = ap.parse_args(argv)
 
-    with open(args.fresh) as f:
-        fresh = json.load(f)
-    with open(args.committed) as f:
-        committed = json.load(f)
+    # a missing or unparseable artifact is a configuration problem the
+    # CI log should state in ONE clear line, not a traceback
+    def load(path, role):
+        try:
+            with open(path) as f:
+                return json.load(f)
+        except OSError as e:
+            print(f"bench_diff: FAIL cannot read {role} artifact "
+                  f"{path!r}: {e.strerror or e}", flush=True)
+        except json.JSONDecodeError as e:
+            print(f"bench_diff: FAIL {role} artifact {path!r} is not "
+                  f"valid JSON: {e}", flush=True)
+        return None
+
+    fresh = load(args.fresh, "fresh")
+    committed = load(args.committed, "committed")
+    if fresh is None or committed is None:
+        return 1
 
     findings = diff(fresh, committed, max_regression=args.max_regression)
     if findings:

@@ -55,6 +55,7 @@ from typing import Any, Callable, Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 
 def epoch_steps(rows_per_vdpu: int, batch_size: int) -> int:
@@ -83,6 +84,37 @@ def batch_indices(rows_per_vdpu: int, batch_size: int, seed: int,
     idx = jax.lax.dynamic_slice(perm, (pos * b,), (b,))
     mask = jax.lax.dynamic_slice(valid, (pos * b,), (b,))
     return idx, mask
+
+
+def host_schedule(rows_per_vdpu: int, batch_size: int, seed: int,
+                  step: int, *, shuffle: bool = True
+                  ) -> Tuple[np.ndarray, np.ndarray]:
+    """Eager (numpy) view of :func:`batch_indices` — THE schedule
+    shared by the on-device sampler and the host-side partition
+    rotation (``data/pipeline``).  Rotation window ``t`` holds exactly
+    the resident slots ``batch_indices(per, part, seed, t)`` names, so
+    epoch-exact coverage composes across the two levels and streaming
+    fits are bit-for-bit the fully-resident minibatch fit with the same
+    seed.
+
+    ``shuffle=False`` replaces the per-epoch ``fold_in(seed, epoch)``
+    permutation with the identity (sequential tiling — the layout
+    where a single-window stream is bit-for-bit the fully-resident
+    full-batch fit).  The device sampler has no sequential mode; this
+    knob exists only at the rotation level.
+    """
+    per, b = rows_per_vdpu, batch_size
+    if shuffle:
+        idx, mask = batch_indices(per, b, seed, step)
+        return np.asarray(idx), np.asarray(mask)
+    E = epoch_steps(per, b)
+    pad = E * b - per
+    perm = np.arange(per, dtype=np.int32)
+    if pad:
+        perm = np.concatenate([perm, perm[:pad]])
+    valid = (np.arange(E * b) < per).astype(np.float32)
+    pos = int(step) % E
+    return perm[pos * b:(pos + 1) * b], valid[pos * b:(pos + 1) * b]
 
 
 def minibatch_fns(local_fn: Callable, update_fn: Callable,

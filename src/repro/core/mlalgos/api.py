@@ -174,12 +174,57 @@ class Workload:
     def eval(self, state, X, y=None) -> dict:
         raise NotImplementedError
 
+    # -- streaming protocol (out-of-core; opt-in) ----------------------
+
+    def stream_consts(self, stream) -> Optional[dict]:
+        """Trace-time constants for an out-of-core fit over a
+        :class:`~repro.data.pipeline.StreamingDataset` — the streaming
+        analogue of ``prepare``'s consts, derived from one-pass host
+        statistics (row count, global quantization scales) because no
+        window ever sees the whole dataset.  ``None`` (the default)
+        means the workload does not support streaming ingestion;
+        :meth:`bind_stream` turns that into a clear error."""
+        return None
+
+    def stream_transform(self, consts: dict, X_rows, y_rows):
+        """Map a window's raw host rows to the resident representation
+        — the streaming analogue of ``prepare``'s pre-shard transform
+        (label mapping, fixed-global-scale quantization).  Must be a
+        *row-local* map so it commutes with the rotation's gather.
+        Returns the ``(X', extra0, ...)`` tuple ``shard_rows`` would
+        have been given."""
+        return (X_rows,) if y_rows is None else (X_rows, y_rows)
+
     # -- engine glue ---------------------------------------------------
 
     def bind(self, grid: PimGrid, X, y=None) -> "Program":
         """Shard the dataset and assemble the engine closures once."""
         data, n, consts = self.prepare(grid, X, y)
         return Program.assemble(self, grid, data, n, consts)
+
+    def bind_stream(self, grid: PimGrid, stream) -> "StreamProgram":
+        """Bind an out-of-core :class:`~repro.data.pipeline.
+        StreamingDataset`: same closure assembly as :meth:`bind`, but
+        the "placement" is a :class:`~repro.data.pipeline.
+        PartitionRotation` that materializes resident-sized windows on
+        demand (see data.pipeline's DESIGN)."""
+        from repro.data.pipeline import PartitionRotation
+
+        consts = self.stream_consts(stream)
+        if consts is None:
+            raise ValueError(
+                f"workload {self.name!r} does not support streaming "
+                f"ingestion (stream_consts returned None): its "
+                f"prepare-time statistics cannot be derived from "
+                f"one-pass host statistics, or nobody has taught it "
+                f"to — use the fully-resident path")
+
+        def transform(Xb, yb, _w=self, _c=consts):
+            return _w.stream_transform(_c, Xb, yb)
+
+        rotation = PartitionRotation(stream, grid, transform=transform)
+        return StreamProgram.assemble(self, grid, rotation,
+                                      stream.n_rows, consts)
 
     def run(self, grid: PimGrid, X, y=None, *, steps: int, plan,
             batch_size: Optional[int], engine: str, scan_chunk: int,
@@ -365,6 +410,84 @@ class Program:
         return round, state0
 
 
+@dataclasses.dataclass
+class StreamProgram(Program):
+    """A workload bound to a grid and an *out-of-core* rotation: the
+    same stable triple as :class:`Program`, but ``data`` is a
+    :class:`~repro.data.pipeline.PartitionRotation` — ``grid.fit``
+    dispatches it to the streaming driver, which swaps resident
+    partitions between merge rounds while a prefetcher double-buffers
+    the next window's gather + H2D behind compute.
+
+    Everything composes: ``batch_size`` samples *within* the resident
+    window (the sampler's ``rows_per_vdpu`` is the window's ``part``
+    slots), cadence/overlap/compression run unchanged inside each
+    window, and EF/momentum continue across windows through
+    ``merge_state``.  Controller plans (``"auto"``/adaptive) are
+    refused by the driver — a per-window probe would measure rotation
+    noise, not the plan."""
+
+    is_stream_program = True
+
+    @property
+    def rows_per_vdpu(self) -> int:
+        return self.data.part
+
+    @property
+    def stream_tag(self) -> str:
+        """Rotation-schedule identity for Trainer checkpoints."""
+        return self.data.tag()
+
+    def batch_feed(self, cadence: int = 1):
+        """A deterministic ``batch_fn(step)`` over the rotation for the
+        fault-tolerant Trainer (window ``step // steps_per_window``,
+        prefetched; rebuilt on rollback)."""
+        from repro.data.pipeline import RotationFeed
+
+        return RotationFeed(self.data, self.data.steps_per_window(cadence))
+
+    def step_fn(self, *, batch_size: Optional[int] = None,
+                sample_seed: int = 0):
+        """Like :meth:`Program.step_fn`, but the step consumes the
+        ``batch`` argument (the current rotation window) and applies
+        the window's unbiased-estimator scale, so the Trainer's
+        merge-boundary checkpoints stay exact under rotation."""
+        from repro.data.pipeline import make_scaled_local
+
+        local_fn, update_fn, state0, _ = self._triple(
+            batch_size, sample_seed)
+        slf = (local_fn if self.data.exact_full
+               else make_scaled_local(local_fn))
+        grid = self.grid
+
+        @jax.jit
+        def step(state, batch):
+            merged = grid.map_reduce(slf, state, batch)
+            return update_fn(state, merged)
+
+        return step, state0
+
+    def round_fn(self, k: int, *, batch_size: Optional[int] = None,
+                 sample_seed: int = 0):
+        if k < 1:
+            raise ValueError(f"round_fn needs cadence k >= 1, got {k}")
+        from repro.data.pipeline import make_scaled_local
+        from repro.distributed import merge_plan as mp
+
+        local_fn, update_fn, state0, _ = self._triple(
+            batch_size, sample_seed)
+        slf = (local_fn if self.data.exact_full
+               else make_scaled_local(local_fn))
+        grid = self.grid
+
+        @jax.jit
+        def round(state, batch):
+            return mp.cadence_round(grid, slf, update_fn, k,
+                                    state, batch)
+
+        return round, state0
+
+
 # ---------------------------------------------------------------------------
 # the generic entry point
 # ---------------------------------------------------------------------------
@@ -394,6 +517,18 @@ def fit(workload: Workload, grid: PimGrid, X, y=None, *, steps: int,
         merge_compression=merge_compression)
     plan, batch_size = workload.merge_caps.constrain(
         workload.name, plan, batch_size)
+    if getattr(X, "is_streaming_source", False):
+        # out-of-core: X is a data.pipeline.StreamingDataset carrying
+        # its own labels; the bound StreamProgram runs through the
+        # identical engine loop (grid.fit dispatches the rotation)
+        if y is not None:
+            raise ValueError(
+                "streaming fits carry labels inside the "
+                "StreamingDataset — pass y=None")
+        return workload.bind_stream(grid, X)._run(
+            steps=steps, plan=plan, batch_size=batch_size, engine=engine,
+            scan_chunk=scan_chunk, merge_state=merge_state,
+            callback=callback, sample_seed=sample_seed)
     return workload.run(grid, X, y, steps=steps, plan=plan,
                         batch_size=batch_size, engine=engine,
                         scan_chunk=scan_chunk, merge_state=merge_state,

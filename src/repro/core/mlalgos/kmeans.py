@@ -71,6 +71,27 @@ class KMeans(api.Workload):
             consts = {"n": n, "_c0": c0, "x_scale": Xq.scale}  # (1,d)
         return data, n, consts
 
+    def stream_consts(self, stream):
+        n = stream.n_rows
+        key = jax.random.PRNGKey(self.seed)
+        init_idx = jax.random.choice(key, n, (self.k,), replace=False)
+        # same draw as prepare; the stream's random row access stands
+        # in for fancy-indexing the resident array
+        c0 = jnp.asarray(stream.rows(init_idx))
+        if self.precision == "fp32":
+            return {"n": n, "_c0": c0}
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return {"n": n, "_c0": c0,
+                "x_scale": qz.symmetric_scale(stream.feature_absmax(),
+                                              bits)}
+
+    def stream_transform(self, consts, X_rows, y_rows):
+        if self.precision == "fp32":
+            return (X_rows,)
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
+                                        bits).values,)
+
     def init_state(self, consts):
         return consts["_c0"]
 

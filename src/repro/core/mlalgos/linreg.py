@@ -70,6 +70,28 @@ class LinReg(api.Workload):
                       "y_scale": yq.scale}
         return data, n, consts
 
+    def stream_consts(self, stream):
+        """Out-of-core constants: the quantized paths derive their
+        per-feature / label scales from one-pass host statistics over
+        the *whole* stream, so every rotation window quantizes on the
+        same grid the resident path would."""
+        n, d = stream.n_rows, stream.n_features
+        if self.precision == "fp32":
+            return {"n": n, "d": d}
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return {"n": n, "d": d,
+                "x_scale": qz.symmetric_scale(stream.feature_absmax(),
+                                              bits),
+                "y_scale": qz.symmetric_scale(stream.label_absmax(), 16)}
+
+    def stream_transform(self, consts, X_rows, y_rows):
+        if self.precision == "fp32":
+            return X_rows, y_rows
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        Xq = qz.quantize_fixed_scale(X_rows, consts["x_scale"], bits)
+        yq = qz.quantize_fixed_scale(y_rows, consts["y_scale"], 16)
+        return Xq.values, yq.values
+
     def init_state(self, consts):
         return jnp.zeros((consts["d"],), jnp.float32)
 

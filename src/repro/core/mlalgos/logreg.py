@@ -82,6 +82,23 @@ class LogReg(api.Workload):
             consts = {"n": n, "d": d, "sig": sig, "x_scale": Xq.scale}
         return data, n, consts
 
+    def stream_consts(self, stream):
+        n, d = stream.n_rows, stream.n_features
+        sig = make_sigmoid(self.sigmoid, self.lut_entries)
+        if self.precision == "fp32":
+            return {"n": n, "d": d, "sig": sig}
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return {"n": n, "d": d, "sig": sig,
+                "x_scale": qz.symmetric_scale(stream.feature_absmax(),
+                                              bits)}
+
+    def stream_transform(self, consts, X_rows, y_rows):
+        if self.precision == "fp32":
+            return X_rows, y_rows
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
+                                        bits).values, y_rows)
+
     def init_state(self, consts):
         return jnp.zeros((consts["d"],), jnp.float32)
 

@@ -89,6 +89,25 @@ class MultinomialLogReg(api.Workload):
             consts = {"n": n, "d": d, "sm": sm, "x_scale": Xq.scale}
         return data, n, consts
 
+    def stream_consts(self, stream):
+        n, d = stream.n_rows, stream.n_features
+        sm = make_softmax(self.softmax, self.lut_entries)
+        if self.precision == "fp32":
+            return {"n": n, "d": d, "sm": sm}
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return {"n": n, "d": d, "sm": sm,
+                "x_scale": qz.symmetric_scale(stream.feature_absmax(),
+                                              bits)}
+
+    def stream_transform(self, consts, X_rows, y_rows):
+        import numpy as np
+        yi = np.asarray(y_rows, np.int32)     # same cast as prepare
+        if self.precision == "fp32":
+            return X_rows, yi
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
+                                        bits).values, yi)
+
     def init_state(self, consts):
         return jnp.zeros((consts["d"], self.n_classes), jnp.float32)
 

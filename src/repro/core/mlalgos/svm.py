@@ -68,6 +68,25 @@ class LinearSVM(api.Workload):
             consts = {"n": n, "d": d, "x_scale": Xq.scale}
         return data, n, consts
 
+    def stream_consts(self, stream):
+        n, d = stream.n_rows, stream.n_features
+        if self.precision == "fp32":
+            return {"n": n, "d": d}
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return {"n": n, "d": d,
+                "x_scale": qz.symmetric_scale(stream.feature_absmax(),
+                                              bits)}
+
+    def stream_transform(self, consts, X_rows, y_rows):
+        # same ±1 label map as prepare, applied per window
+        import numpy as np
+        ys = np.where(np.asarray(y_rows) > 0, 1.0, -1.0).astype(np.float32)
+        if self.precision == "fp32":
+            return X_rows, ys
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
+                                        bits).values, ys)
+
     def init_state(self, consts):
         return jnp.zeros((consts["d"],), jnp.float32)
 

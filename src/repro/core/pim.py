@@ -458,6 +458,20 @@ class PimGrid:
             overlap_merge=overlap_merge,
             merge_compression=merge_compression)
 
+        # out-of-core streaming: when ``data`` is a PartitionRotation
+        # (data.pipeline), the rotation driver swaps resident
+        # partitions between merge rounds and re-enters fit() per
+        # window — so every engine path below (and the armed-faults
+        # hook) applies unchanged within a window
+        if getattr(data, "is_streaming_rotation", False):
+            from repro.data import pipeline as _pipeline
+
+            return _pipeline.run_streaming_fit(
+                self, data, init_state=init_state, local_fn=local_fn,
+                update_fn=update_fn, steps=steps, plan=plan,
+                merge_state=merge_state, callback=callback,
+                scan_chunk=scan_chunk, engine=engine)
+
         # fault-injection hook (repro.resilience): when a FaultPlan is
         # armed, non-controller fits run under the resilient driver —
         # survivor-weighted merges, deterministic injection, rollback.

@@ -185,6 +185,35 @@ def quantize_symmetric(x: jax.Array, bits: int = 8, axis=None,
     return Quantized(jnp.clip(q, -qmax - 1, qmax).astype(dtype), scale)
 
 
+def quantize_fixed_scale(x: jax.Array, scale: jax.Array,
+                         bits: int = 8) -> Quantized:
+    """Symmetric quantization against a *precomputed* scale.
+
+    The out-of-core streaming path: a rotation window only sees a
+    partition of the dataset, so the scale must come from a one-pass
+    global statistic (``StreamingDataset.feature_absmax``) rather than
+    the window's own max — otherwise every partition would quantize on
+    its own grid and the streamed fit would diverge from the resident
+    one.  With ``scale = max(|x|_global, 1e-12) / qmax`` this is
+    bit-for-bit ``quantize_symmetric`` over the full dataset, gathered
+    a partition at a time (same divide / round / clip sequence).
+    """
+    x = jnp.asarray(x, jnp.float32)
+    qmax = 2 ** (bits - 1) - 1
+    scale = jnp.asarray(scale, jnp.float32)
+    q = jnp.round(x / scale)
+    dtype = _INT_DTYPES[bits] if bits in _INT_DTYPES else jnp.int32
+    return Quantized(jnp.clip(q, -qmax - 1, qmax).astype(dtype), scale)
+
+
+def symmetric_scale(amax, bits: int = 8) -> jax.Array:
+    """The scale ``quantize_symmetric`` derives from an absmax — split
+    out so host-computed global statistics quantize on exactly the
+    same grid."""
+    qmax = 2 ** (bits - 1) - 1
+    return jnp.maximum(jnp.asarray(amax, jnp.float32), 1e-12) / qmax
+
+
 def dequantize(q: Quantized, dtype=jnp.float32) -> jax.Array:
     return q.dequantize(dtype)
 

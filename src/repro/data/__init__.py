@@ -1,3 +1,5 @@
 from repro.data.pipeline import (  # noqa: F401
     ShardedDataset, TokenStream, Prefetcher,
+    StreamingDataset, PartitionRotation, RotationFeed,
+    run_streaming_fit,
 )

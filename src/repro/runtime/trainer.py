@@ -248,10 +248,19 @@ class Trainer:
                  batch_fn: Callable[[int], Any],
                  config: TrainerConfig = TrainerConfig(),
                  state_placer: Optional[Callable] = None,
-                 merge_state: Optional[dict] = None):
+                 merge_state: Optional[dict] = None,
+                 stream_tag: Optional[str] = None,
+                 stream_spw: Optional[int] = None):
         self.step_fn = step_fn
         self.batch_fn = batch_fn
         self.cfg = config
+        # out-of-core rotation identity (Trainer.for_program over a
+        # StreamProgram): the tag names the rotation schedule (dataset
+        # rows, partition size, seed, shuffle) and is refused across
+        # restores if it drifted — a resumed run replaying step s must
+        # re-gather the exact window s // steps_per_window held.
+        self._stream_tag = stream_tag
+        self._stream_spw = stream_spw
         plan = config.merge_plan
         if plan is not None:
             if config.merge_every != 1 or \
@@ -316,6 +325,18 @@ class Trainer:
                         f"{self._compression_tag()!r} — the EF residual "
                         f"is not transferable across compression "
                         f"settings")
+                saved_stream = extra.get("stream_tag")
+                if (saved_stream is not None or
+                        self._stream_tag is not None) and \
+                        saved_stream != self._stream_tag:
+                    raise ValueError(
+                        f"checkpoint written under rotation schedule "
+                        f"{saved_stream!r} but trainer configured with "
+                        f"{self._stream_tag!r} — a resumed streaming "
+                        f"run must replay the exact partition sequence "
+                        f"(same dataset rows, partition size, seed and "
+                        f"shuffle mode), so a drifted rotation is "
+                        f"refused rather than silently re-tiled")
                 self.state = state
                 self.start_step = step + 1
                 if merge_state is not None:
@@ -372,17 +393,30 @@ class Trainer:
                 "round_fn); run overlap/compression/outer-optimizer/"
                 "adaptive/auto plans through api.fit or PimGrid.fit")
         cadence = plan.cadence
+        # out-of-core StreamPrograms: the batch function is the
+        # rotation feed (window step // steps_per_window, prefetched,
+        # rebuilt on rollback/restore), and the rotation's identity tag
+        # rides in every checkpoint so resume replays the exact
+        # partition sequence
+        batch_fn: Callable[[int], Any] = lambda step: None
+        stream_tag = stream_spw = None
+        if getattr(program, "is_stream_program", False):
+            batch_fn = program.batch_feed(cadence)
+            stream_tag = program.stream_tag
+            stream_spw = batch_fn.spw
         if cadence == 1:
             step_fn, state0 = program.step_fn(
                 batch_size=config.batch_size, sample_seed=sample_seed)
-            return cls(step_fn, state0, lambda step: None, config,
+            return cls(step_fn, state0, batch_fn, config,
                        state_placer=state_placer,
-                       merge_state=merge_state)
+                       merge_state=merge_state,
+                       stream_tag=stream_tag, stream_spw=stream_spw)
         round_fn, state0 = program.round_fn(
             cadence, batch_size=config.batch_size,
             sample_seed=sample_seed)
-        tr = cls(round_fn, state0, lambda step: None, config,
-                 state_placer=state_placer, merge_state=merge_state)
+        tr = cls(round_fn, state0, batch_fn, config,
+                 state_placer=state_placer, merge_state=merge_state,
+                 stream_tag=stream_tag, stream_spw=stream_spw)
         tr._steps_per_call = cadence
         rounds = {cadence: round_fn}
 
@@ -483,6 +517,13 @@ class Trainer:
     def _save(self, step: int):
         extra = {"data_step": step,
                  "merge_compression": self._compression_tag()}
+        if self._stream_tag is not None:
+            # the rotation cursor: which window the checkpointed step
+            # was trained on.  Replay derives it from the step alone
+            # (the schedule is pure in (seed, window)), so this is a
+            # cross-check + observability field, not hidden state.
+            extra["stream_tag"] = self._stream_tag
+            extra["rotation_window"] = step // self._stream_spw
         if self.merge_state is not None:
             # controller decision traces are JSON-able host-side lists
             # (not array pytrees), so they ride the manifest's extra

@@ -438,3 +438,106 @@ class TestMainErrorPaths:
                                 json.dumps(_artifact()))
         assert bench_diff.main([fresh, committed]) == 0
         assert "bench_diff: OK" in capsys.readouterr().out
+
+
+def _stream_artifact(streaming=None, baseline=None, *, smoke=True,
+                     overlap=0.95, schema="bench_streaming/v1"):
+    config = {
+        "backend": "cpu", "n_devices": 1, "smoke": smoke,
+        "rows": 4096, "features": 32, "n_vdpus": 8,
+        "steps_per_window": 4, "epochs": 1,
+        "stream_workloads": ["linreg", "svm"],
+        "stream_partition_rows": [512, 1024],
+        "stream_depths": [0, 2],
+        "overlap_floor": 0.8, "overlap_floor_depth": 2,
+    }
+    if streaming is None:
+        streaming = [
+            {"workload": wl, "partition_rows": part,
+             "prefetch_depth": depth, "steps_per_s": 50.0,
+             "ingest_overlap_fraction": 0.0 if depth == 0 else overlap}
+            for wl in ("linreg", "svm") for part in (512, 1024)
+            for depth in (0, 2)]
+    if baseline is None:
+        baseline = [
+            {"workload": wl, "partition_rows": part,
+             "steps_per_s": 40.0}
+            for wl in ("linreg", "svm") for part in (512, 1024)]
+    return {"schema": schema, "config": config,
+            "streaming": streaming, "baseline": baseline}
+
+
+class TestStreamingDiff:
+    """The bench_streaming/* family: completeness from the artifact's
+    own stream_* axes, the ingest-overlap floor, and regression."""
+
+    def test_identical_passes(self):
+        art = _stream_artifact()
+        assert bench_diff.diff(art, art) == []
+
+    def test_cross_family_is_schema_mismatch(self):
+        findings = bench_diff.diff(_stream_artifact(), _artifact())
+        assert any("schema mismatch" in f for f in findings)
+
+    def test_missing_streaming_cell_flagged(self):
+        art = _stream_artifact()
+        dropped = _stream_artifact(
+            streaming=[c for c in art["streaming"]
+                       if not (c["workload"] == "svm"
+                               and c["partition_rows"] == 1024
+                               and c["prefetch_depth"] == 2)])
+        findings = bench_diff.diff(dropped, art)
+        assert any("missing streaming cell" in f
+                   and "workload=svm" in f and "partition_rows=1024" in f
+                   for f in findings)
+
+    def test_missing_baseline_cell_flagged(self):
+        art = _stream_artifact()
+        dropped = _stream_artifact(
+            baseline=[c for c in art["baseline"]
+                      if c["partition_rows"] != 512])
+        findings = bench_diff.diff(dropped, art)
+        assert sum("missing baseline cell" in f for f in findings) == 2
+
+    def test_overlap_below_floor_flagged(self):
+        """depth >= overlap_floor_depth must hide >= overlap_floor of
+        ingest — the PR acceptance criterion, enforced every CI run."""
+        art = _stream_artifact()
+        weak = _stream_artifact(overlap=0.5)
+        findings = bench_diff.diff(weak, art)
+        assert sum("ingest overlap below floor" in f
+                   for f in findings) == 4          # every depth-2 cell
+
+    def test_depth_zero_exempt_from_floor(self):
+        """The synchronous path is the floor's control group: overlap 0
+        by construction, never flagged."""
+        art = _stream_artifact()
+        findings = bench_diff.diff(art, art)
+        assert not any("overlap" in f for f in findings)
+
+    def test_regression_flagged_when_comparable(self):
+        fresh = _stream_artifact()
+        for c in fresh["streaming"]:
+            c["steps_per_s"] = 10.0
+        findings = bench_diff.diff(fresh, _stream_artifact())
+        assert any("streaming throughput regression" in f
+                   for f in findings)
+
+    def test_regression_skipped_when_not_comparable(self, capsys):
+        fresh = _stream_artifact()
+        for c in fresh["streaming"]:
+            c["steps_per_s"] = 10.0
+        committed = _stream_artifact(smoke=False)
+        findings = bench_diff.diff(fresh, committed)
+        assert findings == []
+        assert "not comparable" in capsys.readouterr().out
+
+    def test_committed_repo_artifact_self_diff(self):
+        """The committed BENCH_streaming.json must satisfy its own
+        promises (completeness + overlap floor)."""
+        import json
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_streaming.json")
+        with open(path) as f:
+            art = json.load(f)
+        assert bench_diff.diff(art, art) == []

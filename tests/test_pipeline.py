@@ -1,0 +1,230 @@
+"""data/pipeline primitives: TokenStream determinism, the hardened
+Prefetcher lifecycle, and PartitionRotation's window materialization
+(shapes, placement, schedule purity, epoch coverage)."""
+
+import threading
+import time
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import make_cpu_grid
+from repro.data import Prefetcher, StreamingDataset, TokenStream
+
+
+class TestTokenStream:
+    def test_batch_at_resume_exact(self):
+        """``batch_at(step)`` is pure in (seed, step) — a restarted
+        stream replays the same tokens (fault-tolerant resume)."""
+        a = TokenStream(vocab_size=64, batch=4, seq_len=16, seed=11)
+        b = TokenStream(vocab_size=64, batch=4, seq_len=16, seed=11)
+        for step in (0, 1, 7, 123):
+            np.testing.assert_array_equal(a.batch_at(step)["tokens"],
+                                          b.batch_at(step)["tokens"])
+
+    def test_iter_matches_batch_at(self):
+        ts = TokenStream(vocab_size=32, batch=2, seq_len=8, seed=3)
+        it = iter(ts)
+        for step in range(4):
+            np.testing.assert_array_equal(next(it)["tokens"],
+                                          ts.batch_at(step)["tokens"])
+
+    def test_seeds_differ(self):
+        a = TokenStream(vocab_size=64, batch=4, seq_len=16, seed=0)
+        b = TokenStream(vocab_size=64, batch=4, seq_len=16, seed=1)
+        assert not np.array_equal(a.batch_at(0)["tokens"],
+                                  b.batch_at(0)["tokens"])
+
+
+class TestPrefetcher:
+    def test_preserves_order(self):
+        for depth in (1, 2, 5):
+            pf = Prefetcher(iter(range(50)), depth=depth)
+            assert list(pf) == list(range(50))
+            pf.close()
+
+    def test_transform_runs_on_worker(self):
+        pf = Prefetcher(iter(range(8)), depth=2,
+                        transform=lambda x: x * 10)
+        assert list(pf) == [i * 10 for i in range(8)]
+        pf.close()
+
+    def test_exhaustion_is_sticky(self):
+        """After the source ends, every further ``next`` raises
+        StopIteration — the consumer can't hang on a dead worker."""
+        pf = Prefetcher(iter(range(2)), depth=2)
+        assert list(pf) == [0, 1]
+        with pytest.raises(StopIteration):
+            next(pf)
+        with pytest.raises(StopIteration):
+            next(pf)
+        pf.close()
+
+    def test_depth_validated(self):
+        with pytest.raises(ValueError, match="depth"):
+            Prefetcher(iter(range(2)), depth=0)
+
+    def test_close_with_full_queue_does_not_deadlock(self):
+        """The regression this hardening exists for: an infinite source
+        fills the queue, the worker blocks in ``put``, and ``close``
+        must still stop + join it (the old blocking put deadlocked)."""
+        def infinite():
+            i = 0
+            while True:
+                yield i
+                i += 1
+
+        pf = Prefetcher(infinite(), depth=1)
+        assert next(pf) == 0               # worker alive and producing
+        t0 = time.perf_counter()
+        pf.close()
+        assert time.perf_counter() - t0 < 5.0
+        assert not pf._thread.is_alive()
+
+    def test_next_after_close_raises(self):
+        pf = Prefetcher(iter(range(100)), depth=1)
+        pf.close()
+        with pytest.raises(RuntimeError, match="closed"):
+            next(pf)
+
+    def test_close_idempotent(self):
+        pf = Prefetcher(iter(range(3)), depth=1)
+        pf.close()
+        pf.close()
+
+    def test_close_wakes_blocked_consumer_worker(self):
+        """A consumer blocked in ``__next__`` while the worker waits on
+        a slow source is released when ``close`` re-primes the
+        sentinel (no hang on shutdown mid-stall)."""
+        release = threading.Event()
+
+        def slow():
+            yield 0
+            release.wait(timeout=30)
+            yield 1
+
+        pf = Prefetcher(slow(), depth=1)
+        assert next(pf) == 0
+        got = []
+
+        def consume():
+            try:
+                got.append(next(pf))
+            except (StopIteration, RuntimeError) as e:
+                got.append(type(e).__name__)
+
+        t = threading.Thread(target=consume, daemon=True)
+        t.start()
+        time.sleep(0.05)                   # let it block in get()
+        release.set()                      # un-stick the source for join
+        pf.close()
+        t.join(timeout=5.0)
+        assert not t.is_alive()
+        assert len(got) == 1
+
+    def test_timing_lists_recorded(self):
+        pf = Prefetcher(iter(range(6)), depth=2)
+        list(pf)
+        assert len(pf.produce_s) == 6
+        assert len(pf.stall_s) == 6
+        assert all(s >= 0 for s in pf.produce_s + pf.stall_s)
+        pf.close()
+
+
+class TestStreamingDatasetValidation:
+    def test_row_mismatch(self):
+        with pytest.raises(ValueError, match="rows"):
+            StreamingDataset(np.ones((10, 2), np.float32),
+                             np.ones(9, np.float32), partition_rows=4)
+
+    def test_partition_rows_validated(self):
+        with pytest.raises(ValueError, match="partition_rows"):
+            StreamingDataset(np.ones((10, 2), np.float32),
+                             partition_rows=0)
+
+    def test_absmax_matches_global_reduction(self):
+        rng = np.random.default_rng(0)
+        X = rng.normal(size=(257, 5)).astype(np.float32)
+        y = rng.normal(size=257).astype(np.float32)
+        sd = StreamingDataset(X, y, partition_rows=64)
+        np.testing.assert_array_equal(
+            sd.feature_absmax(block_rows=100),
+            np.abs(X).max(axis=0, keepdims=True))
+        assert sd.label_absmax(block_rows=100) == np.abs(y).max()
+
+
+class TestPartitionRotation:
+    def _rotation(self, n=100, d=3, part_rows=32, nv=4, **kw):
+        rng = np.random.default_rng(1)
+        X = rng.normal(size=(n, d)).astype(np.float32)
+        y = rng.normal(size=n).astype(np.float32)
+        sd = StreamingDataset(X, y, partition_rows=part_rows, **kw)
+        return sd.bind(make_cpu_grid(nv))
+
+    def test_window_shapes_and_placement(self):
+        rot = self._rotation()
+        data = rot.window_data(0)
+        nv, part = rot.grid.n_vdpus, rot.part
+        assert set(data) == {"X", "w", "y0", "scale"}
+        assert data["X"].shape == (nv, part, 3)
+        assert data["w"].shape == (nv, part)
+        assert data["scale"].shape == (nv,)
+        assert all(isinstance(leaf, jax.Array)
+                   for leaf in jax.tree.leaves(data))
+
+    def test_window_host_pure_in_t(self):
+        rot = self._rotation()
+        a, b = rot.window_host(3), rot.window_host(3)
+        for k in a:
+            np.testing.assert_array_equal(np.asarray(a[k]),
+                                          np.asarray(b[k]))
+
+    def test_epoch_coverage_exact(self):
+        """One epoch of windows visits every real resident slot exactly
+        once (the sampler's coverage proof, lifted to the host) and
+        never the pad slots."""
+        rot = self._rotation(n=100, nv=4, part_rows=32)
+        per, nv = rot.per, rot.grid.n_vdpus
+        # every real slot once; pads (rows >= n in the tail vDPU) never
+        slot_rows = (np.arange(nv)[:, None] * per + np.arange(per)[None])
+        expect = (slot_rows < 100).astype(np.float64)
+        visits = np.zeros((nv, per))
+        for t in range(rot.windows_per_epoch):
+            idx, _ = rot.schedule(t)
+            host = rot.window_host(t)
+            visits[:, idx] += np.asarray(host["w"])
+        np.testing.assert_array_equal(visits, expect)
+
+    def test_exact_full_single_window(self):
+        """partition >= dataset => one all-ones window, scale omitted
+        (the driver then reuses the resident compiled graph as-is)."""
+        rot = self._rotation(n=100, nv=4, part_rows=100)
+        assert rot.exact_full and rot.windows_per_epoch == 1
+        host = rot.window_host(0)
+        assert "scale" not in host
+
+    def test_prefetcher_matches_synchronous_windows(self):
+        rot = self._rotation()
+        pf = rot.prefetcher(0, depth=2)
+        try:
+            for t in range(3):
+                sync = rot.window_data(t)
+                pre = next(pf)
+                for k in sync:
+                    np.testing.assert_array_equal(np.asarray(sync[k]),
+                                                  np.asarray(pre[k]))
+        finally:
+            pf.close()
+
+    def test_pad_rows_zeroed(self):
+        rot = self._rotation(n=10, nv=4, part_rows=12, shuffle=False)
+        host = rot.window_host(rot.windows_per_epoch - 1)
+        w = np.asarray(host["w"])
+        X = np.asarray(host["X"])
+        assert (X[w == 0.0] == 0.0).all()
+
+    def test_schedule_cache_bounded(self):
+        rot = self._rotation()
+        rot.prewarm_schedules(range(5000))
+        assert len(rot._sched_cache) <= 4096

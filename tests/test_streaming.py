@@ -1,0 +1,239 @@
+"""Out-of-core streaming ingestion: the exactness and lifecycle
+contracts of StreamingDataset / PartitionRotation / run_streaming_fit.
+
+The two headline claims (data/pipeline DESIGN):
+
+* a streaming fit whose partitions tile the dataset is bit-for-bit the
+  fully-resident fit — ``shuffle=False`` single-partition == full-batch,
+  and a multi-window rotation == the resident minibatch sampler with
+  ``batch_size = part`` and the same seed;
+* the compiled scan stays the execution engine: streaming scan ==
+  streaming python oracle at every cadence, no retrace across windows.
+"""
+
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import datasets, make_cpu_grid
+from repro.core.mlalgos import api
+from repro.core.mlalgos.dtree import DecisionTree
+from repro.core.mlalgos.kmeans import KMeans
+from repro.core.mlalgos.linreg import LinReg
+from repro.core.mlalgos.svm import LinearSVM
+from repro.data import StreamingDataset
+from repro.distributed.compression import CompressionConfig
+from repro.runtime import Trainer, TrainerConfig
+
+
+def _data(n=400, d=6, seed=5):
+    X, y, _ = datasets.regression(jax.random.PRNGKey(seed), n, d)
+    return X, y, np.asarray(X), np.asarray(y)
+
+
+def _trees_equal(a, b):
+    la, lb = jax.tree.leaves(a), jax.tree.leaves(b)
+    return len(la) == len(lb) and all(
+        bool(np.array_equal(np.asarray(x), np.asarray(y)))
+        for x, y in zip(la, lb))
+
+
+def _histories_equal(ha, hb):
+    return len(ha) == len(hb) and all(
+        set(ea) == set(eb) and all(np.array_equal(
+            np.asarray(ea[k]), np.asarray(eb[k])) for k in ea)
+        for ea, eb in zip(ha, hb))
+
+
+class TestBitExactness:
+    def test_exact_full_matches_resident_full_batch(self):
+        """shuffle=False, partition == dataset: the rotation runs the
+        IDENTICAL compiled graph — state AND history bit-equal."""
+        X, y, Xn, yn = _data()
+        grid = make_cpu_grid(8)
+        wl = LinReg(lr=0.05)
+        sd = StreamingDataset(Xn, yn, partition_rows=Xn.shape[0],
+                              steps_per_window=5, shuffle=False)
+        rs = api.fit(wl, grid, sd, steps=15)
+        rr = api.fit(wl, grid, X, y, steps=15)
+        assert _trees_equal(rs.state, rr.state)
+        assert _histories_equal(rs.history, rr.history)
+
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_rotation_matches_resident_minibatch(self, precision):
+        """Multi-window rotation == resident minibatch with
+        batch_size=part and the same seed — the sampler's schedule,
+        lifted to the host, including the quantized paths (fixed
+        global scales)."""
+        X, y, Xn, yn = _data()
+        grid = make_cpu_grid(8)
+        wl = LinReg(lr=0.05, precision=precision)
+        sd = StreamingDataset(Xn, yn, partition_rows=96,
+                              steps_per_window=1, seed=3)
+        part = wl.bind_stream(grid, sd).data.part
+        rs = api.fit(wl, grid, sd, steps=20)
+        rr = api.fit(wl, grid, X, y, steps=20, batch_size=part,
+                     sample_seed=3)
+        assert _trees_equal(rs.state, rr.state)
+        assert _histories_equal(rs.history, rr.history)
+
+    def test_rotation_matches_resident_minibatch_svm(self):
+        X, y, Xn, yn = _data()
+        yb = (yn > 0).astype(np.float32)
+        grid = make_cpu_grid(8)
+        wl = LinearSVM(lr=0.05)
+        sd = StreamingDataset(Xn, yb, partition_rows=96,
+                              steps_per_window=1, seed=9)
+        part = wl.bind_stream(grid, sd).data.part
+        rs = api.fit(wl, grid, sd, steps=16)
+        rr = api.fit(wl, grid, X, np.asarray(yb), steps=16,
+                     batch_size=part, sample_seed=9)
+        assert _trees_equal(rs.state, rr.state)
+        assert _histories_equal(rs.history, rr.history)
+
+    def test_rotation_matches_resident_minibatch_kmeans(self):
+        X, _, Xn, _ = _data()
+        grid = make_cpu_grid(8)
+        wl = KMeans(k=4, seed=2)
+        sd = StreamingDataset(Xn, partition_rows=96,
+                              steps_per_window=1, seed=4)
+        part = wl.bind_stream(grid, sd).data.part
+        rs = api.fit(wl, grid, sd, steps=10)
+        rr = api.fit(wl, grid, X, steps=10, batch_size=part,
+                     sample_seed=4)
+        assert _trees_equal(rs.state, rr.state)
+
+    @pytest.mark.parametrize("merge_every", [1, 2])
+    def test_scan_matches_python_oracle(self, merge_every):
+        """The parity oracle survives rotation at every cadence (at
+        cadence k a window spans whole merge rounds)."""
+        _, _, Xn, yn = _data()
+        grid = make_cpu_grid(4)
+        wl = LinReg(lr=0.05)
+        sd = StreamingDataset(Xn, yn, partition_rows=120,
+                              steps_per_window=2 * merge_every, seed=1)
+        rs = api.fit(wl, grid, sd, steps=12, merge_every=merge_every)
+        rp = api.fit(wl, grid, sd, steps=12, merge_every=merge_every,
+                     engine="python")
+        assert _trees_equal(rs.state, rp.state)
+        assert _histories_equal(rs.history, rp.history)
+
+    def test_compressed_merge_state_continues_across_windows(self):
+        """EF residuals ride ``merge_state`` across window swaps exactly
+        as they ride across fits — compressed streaming == compressed
+        resident minibatch, bit for bit."""
+        X, y, Xn, yn = _data()
+        grid = make_cpu_grid(4)
+        wl = LinReg(lr=0.05)
+        comp = CompressionConfig(bits=8)
+        sd = StreamingDataset(Xn, yn, partition_rows=120,
+                              steps_per_window=1, seed=6)
+        part = wl.bind_stream(grid, sd).data.part
+        ms_s: dict = {}
+        ms_r: dict = {}
+        rs = api.fit(wl, grid, sd, steps=12,
+                     merge_compression=comp, merge_state=ms_s)
+        rr = api.fit(wl, grid, X, y, steps=12,
+                     merge_compression=comp, merge_state=ms_r,
+                     batch_size=part, sample_seed=6)
+        assert _trees_equal(rs.state, rr.state)
+        assert _trees_equal(ms_s.get("error"), ms_r.get("error"))
+
+    def test_no_retrace_across_windows(self):
+        """Every window hits the same compiled runner: the grid's fit
+        cache must not grow with the window count."""
+        _, _, Xn, yn = _data()
+        grid = make_cpu_grid(4)
+        wl = LinReg(lr=0.05)
+
+        def run(steps):
+            sd = StreamingDataset(Xn, yn, partition_rows=120,
+                                  steps_per_window=2, seed=0)
+            api.fit(wl, grid, sd, steps=steps)
+
+        run(4)
+        before = len(grid._fit_cache)
+        run(16)
+        assert len(grid._fit_cache) == before
+
+
+class TestStreamingLifecycle:
+    def test_labels_ride_inside_the_stream(self):
+        _, _, Xn, yn = _data()
+        sd = StreamingDataset(Xn, yn, partition_rows=64)
+        with pytest.raises(ValueError, match="y=None"):
+            api.fit(LinReg(), make_cpu_grid(4), sd, yn, steps=2)
+
+    def test_cadence_alignment_enforced(self):
+        _, _, Xn, yn = _data()
+        sd = StreamingDataset(Xn, yn, partition_rows=64,
+                              steps_per_window=3)
+        with pytest.raises(ValueError, match="cadence"):
+            api.fit(LinReg(), make_cpu_grid(4), sd, steps=6,
+                    merge_every=2)
+
+    def test_controller_plans_refused(self):
+        _, _, Xn, yn = _data()
+        sd = StreamingDataset(Xn, yn, partition_rows=64)
+        with pytest.raises(ValueError, match="auto"):
+            api.fit(LinReg(), make_cpu_grid(4), sd, steps=4,
+                    merge_plan="auto")
+
+    def test_non_streaming_workload_refused(self):
+        _, _, Xn, yn = _data()
+        sd = StreamingDataset(Xn, (yn > 0).astype(np.int32),
+                              partition_rows=64)
+        with pytest.raises(ValueError, match="does not support"):
+            DecisionTree().bind_stream(make_cpu_grid(4), sd)
+
+    def test_overlap_stats_recorded(self):
+        _, _, Xn, yn = _data()
+        grid = make_cpu_grid(4)
+        sd = StreamingDataset(Xn, yn, partition_rows=120,
+                              steps_per_window=2, prefetch_depth=2)
+        ms: dict = {}
+        api.fit(LinReg(lr=0.05), grid, sd, steps=12, merge_state=ms)
+        stats = ms["streaming_trace"]
+        assert stats["windows"] == 6
+        assert stats["prefetch_depth"] == 2
+        assert 0.0 <= stats["ingest_overlap_fraction"] <= 1.0
+        assert stats["ingest_s"] > 0.0
+
+
+class TestTrainerStreaming:
+    def _program(self, part_rows=96, seed=3):
+        _, _, Xn, yn = _data()
+        sd = StreamingDataset(Xn, yn, partition_rows=part_rows,
+                              steps_per_window=2, seed=seed)
+        return LinReg(lr=0.05).bind_stream(make_cpu_grid(4), sd)
+
+    def test_resume_bit_exact(self, tmp_path):
+        """SIGKILL-resume replay: interrupt at a checkpoint boundary,
+        rebuild everything from disk, and land bit-equal with the
+        uninterrupted run (the checkpoint carries the rotation cursor
+        and the windows re-gather deterministically)."""
+        cfg = lambda d: TrainerConfig(ckpt_dir=str(tmp_path / d),
+                                      ckpt_every=4, log_every=100)
+        full = Trainer.for_program(self._program(), cfg("a"))
+        full.run(12)
+        Trainer.for_program(self._program(), cfg("b")).run(8)
+        resumed = Trainer.for_program(self._program(), cfg("b"))
+        assert resumed.start_step == 8     # restored from the ckpt
+        resumed.run(4)                     # 8 done + 4 = the full 12
+        assert _trees_equal(full.state, resumed.state)
+
+    def test_stream_tag_mismatch_refused(self, tmp_path):
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=2,
+                            log_every=100)
+        Trainer.for_program(self._program(part_rows=96), cfg).run(4)
+        with pytest.raises(ValueError, match="stream"):
+            Trainer.for_program(self._program(part_rows=200), cfg)
+
+    def test_trainer_matches_api_fit(self, tmp_path):
+        cfg = TrainerConfig(ckpt_dir=str(tmp_path), ckpt_every=100,
+                            log_every=100)
+        tr = Trainer.for_program(self._program(), cfg)
+        tr.run(8)
+        ref = self._program().fit(steps=8)
+        assert _trees_equal(tr.state, ref.state)

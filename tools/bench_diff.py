@@ -47,6 +47,20 @@ Checks, in order:
    still apply), so CI always validates structure and validates
    performance when it can.
 
+The tool is schema-family aware: ``bench_scaling/*`` artifacts get the
+checks above; ``bench_streaming/*`` artifacts (benchmarks/
+bench_streaming.py) get the same three-step treatment with their own
+axes — completeness over the cross-product the artifact's own config
+promises (``stream_workloads`` x ``stream_partition_rows`` x
+``stream_depths``, plus one ``baseline`` cell per workload x partition
+size), an **overlap-floor** gate (every cell at ``prefetch_depth >=
+config.overlap_floor_depth`` must report
+``ingest_overlap_fraction >= config.overlap_floor`` — the acceptance
+criterion that prefetch actually hides ingest), and the regression
+check on ``steps_per_s`` when configs are comparable.  Families never
+cross-compare: a streaming artifact diffed against a scaling artifact
+is a schema mismatch.
+
 Usage::
 
     python tools/bench_diff.py FRESH.json COMMITTED.json
@@ -146,11 +160,9 @@ def comparable(fresh_cfg: dict, committed_cfg: dict) -> bool:
                          "smoke", "timed_steps"))
 
 
-def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
-         ) -> list:
-    """Returns a list of human-readable findings (empty = pass)."""
+def _schema_findings(fresh: dict, committed: dict) -> list:
+    """Shared family/version/section checks (step 1 for every family)."""
     findings = []
-
     f_schema = fresh.get("schema")
     c_schema = committed.get("schema")
     f_ver = _schema_version(f_schema)
@@ -168,6 +180,104 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
     for section in committed:
         if section not in fresh:
             findings.append(f"missing section {section!r}")
+    return findings
+
+
+# ---------------------------------------------------------------------------
+# bench_streaming family
+# ---------------------------------------------------------------------------
+
+def expected_stream_keys(config: dict):
+    """The (workload, partition_rows, prefetch_depth) streaming cells a
+    bench_streaming config promises — judged against the artifact's OWN
+    config, like the scaling family's axes."""
+    return {(wl, part, depth)
+            for wl in config.get("stream_workloads", [])
+            for part in config.get("stream_partition_rows", [])
+            for depth in config.get("stream_depths", [])}
+
+
+def expected_baseline_keys(config: dict):
+    """One fully-resident baseline cell per workload x partition size."""
+    return {(wl, part)
+            for wl in config.get("stream_workloads", [])
+            for part in config.get("stream_partition_rows", [])}
+
+
+def comparable_streaming(fresh_cfg: dict, committed_cfg: dict) -> bool:
+    return all(fresh_cfg.get(k) == committed_cfg.get(k)
+               for k in ("backend", "n_devices", "rows", "features",
+                         "smoke", "n_vdpus", "steps_per_window",
+                         "epochs"))
+
+
+def diff_streaming(fresh: dict, committed: dict, *,
+                   max_regression: float = 2.0) -> list:
+    """bench_streaming/* checks: completeness + overlap floor +
+    regression (see module docstring)."""
+    findings = _schema_findings(fresh, committed)
+    cfg = fresh.get("config", {})
+
+    s_cells = {(c.get("workload"), c.get("partition_rows"),
+                c.get("prefetch_depth")): c
+               for c in fresh.get("streaming", [])}
+    for key in sorted(expected_stream_keys(cfg) - set(s_cells), key=str):
+        findings.append(
+            "missing streaming cell (workload={}, partition_rows={}, "
+            "prefetch_depth={})".format(*key))
+
+    b_cells = {(c.get("workload"), c.get("partition_rows")): c
+               for c in fresh.get("baseline", [])}
+    for key in sorted(expected_baseline_keys(cfg) - set(b_cells),
+                      key=str):
+        findings.append(
+            "missing baseline cell (workload={}, "
+            "partition_rows={})".format(*key))
+
+    # the acceptance gate: prefetch at depth >= floor_depth must hide
+    # at least overlap_floor of the measured ingest behind compute
+    floor = cfg.get("overlap_floor")
+    floor_depth = cfg.get("overlap_floor_depth", 2)
+    if floor is not None:
+        for key, cell in sorted(s_cells.items(), key=str):
+            if key[2] is not None and key[2] >= floor_depth and \
+                    cell.get("ingest_overlap_fraction", 0.0) < floor:
+                findings.append(
+                    "ingest overlap below floor {} at (workload={}, "
+                    "partition_rows={}, prefetch_depth={}): {}".format(
+                        floor, *key,
+                        cell.get("ingest_overlap_fraction")))
+
+    if not comparable_streaming(cfg, committed.get("config", {})):
+        print("bench_diff: configs not comparable (different workload "
+              "size/backend) — regression check skipped", flush=True)
+        return findings
+
+    c_cells = {(c.get("workload"), c.get("partition_rows"),
+                c.get("prefetch_depth")): c
+               for c in committed.get("streaming", [])}
+    for key in sorted(set(s_cells) & set(c_cells), key=str):
+        fresh_sps = s_cells[key].get("steps_per_s", 0.0)
+        committed_sps = c_cells[key].get("steps_per_s", 0.0)
+        if committed_sps > 0 and \
+                fresh_sps * max_regression < committed_sps:
+            findings.append(
+                "streaming throughput regression >{:.1f}x at "
+                "(workload={}, partition_rows={}, prefetch_depth={}): "
+                "{:.1f} -> {:.1f} steps/s".format(
+                    max_regression, *key, committed_sps, fresh_sps))
+    return findings
+
+
+def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
+         ) -> list:
+    """Returns a list of human-readable findings (empty = pass).
+    Dispatches on the fresh artifact's schema family."""
+    f_ver = _schema_version(fresh.get("schema"))
+    if f_ver is not None and f_ver[0] == "bench_streaming":
+        return diff_streaming(fresh, committed,
+                              max_regression=max_regression)
+    findings = _schema_findings(fresh, committed)
 
     f_cells = {_cell_key(c): c for c in fresh.get("throughput", [])}
     missing = expected_keys(fresh.get("config", {})) - set(f_cells)
@@ -239,7 +349,8 @@ def main(argv=None) -> int:
         for item in findings:
             print(f"bench_diff: FAIL {item}", flush=True)
         return 1
-    n = len(fresh.get("throughput", []))
+    n = len(fresh.get("throughput", []) or
+            fresh.get("streaming", []))
     print(f"bench_diff: OK ({n} cells checked)", flush=True)
     return 0
 

@@ -152,6 +152,10 @@ class Workload:
 
     name: str = "workload"
     merge_caps: MergeCaps = MergeCaps()
+    # serving capability: False marks host-only forward passes (dtree's
+    # numpy searchsorted binning) that the compiled PredictRunner must
+    # refuse with a clear error instead of silently dispatching eagerly
+    predict_device: bool = True
 
     # -- protocol ------------------------------------------------------
 
@@ -173,6 +177,23 @@ class Workload:
 
     def eval(self, state, X, y=None) -> dict:
         raise NotImplementedError
+
+    def predict(self, state, X):
+        """The serving-side forward pass: raw predictions for a batch of
+        rows — exactly the forward half of :meth:`eval` (same sigmoid /
+        softmax variant, same quantized dots), without the metric
+        reduction.  fp32 configurations are bit-exact with the
+        ``*_predict`` helpers ``eval`` calls; quantized configurations
+        run the same fixed-point recipe as ``local_step``'s forward
+        (per-feature dataset quantization, data scale folded into the
+        requantized weight, integer dots on ``fxp_matmul``).
+
+        Must be *pad-invariant*: appending zero rows to ``X`` never
+        changes the predictions of the real rows (the serving runner
+        pads requests up to bucket shapes and slices the result).
+        """
+        raise NotImplementedError(
+            f"workload {self.name!r} does not implement predict")
 
     # -- streaming protocol (out-of-core; opt-in) ----------------------
 

@@ -147,6 +147,9 @@ class DecisionTree(api.Workload):
     merge_caps = api.MergeCaps.exact_only(
         "discrete split commits cannot be averaged across vDPUs "
         "(the level's argmax consumes the exact merged histogram)")
+    # the forward pass bins features with numpy searchsorted — a host
+    # loop the compiled serving runner cannot trace
+    predict_device = False
 
     # -- protocol ------------------------------------------------------
     #
@@ -183,6 +186,12 @@ class DecisionTree(api.Workload):
             pred = dtree_predict(state, X)
             out["accuracy"] = float(jnp.mean(pred == jnp.asarray(y)))
         return out
+
+    def predict(self, state, X):
+        """Class predictions — the same :func:`dtree_predict` ``eval``
+        scores with.  Host-only (``predict_device = False``): binning
+        runs numpy ``searchsorted`` per feature."""
+        return dtree_predict(state, X)
 
     # -- the level-wise training loop ----------------------------------
 

@@ -86,11 +86,13 @@ class KMeans(api.Workload):
                                               bits)}
 
     def stream_transform(self, consts, X_rows, y_rows):
+        # numpy quantization: keeps the Prefetcher worker JAX-free and
+        # stages int8/int16 H2D bytes (see quantize_fixed_scale_np)
         if self.precision == "fp32":
             return (X_rows,)
         bits = {"int16": 16, "int8": 8}[self.precision]
-        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
-                                        bits).values,)
+        return (qz.quantize_fixed_scale_np(X_rows, consts["x_scale"],
+                                           bits),)
 
     def init_state(self, consts):
         return consts["_c0"]
@@ -119,6 +121,20 @@ class KMeans(api.Workload):
         assign = kmeans_assign_points(state, X)
         d2 = jnp.sum((jnp.asarray(X) - state[assign]) ** 2)
         return {"sse": float(d2)}
+
+    def predict(self, state, X):
+        """Serving nearest-centroid assignment — bit-exact with the
+        :func:`kmeans_assign_points` ``eval`` uses (both delegate to
+        ``dispatch.nearest_centroid``).  Quantized configurations mirror
+        ``local_step``'s dequantize-on-stream: the request rows are
+        quantized on the per-feature grid and dequantized before the
+        distance reduction."""
+        X = jnp.asarray(X)
+        if self.precision != "fp32":
+            bits = {"int16": 16, "int8": 8}[self.precision]
+            Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+            X = Xq.values.astype(jnp.float32) * Xq.scale
+        return dispatch.nearest_centroid(X, state)
 
 
 def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
@@ -150,6 +166,6 @@ def train_kmeans(grid: PimGrid, X: jax.Array, k: int, *,
 
 
 def kmeans_assign_points(centroids: jax.Array, X: jax.Array) -> jax.Array:
-    xc = X @ centroids.T
-    c2 = jnp.sum(centroids * centroids, axis=1)
-    return jnp.argmin(c2[None, :] - 2.0 * xc, axis=1)
+    """Nearest-centroid assignment (``dispatch.nearest_centroid`` with
+    the historical argument order kept for eval/test call sites)."""
+    return dispatch.nearest_centroid(jnp.asarray(X), centroids)

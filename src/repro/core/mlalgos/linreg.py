@@ -85,12 +85,17 @@ class LinReg(api.Workload):
                 "y_scale": qz.symmetric_scale(stream.label_absmax(), 16)}
 
     def stream_transform(self, consts, X_rows, y_rows):
+        # numpy mirror of quantize_fixed_scale: this runs on the
+        # Prefetcher worker thread, which must stay JAX-free (a JAX
+        # dispatch there serializes behind the compiled scan) — and the
+        # staged window ships int8/int16 bytes over H2D, not float32
         if self.precision == "fp32":
             return X_rows, y_rows
         bits = {"int16": 16, "int8": 8}[self.precision]
-        Xq = qz.quantize_fixed_scale(X_rows, consts["x_scale"], bits)
-        yq = qz.quantize_fixed_scale(y_rows, consts["y_scale"], 16)
-        return Xq.values, yq.values
+        return (qz.quantize_fixed_scale_np(X_rows, consts["x_scale"],
+                                           bits),
+                qz.quantize_fixed_scale_np(y_rows, consts["y_scale"],
+                                           16))
 
     def init_state(self, consts):
         return jnp.zeros((consts["d"],), jnp.float32)
@@ -136,6 +141,22 @@ class LinReg(api.Workload):
         if y is not None:
             out["mse"] = float(jnp.mean((pred - y) ** 2))
         return out
+
+    def predict(self, state, X):
+        """Serving forward pass.  fp32 is bit-exact with the
+        :func:`linreg_predict` ``eval`` uses; the quantized paths run
+        ``local_step``'s forward recipe (per-feature dataset scales,
+        data scale folded into the 16-bit requantized weight, integer
+        dot on ``fxp_matmul``).  Pad-invariant: zero rows never move a
+        per-feature absmax."""
+        X = jnp.asarray(X)
+        if self.precision == "fp32":
+            return linreg_predict(state, X)
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+        wq = qz.quantize_symmetric(state * Xq.scale[0], bits=16)
+        acc = dispatch.hybrid_matmul(Xq.values, wq.values[:, None])[:, 0]
+        return acc * wq.scale
 
 
 def make_linreg_step(grid: PimGrid, X: jax.Array, y: jax.Array, *,

@@ -93,11 +93,13 @@ class LogReg(api.Workload):
                                               bits)}
 
     def stream_transform(self, consts, X_rows, y_rows):
+        # numpy quantization: keeps the Prefetcher worker JAX-free and
+        # stages int8/int16 H2D bytes (see quantize_fixed_scale_np)
         if self.precision == "fp32":
             return X_rows, y_rows
         bits = {"int16": 16, "int8": 8}[self.precision]
-        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
-                                        bits).values, y_rows)
+        return (qz.quantize_fixed_scale_np(X_rows, consts["x_scale"],
+                                           bits), y_rows)
 
     def init_state(self, consts):
         return jnp.zeros((consts["d"],), jnp.float32)
@@ -139,6 +141,25 @@ class LogReg(api.Workload):
         if y is not None:
             out["accuracy"] = accuracy(state, X, y)
         return out
+
+    def predict(self, state, X):
+        """Serving probabilities through the configured sigmoid (exact /
+        LUT / taylor — the LUT variant routes through the
+        ``lut_activation`` Pallas kernel exactly as in training).  The
+        ``exact``+fp32 configuration is bit-exact with
+        :func:`logreg_predict`; quantized logits run ``local_step``'s
+        integer forward on ``fxp_matmul``."""
+        X = jnp.asarray(X)
+        sig = make_sigmoid(self.sigmoid, self.lut_entries)
+        if self.precision == "fp32":
+            z = X @ state
+        else:
+            bits = {"int16": 16, "int8": 8}[self.precision]
+            Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+            wq = qz.quantize_symmetric(state * Xq.scale[0], bits=16)
+            z = dispatch.hybrid_matmul(Xq.values, wq.values[:, None])[:, 0] \
+                * wq.scale
+        return sig(z)
 
     def spec_fns(self, *, features: int, rows: int):
         """Spec-level engine fns for lowering without resident data

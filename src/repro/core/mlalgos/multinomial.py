@@ -104,9 +104,11 @@ class MultinomialLogReg(api.Workload):
         yi = np.asarray(y_rows, np.int32)     # same cast as prepare
         if self.precision == "fp32":
             return X_rows, yi
+        # numpy quantization: keeps the Prefetcher worker JAX-free and
+        # stages int8/int16 H2D bytes (see quantize_fixed_scale_np)
         bits = {"int16": 16, "int8": 8}[self.precision]
-        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
-                                        bits).values, yi)
+        return (qz.quantize_fixed_scale_np(X_rows, consts["x_scale"],
+                                           bits), yi)
 
     def init_state(self, consts):
         return jnp.zeros((consts["d"], self.n_classes), jnp.float32)
@@ -148,6 +150,24 @@ class MultinomialLogReg(api.Workload):
         if y is not None:
             out["accuracy"] = multinomial_accuracy(state, X, y)
         return out
+
+    def predict(self, state, X):
+        """Serving class probabilities ``(n, C)`` through the configured
+        softmax (the ``lut`` variant evaluates exp on the Pallas LUT
+        kernel, as in training).  ``exact``+fp32 is bit-exact with
+        :func:`multinomial_predict`; quantized logits run
+        ``local_step``'s integer matmul on ``fxp_matmul``."""
+        X = jnp.asarray(X)
+        sm = make_softmax(self.softmax, self.lut_entries)
+        if self.precision == "fp32":
+            Z = X @ state
+        else:
+            bits = {"int16": 16, "int8": 8}[self.precision]
+            Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+            Wq = qz.quantize_symmetric(state * Xq.scale[0][:, None],
+                                       bits=16)
+            Z = dispatch.hybrid_matmul(Xq.values, Wq.values) * Wq.scale
+        return sm(Z)
 
     def spec_fns(self, *, features: int, rows: int):
         """Spec-level engine fns for ``launch.dryrun_pim`` (unit

@@ -83,9 +83,11 @@ class LinearSVM(api.Workload):
         ys = np.where(np.asarray(y_rows) > 0, 1.0, -1.0).astype(np.float32)
         if self.precision == "fp32":
             return X_rows, ys
+        # numpy quantization: keeps the Prefetcher worker JAX-free and
+        # stages int8/int16 H2D bytes (see quantize_fixed_scale_np)
         bits = {"int16": 16, "int8": 8}[self.precision]
-        return (qz.quantize_fixed_scale(X_rows, consts["x_scale"],
-                                        bits).values, ys)
+        return (qz.quantize_fixed_scale_np(X_rows, consts["x_scale"],
+                                           bits), ys)
 
     def init_state(self, consts):
         return jnp.zeros((consts["d"],), jnp.float32)
@@ -125,6 +127,19 @@ class LinearSVM(api.Workload):
         if y is not None:
             out["accuracy"] = svm_accuracy(state, X, y)
         return out
+
+    def predict(self, state, X):
+        """Serving decision values (sign = class).  fp32 is bit-exact
+        with the :func:`svm_predict` ``eval`` uses; quantized margins
+        run ``local_step``'s integer forward on ``fxp_matmul``."""
+        X = jnp.asarray(X)
+        if self.precision == "fp32":
+            return svm_predict(state, X)
+        bits = {"int16": 16, "int8": 8}[self.precision]
+        Xq = qz.quantize_symmetric(X, bits=bits, axis=0)
+        wq = qz.quantize_symmetric(state * Xq.scale[0], bits=16)
+        return dispatch.hybrid_matmul(Xq.values, wq.values[:, None])[:, 0] \
+            * wq.scale
 
     def spec_fns(self, *, features: int, rows: int):
         """Spec-level engine fns for ``launch.dryrun_pim`` (unit

@@ -25,6 +25,7 @@ from typing import Tuple
 
 import jax
 import jax.numpy as jnp
+import numpy as _np
 
 # ---------------------------------------------------------------------------
 # Q-format fixed point
@@ -204,6 +205,37 @@ def quantize_fixed_scale(x: jax.Array, scale: jax.Array,
     q = jnp.round(x / scale)
     dtype = _INT_DTYPES[bits] if bits in _INT_DTYPES else jnp.int32
     return Quantized(jnp.clip(q, -qmax - 1, qmax).astype(dtype), scale)
+
+
+_NP_INT_DTYPES = {8: _np.int8, 16: _np.int16, 32: _np.int32,
+                  64: _np.int64}
+
+
+def quantize_fixed_scale_np(x, scale, bits: int = 8) -> "_np.ndarray":
+    """Numpy mirror of :func:`quantize_fixed_scale` — bit-identical
+    integer output, zero JAX dispatch.
+
+    The streaming workloads' ``stream_transform`` runs on the
+    Prefetcher's worker thread, and a JAX execution issued there
+    serializes behind the main thread's compiled training scan (see
+    ``data.pipeline.PartitionRotation.schedule``).  Quantizing the
+    window in numpy keeps the worker JAX-free: the gather buffer is
+    divided / rounded / clipped on the host and only the int8/int16
+    result is staged — the H2D transfer ships the narrow bytes, never a
+    float32 window.
+
+    Bit-parity holds because both paths run the same sequence in IEEE
+    float32 — divide, round half-to-even (``np.round`` == XLA's
+    ``round_nearest_even``), clip to ``[-qmax-1, qmax]``, narrow cast —
+    and ``tests/test_pipeline.py`` pins it against random draws
+    including exact .5 ties.
+    """
+    x = _np.asarray(x, _np.float32)
+    qmax = 2 ** (bits - 1) - 1
+    scale = _np.asarray(scale, _np.float32)
+    q = _np.round(x / scale)
+    dtype = _NP_INT_DTYPES.get(bits, _np.int32)
+    return _np.clip(q, -qmax - 1, qmax).astype(dtype)
 
 
 def symmetric_scale(amax, bits: int = 8) -> jax.Array:

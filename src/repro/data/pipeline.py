@@ -53,6 +53,19 @@ workload shape:
   never changes shape across a swap.  EF / momentum buffers continue
   across windows through the ``merge_state`` holder exactly as they
   continue across fits.
+* **quantized staging on the worker thread.**  The int8/int16
+  workloads quantize each window *inside* ``stream_transform`` using
+  the numpy mirror of ``quantize_fixed_scale``
+  (``core.quantize.quantize_fixed_scale_np``) against the one-pass
+  global scales from ``feature_absmax``/``label_absmax`` — so the
+  Prefetcher worker never issues a JAX execution (which would
+  serialize behind the main thread's compiled scan, see
+  ``PartitionRotation.schedule``) and the staged H2D transfer ships
+  the narrow integer bytes (half / quarter the float32 window).  The
+  numpy and jnp paths are bit-identical (same IEEE float32
+  divide / round-half-even / clip sequence; pinned by
+  ``tests/test_pipeline.py``), so streamed quantized fits stay
+  bit-for-bit the resident ones.
 * **prefetch double-buffering.**  While window ``t`` computes, a
   ``Prefetcher`` worker gathers window ``t+1`` on the host (into a
   reused staging ring — rotation never reallocates the gather buffers)

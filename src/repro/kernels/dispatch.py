@@ -169,6 +169,25 @@ def kmeans_partials(x: jax.Array, centroids: jax.Array, w: jax.Array):
     return _ref.kmeans_assign_ref(x, centroids, w)
 
 
+def nearest_centroid(x: jax.Array, centroids: jax.Array) -> jax.Array:
+    """Per-row nearest-centroid assignment — the serving-side companion
+    of :func:`kmeans_partials`.  The training kernel fuses the same
+    distance reduction (``|c|² − 2·x·cᵀ``; ``|x|²`` is assignment-
+    invariant) straight into per-cluster sums/counts and never exposes
+    the argmin, so inference shares the distance *expression* rather
+    than the kernel: one MXU-shaped Gram matmul plus an argmin.
+
+    >>> import jax.numpy as jnp
+    >>> from repro.kernels import dispatch
+    >>> x = jnp.array([[0.1, 0.0], [3.9, 4.2]])
+    >>> c = jnp.array([[0.0, 0.0], [4.0, 4.0]])
+    >>> [int(a) for a in dispatch.nearest_centroid(x, c)]
+    [0, 1]
+    """
+    c2 = jnp.sum(centroids * centroids, axis=1)
+    return jnp.argmin(c2[None, :] - 2.0 * (x @ centroids.T), axis=1)
+
+
 # ---------------------------------------------------------------------------
 # level_histogram — dtree split statistics
 # ---------------------------------------------------------------------------

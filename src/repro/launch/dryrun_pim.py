@@ -147,23 +147,34 @@ def build(multi_pod: bool, n_vdpus: int = 4096, rows: int = 1 << 24,
         preset = tuning.AutoTune()
         model = tuning.CostModel.for_fit(grid, local_fn, update_fn,
                                          w_spec, data_spec)
+        # the candidate grid is (wire format x overlap); the table
+        # enumerates the unique wires against both overlap settings
         choices = tuning.candidate_choices(preset, compression)
+        wires, seen = [], set()
+        for c in choices:
+            wt = tuning.compression_tag(c.compression)
+            if wt not in seen:
+                seen.add(wt)
+                wires.append(c.compression)
         cadences = tuning.cadence_ladder(max(merge_every, 1),
                                          preset.k_max, preset.growth)
-        table = model.table(cadences=cadences, compressions=choices)
+        table = model.table(
+            cadences=cadences, compressions=wires,
+            overlaps=tuple(sorted({c.overlap for c in choices})))
         best = table[0]
         extra["auto_plan"] = {
             "chosen": {"cadence": int(best["cadence"]),
-                       "compression": best["compression"]},
+                       "compression": best["compression"],
+                       "overlap": bool(best["overlap"])},
             "wire_bytes_by_format": {
-                tuning.compression_tag(c): int(model.wire_bytes(c))
-                for c in choices},
+                tuning.compression_tag(w): int(model.wire_bytes(w))
+                for w in wires},
             "cost_table": table,
         }
         merge_every = int(best["cadence"])
-        compression = {tuning.compression_tag(c): c
-                       for c in choices}[best["compression"]]
-        overlap = False
+        compression = {tuning.compression_tag(w): w
+                       for w in wires}[best["compression"]]
+        overlap = bool(best["overlap"])
         force_pipeline = True      # auto fits run the state-wire
         # pipeline runner whatever the chosen wire format
     elif plan_name != "avg":

@@ -1,0 +1,145 @@
+"""Model registry: checkpoint-backed model versions behind an atomic
+hot-swap.
+
+The registry owns the serve path's *state* axis the way the
+:class:`~repro.serving.runner.PredictRunner` owns its *shape* axis: it
+loads Trainer checkpoints through :class:`~repro.checkpoint.manager.
+CheckpointManager`'s sha256-manifest validation (corrupt steps are
+refused exactly as the training restore path refuses them), accepts
+both checkpoint layouts (a bare state pytree, or the Trainer's v2
+``{"model": state, "merge_*": ...}`` wrapping — the model subtree is
+selected by manifest name), and publishes each version as a fresh
+``(version, PredictRunner)`` pair swapped under a lock.
+
+Swap semantics — **no in-flight request is ever dropped**: callers take
+an atomic snapshot with :meth:`current` and serve the whole micro-batch
+from it.  A concurrent swap replaces the registry's pointer, not the
+snapshot — jax arrays are immutable and the superseded runner stays
+alive until its last holder finishes.  Because the runner's compiled
+executables key on the workload config and the state *shapes* (never
+the state values), a hot-swap to a same-shaped new version reuses every
+compiled bucket: zero recompiles on model updates.
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import threading
+from typing import Any, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint.manager import (CheckpointManager,
+                                      CheckpointCorruptError,
+                                      _flatten_with_names)
+from repro.serving.runner import DEFAULT_BUCKETS, PredictRunner
+
+
+class ModelRegistry:
+    """Versioned models for one workload; versions come from a
+    checkpoint directory (:meth:`refresh` / :meth:`load_step`) or are
+    pushed directly (:meth:`publish`)."""
+
+    def __init__(self, workload, template: Any, *,
+                 ckpt_dir: Optional[str] = None,
+                 grid=None, buckets: Sequence[int] = DEFAULT_BUCKETS):
+        self.workload = workload
+        self.template = template
+        self.grid = grid
+        self.buckets = tuple(buckets)
+        self._mgr = (CheckpointManager(ckpt_dir, async_save=False)
+                     if ckpt_dir is not None else None)
+        self._lock = threading.Lock()
+        self._current: Optional[tuple] = None   # (version, runner)
+
+    # -- the swap ------------------------------------------------------
+
+    def publish(self, state, version: int) -> PredictRunner:
+        """Build a runner for ``state`` and atomically make it the
+        current version.  In-flight holders of the previous runner keep
+        serving from it."""
+        runner = PredictRunner(self.workload, state, grid=self.grid,
+                               buckets=self.buckets)
+        with self._lock:
+            self._current = (int(version), runner)
+        return runner
+
+    def current(self) -> tuple:
+        """Atomic ``(version, runner)`` snapshot — take it once per
+        micro-batch so a mid-batch swap cannot split the batch across
+        model versions."""
+        with self._lock:
+            if self._current is None:
+                raise RuntimeError(
+                    "registry has no published version — call refresh() "
+                    "or publish() first")
+            return self._current
+
+    @property
+    def version(self) -> Optional[int]:
+        with self._lock:
+            return self._current[0] if self._current else None
+
+    # -- checkpoint loading --------------------------------------------
+
+    def _restore_state(self, step: int):
+        """Model subtree of checkpoint ``step``, via the manager's
+        sha256 validation.  Accepts the bare (v1) layout and the
+        Trainer's v2 ``{"model": ..., "merge_*": ...}`` wrapping."""
+        mgr = self._mgr
+        if not mgr.validate(step):
+            raise CheckpointCorruptError(
+                f"checkpoint step {step} failed checksum/readability "
+                f"validation")
+        path = mgr._step_path(step)
+        with open(os.path.join(path, "manifest.json")) as f:
+            meta = json.load(f)
+        names = meta["names"]
+        tnames, tleaves, treedef = _flatten_with_names(self.template)
+        if names == tnames:
+            idxs = list(range(len(names)))
+        else:
+            prefixed = [f"['model']{n}" for n in tnames]
+            if all(p in names for p in prefixed):
+                idxs = [names.index(p) for p in prefixed]
+            else:
+                raise ValueError(
+                    f"checkpoint step {step} holds neither the bare "
+                    f"state layout nor a ['model'] subtree matching the "
+                    f"template: {names} vs {tnames}")
+        with np.load(os.path.join(path, "arrays.npz")) as data:
+            leaves = [jnp.asarray(data[f"a{i}"],
+                                  dtype=jnp.asarray(t).dtype)
+                      for i, t in zip(idxs, tleaves)]
+        return (jax.tree_util.tree_unflatten(treedef, leaves),
+                meta.get("extra", {}))
+
+    def load_step(self, step: int) -> PredictRunner:
+        """Load one checkpoint step and publish it as that version."""
+        if self._mgr is None:
+            raise RuntimeError("registry was built without a ckpt_dir")
+        state, extra = self._restore_state(step)
+        runner = self.publish(state, version=step)
+        runner.extra = extra
+        return runner
+
+    def refresh(self) -> Optional[int]:
+        """Publish the newest valid checkpoint if it is newer than the
+        current version; corrupt steps are skipped (the manager's
+        newest-valid semantics).  Returns the published version, or the
+        unchanged current version when there is nothing newer."""
+        if self._mgr is None:
+            raise RuntimeError("registry was built without a ckpt_dir")
+        cur = self.version
+        for step in reversed(self._mgr.steps()):
+            if cur is not None and step <= cur:
+                break
+            try:
+                self.load_step(step)
+                return step
+            except CheckpointCorruptError:
+                continue
+        return cur

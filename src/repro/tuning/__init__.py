@@ -40,7 +40,9 @@ _LAZY = {
     "CostModel": ("repro.tuning.cost", "CostModel"),
     "compression_tag": ("repro.tuning.cost", "compression_tag"),
     "AutoTune": ("repro.tuning.controller", "AutoTune"),
+    "PlanChoice": ("repro.tuning.controller", "PlanChoice"),
     "PlanController": ("repro.tuning.controller", "PlanController"),
+    "choice_tag": ("repro.tuning.controller", "choice_tag"),
     "auto_plan": ("repro.tuning.controller", "auto_plan"),
     "cadence_ladder": ("repro.tuning.controller", "cadence_ladder"),
     "candidate_choices": ("repro.tuning.controller",

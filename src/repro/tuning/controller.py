@@ -18,13 +18,21 @@ preset over it) together with wire-format selection:
   (exploration would eat the budget); long fits probe the top
   candidates once each and exploit the measured winner.
 
+* **overlap** — the deferred-commit merge pipeline (insight I5) is a
+  third candidate axis: every wire format is offered with and without
+  it (:class:`PlanChoice` crosses the two).  The prior never predicts
+  an overlap win on a single-chip grid (there is no second stream to
+  hide merge time in — ``CostModel.predict``); a probe round measures
+  it like any other candidate, so only real wall-clock evidence can
+  promote ``overlap=True``.
+
 ``run_controlled_fit`` is the fit driver for adaptive and auto plans:
 one merge round per dispatch while the controller is still deciding
 (always on the state wire, so the error-feedback buffer never changes
 shape across candidate switches), multi-round held dispatches once it
-has settled.  Every distinct ``(k, compression)`` compiles once —
-revisits ride the grid's runner cache, shared with the static-plan
-runners since the commit is the plain average.
+has settled.  Every distinct ``(k, compression, overlap)`` compiles
+once — revisits ride the grid's runner cache, shared with the
+static-plan runners since the commit is the plain average.
 
 Decision traces land in ``merge_state["tuning_trace"]`` (see
 ``docs/ARCHITECTURE.md`` "Self-tuning") so every choice is reproducible
@@ -107,6 +115,34 @@ def auto_plan(**kwargs) -> "mp.MergePlan":
     return mp.MergePlan(outer=AutoTune(**kwargs))
 
 
+@dataclasses.dataclass(frozen=True)
+class PlanChoice:
+    """One point on the controller's candidate grid: a wire format
+    crossed with the overlap axis.  ``overlap=True`` dispatches rounds
+    through the deferred-commit pipeline (``pipeline_runners``'s
+    prologue/runner/drain triple — the paper's I5), hiding merge time
+    behind the next round's local compute on grids that actually have
+    two execution streams."""
+
+    compression: Optional[CompressionConfig] = None
+    overlap: bool = False
+
+
+def as_choice(c) -> PlanChoice:
+    """Normalize a legacy bare ``CompressionConfig | None`` candidate
+    to a :class:`PlanChoice` (overlap off)."""
+    return c if isinstance(c, PlanChoice) else PlanChoice(compression=c)
+
+
+def choice_tag(choice) -> str:
+    """Compact label for a candidate: the wire's ``compression_tag``
+    plus an ``+ov`` suffix when the overlap pipeline is on —
+    ``"exact"``, ``"int8+ov"``, ``"top0.25@int8"``."""
+    ch = as_choice(choice)
+    base = compression_tag(ch.compression)
+    return base + "+ov" if ch.overlap else base
+
+
 def cadence_ladder(k0: int, k_max: int, growth: int) -> List[int]:
     """The cadences a controller can visit: ``k0, k0*growth, ...``
     capped at ``k_max`` (the cost table enumerates exactly these)."""
@@ -152,7 +188,9 @@ class PlanController:
         self._stable = 0
         self.cadence_trace: List[int] = [self.k]
 
-        self.choices = list(choices)
+        # candidates are (wire format, overlap) points; legacy bare
+        # compression configs normalize to overlap-off choices
+        self.choices = [as_choice(c) for c in choices]
         self.prior_margin = float(prior_margin)
         self.prior = dict(prior or {})          # tag -> predicted us/step
         self.measured: dict = {}                # tag -> best measured us/step
@@ -163,7 +201,7 @@ class PlanController:
         # controller commits to the measured winner
         order = sorted(range(len(self.choices)),
                        key=lambda i: self.prior.get(
-                           compression_tag(self.choices[i]), float(i)))
+                           choice_tag(self.choices[i]), float(i)))
         self._pending: List[int] = list(order) if explore_rounds > 0 \
             and len(self.choices) > 1 else []
         self._probe_left = {i: int(explore_rounds) for i in self._pending}
@@ -220,18 +258,19 @@ class PlanController:
         elif self._explored and self.measured:
             self.choice = min(
                 self.choices,
-                key=lambda c: self.measured.get(compression_tag(c),
+                key=lambda c: self.measured.get(choice_tag(c),
                                                 float("inf")))
         elif len(self.choices) > 1:
             best = min(
                 self.choices,
-                key=lambda c: self.prior.get(compression_tag(c),
+                key=lambda c: self.prior.get(choice_tag(c),
                                              float("inf")))
+            exact = PlanChoice()
             exact_us = self.prior.get("exact", float("inf"))
-            best_us = self.prior.get(compression_tag(best), float("inf"))
-            if None in self.choices and exact_us < float("inf") and \
+            best_us = self.prior.get(choice_tag(best), float("inf"))
+            if exact in self.choices and exact_us < float("inf") and \
                     not best_us < exact_us * (1.0 - self.prior_margin):
-                best = None
+                best = exact
             self.choice = best
         else:
             self.choice = self.choices[0]
@@ -241,15 +280,15 @@ class PlanController:
         """Feed one dispatched round's outcome: non-warmup timings
         update the measured table (and retire exploration probes);
         the delta norm feeds the cadence rule."""
-        tag = compression_tag(choice if choice is not None
-                              else self.choice)
+        tag = choice_tag(choice if choice is not None
+                         else self.choice)
         if not m.warmup:
             us = m.us_per_step()
             cur = self.measured.get(tag)
             self.measured[tag] = us if cur is None else min(cur, us)
             if self._pending:
                 head = self._pending[0]
-                if compression_tag(self.choices[head]) == tag:
+                if choice_tag(self.choices[head]) == tag:
                     self._probe_left[head] -= 1
                     if self._probe_left[head] <= 0:
                         self._pending.pop(0)
@@ -264,13 +303,14 @@ class PlanController:
 
     def chosen(self) -> dict:
         return {"cadence": int(self.k),
-                "compression": compression_tag(self.choice)}
+                "compression": choice_tag(self.choice),
+                "overlap": bool(as_choice(self.choice).overlap)}
 
     def trace_dict(self) -> dict:
         """The ``merge_state["tuning_trace"]`` payload: everything
         needed to replay the decision sequence offline."""
         return {
-            "choices": [compression_tag(c) for c in self.choices],
+            "choices": [choice_tag(c) for c in self.choices],
             "prior_margin": self.prior_margin,
             "prior_us_per_step": {t: round(v, 3)
                                   for t, v in self.prior.items()},
@@ -283,15 +323,24 @@ class PlanController:
         }
 
 
-def candidate_choices(preset, compression) -> list:
-    """The wire-format candidate set for one controlled fit: pinned to
-    the plan's compression when given, else exact / int8 / the adaptive
-    top-k ladder."""
+def candidate_choices(preset, compression,
+                      overlaps=(False, True)) -> list:
+    """The candidate grid for one controlled fit: wire formats crossed
+    with the overlap axis.  A pinned compression (or a non-auto preset)
+    collapses the grid to that single overlap-off choice — pinning
+    leaves only cadence to the controller, exactly as before the
+    overlap axis existed.  Unpinned auto fits get exact / int8 / the
+    adaptive top-k ladder, each with and without the deferred-commit
+    overlap pipeline (each overlap variant costs one probe round on
+    exploring fits; the prior ties it with its non-overlap twin on
+    single-chip grids, where there is no second stream to hide merge
+    time in — see ``CostModel.predict``)."""
     if compression is not None or not getattr(preset, "is_auto", False):
-        return [compression]
-    return [None, CompressionConfig(bits=preset.bits),
-            *comp.top_k_ladder(preset.top_k_frac, bits=preset.bits,
-                               rungs=preset.top_k_rungs)]
+        return [PlanChoice(compression)]
+    wires = [None, CompressionConfig(bits=preset.bits),
+             *comp.top_k_ladder(preset.top_k_frac, bits=preset.bits,
+                                rungs=preset.top_k_rungs)]
+    return [PlanChoice(w, ov) for w in wires for ov in overlaps]
 
 
 def run_controlled_fit(grid, plan, *, state, ef, local_fn, update_fn,
@@ -321,18 +370,27 @@ def run_controlled_fit(grid, plan, *, state, ef, local_fn, update_fn,
         skey = ("tuning_setup", mp.fn_signature(local_fn),
                 mp.fn_signature(update_fn), kernels_enabled(),
                 int(plan.cadence), int(preset.k_max), int(preset.growth),
-                tuple(compression_tag(c) for c in choices))
+                tuple(choice_tag(c) for c in choices))
         setup = mp.cache_get(grid, skey)
         if setup is None:
             model = CostModel.for_fit(grid, local_fn, update_fn, state,
                                       data)
             for c in choices:
-                m = model.prediction(cadence=plan.cadence, compression=c)
-                prior[compression_tag(c)] = m.us_per_step()
+                m = model.prediction(cadence=plan.cadence,
+                                     compression=c.compression,
+                                     overlap=c.overlap)
+                prior[choice_tag(c)] = m.us_per_step()
+            wires, seen_w = [], set()
+            for c in choices:
+                wt = compression_tag(c.compression)
+                if wt not in seen_w:
+                    seen_w.add(wt)
+                    wires.append(c.compression)
             cost_rows = model.table(
                 cadences=cadence_ladder(plan.cadence, preset.k_max,
                                         preset.growth),
-                compressions=choices)
+                compressions=wires,
+                overlaps=tuple(sorted({c.overlap for c in choices})))
             ef0 = mp.init_merge_error(grid, model.wire)
             mp.cache_put(grid, skey, (model, prior, cost_rows, ef0),
                          local_fn, update_fn)
@@ -354,7 +412,7 @@ def run_controlled_fit(grid, plan, *, state, ef, local_fn, update_fn,
     # one state-shaped EF buffer up front whenever any candidate
     # compresses: every wire format shares it, so the controller can
     # switch mid-fit without reshaping the scan carry
-    need_ef = any(c is not None for c in choices)
+    need_ef = any(c.compression is not None for c in choices)
     if need_ef and ef is None:
         if ef0 is not None and not donating:
             # the runner is functional off-TPU/GPU: the cached zeros
@@ -380,19 +438,30 @@ def run_controlled_fit(grid, plan, *, state, ef, local_fn, update_fn,
     while done < steps:
         k_dec, choice = ctl.decide()
         k = min(k_dec, steps - done)
-        tag = compression_tag(choice)
+        tag = choice_tag(choice)
         rs = mp.pipeline_runners(
-            grid, local_fn, update_fn, merge_every=k, overlap=False,
-            compression=choice, state_wire=True,
-            outer=mp.AverageCommit())
+            grid, local_fn, update_fn, merge_every=k,
+            overlap=choice.overlap, compression=choice.compression,
+            state_wire=True, outer=mp.AverageCommit())
         hold = 1
         if hold_max > 1 and ctl.settled():
             hold = max(1, min(hold_max, (steps - done) // k))
         warm = (k, tag) not in seen_cfg
         seen_cfg.add((k, tag))
         t0 = time.perf_counter()
-        (state, ef, _), stacked = rs["runner"]((state, ef, ()), data,
-                                               length=hold)
+        if choice.overlap:
+            # deferred-commit pipeline, self-contained per dispatch:
+            # prologue computes the first round's pending partials,
+            # each runner round commits round r-1's merge while
+            # computing round r, drain commits the last — so a probe
+            # pays the full pipeline (prologue + drain) it would pay
+            # in production, and the measured time is honest
+            carry = (state, rs["prologue"](state, data), ef, ())
+            carry, stacked = rs["runner"](carry, data, length=hold)
+            state, ef, _ = rs["drain"](carry)
+        else:
+            (state, ef, _), stacked = rs["runner"]((state, ef, ()),
+                                                   data, length=hold)
         for r in range(hold):
             for j in range(k):
                 metrics = jax.tree.map(lambda x, r=r, j=j: x[r, j],
@@ -406,14 +475,16 @@ def run_controlled_fit(grid, plan, *, state, ef, local_fn, update_fn,
         # wall-clock below cover the dispatched work)
         dn = float(jnp.sqrt(mp._delta_sq_norm(state, prev)))
         dt = time.perf_counter() - t0
-        meas = Measurement(key=("plan", k, tag, False), seconds=dt,
-                           steps=hold * k, delta_norm=dn, warmup=warm,
-                           source="fit")
+        meas = Measurement(
+            key=("plan", k, compression_tag(choice.compression),
+                 bool(choice.overlap)),
+            seconds=dt, steps=hold * k, delta_norm=dn, warmup=warm,
+            source="fit")
         ctl.observe_round(meas, choice)
         ctl.trace.append({
             "round": round_i, "steps_done": done, "cadence": k,
             "rounds_in_dispatch": hold, "compression": tag,
-            "warmup": warm,
+            "overlap": bool(choice.overlap), "warmup": warm,
             "us_per_step": round(meas.us_per_step(), 3),
             "predicted_us_per_step":
                 round(prior[tag], 3) if tag in prior else None,

@@ -120,13 +120,21 @@ class CostModel:
         the DCN link, where sending fewer bytes is a real saving."""
         encode = 0 if compression is None \
             else self.ENCODE_PASSES * _dense_float_bytes(self.wire)
+        # overlap can only hide merge time behind compute when there is
+        # a second execution stream to hide it in: on a single-chip
+        # (emulated) grid the "wire" is an in-memory reduction on the
+        # same device, so overlap=True buys nothing and the prior must
+        # say so — only a measurement may promote it (the controller's
+        # probe round), never the model
+        hides = overlap and self.n_chips > 1
         row = ra.predict_round(
             self.parsed, n_chips=self.n_chips, cadence=cadence,
-            wire_bytes=self.wire_bytes(compression), overlap=overlap,
+            wire_bytes=self.wire_bytes(compression), overlap=hides,
             baseline_cadence=self.baseline_cadence,
             encode_bytes=encode,
             wire_bw=ra.hw.HBM_BW if self.n_chips == 1 else None)
         row["compression"] = compression_tag(compression)
+        row["overlap"] = bool(overlap)
         return row
 
     def prediction(self, *, cadence: int = 1,

@@ -541,3 +541,106 @@ class TestStreamingDiff:
         with open(path) as f:
             art = json.load(f)
         assert bench_diff.diff(art, art) == []
+
+
+def _serving_artifact(serving=None, saturation=None, *, smoke=True,
+                      p99=20.0, steady_misses=0,
+                      schema="bench_serving/v1"):
+    config = {
+        "backend": "cpu", "n_devices": 1, "smoke": smoke,
+        "rows": 2048, "features": 32, "n_vdpus": 8,
+        "requests": 256, "max_batch": 32, "max_wait_ms": 2.0,
+        "serve_workloads": ["linreg", "svm"],
+        "serve_precisions": ["fp32", "int8"],
+        "serve_loads": [500, 2000],
+    }
+    if serving is None:
+        serving = [
+            {"workload": wl, "precision": prec, "offered_rps": load,
+             "p50_ms": 5.0, "p99_ms": p99, "throughput_rps": load * 0.95,
+             "steady_compile_misses": steady_misses}
+            for wl in ("linreg", "svm") for prec in ("fp32", "int8")
+            for load in (500, 2000)]
+    if saturation is None:
+        saturation = [
+            {"workload": wl, "precision": prec, "rows_per_s": 1e6,
+             "steady_compile_misses": steady_misses}
+            for wl in ("linreg", "svm") for prec in ("fp32", "int8")]
+    return {"schema": schema, "config": config,
+            "serving": serving, "saturation": saturation}
+
+
+class TestServingDiff:
+    """The bench_serving/* family: completeness from the artifact's own
+    serve_* axes, the zero-steady-miss gate, and the inverted (p99
+    latency) regression direction."""
+
+    def test_identical_passes(self):
+        art = _serving_artifact()
+        assert bench_diff.diff(art, art) == []
+
+    def test_cross_family_is_schema_mismatch(self):
+        findings = bench_diff.diff(_serving_artifact(), _artifact())
+        assert any("schema mismatch" in f for f in findings)
+
+    def test_missing_serving_cell_flagged(self):
+        art = _serving_artifact()
+        dropped = _serving_artifact(
+            serving=[c for c in art["serving"]
+                     if not (c["workload"] == "svm"
+                             and c["precision"] == "int8"
+                             and c["offered_rps"] == 2000)])
+        findings = bench_diff.diff(dropped, art)
+        assert any("missing serving cell" in f and "workload=svm" in f
+                   and "precision=int8" in f for f in findings)
+
+    def test_missing_saturation_cell_flagged(self):
+        art = _serving_artifact()
+        dropped = _serving_artifact(
+            saturation=[c for c in art["saturation"]
+                        if c["precision"] != "int8"])
+        findings = bench_diff.diff(dropped, art)
+        assert sum("missing saturation cell" in f for f in findings) == 2
+
+    def test_steady_compile_miss_flagged(self):
+        """The warm-cache acceptance gate: ANY nonzero
+        steady_compile_misses fails, comparable configs or not."""
+        art = _serving_artifact()
+        leaky = _serving_artifact(steady_misses=2, smoke=False)
+        findings = bench_diff.diff(leaky, art)
+        assert any("steady-state compile misses" in f for f in findings)
+
+    def test_p99_regression_direction_inverted(self):
+        """Latency is a lower-is-better metric: a fresh p99 ABOVE
+        max_regression x committed fails; a fresh p99 far below never
+        does."""
+        slow = _serving_artifact(p99=100.0)
+        fast = _serving_artifact(p99=20.0)
+        findings = bench_diff.diff(slow, fast)
+        assert any("p99 latency regression" in f for f in findings)
+        assert bench_diff.diff(fast, slow) == []
+
+    def test_saturation_regression_flagged(self):
+        fresh = _serving_artifact()
+        for c in fresh["saturation"]:
+            c["rows_per_s"] = 1e3
+        findings = bench_diff.diff(fresh, _serving_artifact())
+        assert any("saturation throughput regression" in f
+                   for f in findings)
+
+    def test_regression_skipped_when_not_comparable(self, capsys):
+        fresh = _serving_artifact(p99=500.0)
+        committed = _serving_artifact(smoke=False)
+        findings = bench_diff.diff(fresh, committed)
+        assert findings == []
+        assert "not comparable" in capsys.readouterr().out
+
+    def test_committed_repo_artifact_self_diff(self):
+        """The committed BENCH_serving.json must satisfy its own
+        promises (completeness + zero steady misses)."""
+        import json
+        path = os.path.join(os.path.dirname(__file__), "..",
+                            "BENCH_serving.json")
+        with open(path) as f:
+            art = json.load(f)
+        assert bench_diff.diff(art, art) == []

@@ -228,3 +228,57 @@ class TestPartitionRotation:
         rot = self._rotation()
         rot.prewarm_schedules(range(5000))
         assert len(rot._sched_cache) <= 4096
+
+
+class TestQuantizedStaging:
+    """The per-window numpy quantization path (satellite of the serving
+    PR): ``quantize_fixed_scale_np`` must be bit-identical to the jnp
+    ``quantize_fixed_scale`` it mirrors, and an int8 workload's staged
+    windows must hold the narrow integers (halved H2D bytes) produced
+    without any JAX dispatch on the Prefetcher worker."""
+
+    @pytest.mark.parametrize("bits", [8, 16])
+    def test_np_mirror_bit_parity(self, bits):
+        from repro.core import quantize as qz
+        rng = np.random.default_rng(7)
+        x = (rng.normal(size=(257, 9)) * 3).astype(np.float32)
+        scale = qz.symmetric_scale(
+            np.abs(x).max(axis=0, keepdims=True), bits)
+        # exact .5 ties on the quantized grid: round-half-even must
+        # agree between numpy and XLA
+        x[:5] = np.asarray(scale)[0] * np.array(
+            [0.5, 1.5, -0.5, -2.5, 7.5], np.float32)[:, None]
+        ref = np.asarray(qz.quantize_fixed_scale(x, scale, bits).values)
+        got = qz.quantize_fixed_scale_np(x, scale, bits)
+        assert got.dtype == ref.dtype
+        np.testing.assert_array_equal(got, ref)
+
+    def test_int8_workload_stages_narrow_windows(self):
+        from repro.core.mlalgos.linreg import LinReg
+
+        rng = np.random.default_rng(3)
+        X = rng.normal(size=(96, 5)).astype(np.float32)
+        y = rng.normal(size=96).astype(np.float32)
+        sd = StreamingDataset(X, y, partition_rows=32, shuffle=False)
+        grid = make_cpu_grid(4)
+        prog = LinReg(lr=0.05, precision="int8").bind_stream(grid, sd)
+        host = prog.data.window_host(0)
+        # staged representation is the quantized one: int8 features,
+        # int16 labels, produced as plain numpy (no JAX execution on
+        # the worker thread)
+        assert host["X"].dtype == np.int8
+        assert host["y0"].dtype == np.int16
+        assert isinstance(host["X"], np.ndarray)
+        assert not isinstance(host["X"], jax.Array)
+        # bit-parity with the jnp staging the transform replaces:
+        # reconstruct window 0's gather (slot (v, i) -> row v*per+idx[i])
+        from repro.core import quantize as qz
+        rot = prog.data
+        idx, _ = rot.schedule(0)
+        flat = (np.arange(rot.grid.n_vdpus)[:, None] * rot.per
+                + np.asarray(idx)[None, :]).ravel()
+        consts = LinReg(lr=0.05, precision="int8").stream_consts(sd)
+        rows = np.asarray(qz.quantize_fixed_scale(
+            X[flat], consts["x_scale"], 8).values)
+        np.testing.assert_array_equal(
+            np.asarray(host["X"]).reshape(-1, 5), rows)

@@ -1,0 +1,418 @@
+"""The serving layer: Workload.predict, the bucketed PredictRunner,
+the micro-batching queue, and the checkpoint-backed ModelRegistry."""
+
+import json
+import os
+import threading
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.manager import CheckpointManager
+from repro.core import make_cpu_grid
+from repro.core.mlalgos import api
+from repro.core.mlalgos.dtree import DecisionTree
+from repro.core.mlalgos.kmeans import KMeans, kmeans_assign_points
+from repro.core.mlalgos.linreg import LinReg, linreg_predict
+from repro.core.mlalgos.logreg import LogReg, logreg_predict
+from repro.core.mlalgos.multinomial import (MultinomialLogReg,
+                                            multinomial_predict)
+from repro.core.mlalgos.svm import LinearSVM, svm_predict
+from repro.serving import (Backpressure, MicroBatchQueue, ModelRegistry,
+                           PredictRunner)
+
+N, D = 96, 5
+
+
+def _problem(name, seed=0):
+    key = jax.random.PRNGKey(seed)
+    X = jax.random.normal(key, (N, D))
+    if name == "multinomial":
+        y = jax.random.randint(jax.random.PRNGKey(seed + 1), (N,), 0, 3)
+    elif name in ("logreg", "svm"):
+        y = (jax.random.normal(jax.random.PRNGKey(seed + 1), (N,))
+             > 0).astype(jnp.float32)
+    elif name == "kmeans":
+        y = None
+    else:
+        y = jax.random.normal(jax.random.PRNGKey(seed + 1), (N,))
+    return X, y
+
+
+def _workload(name, precision="fp32"):
+    return {
+        "linreg": lambda: LinReg(lr=0.05, precision=precision),
+        "logreg": lambda: LogReg(lr=0.2, precision=precision),
+        "svm": lambda: LinearSVM(lr=0.05, precision=precision),
+        "multinomial": lambda: MultinomialLogReg(
+            n_classes=3, lr=0.2, precision=precision),
+        "kmeans": lambda: KMeans(k=4, precision=precision),
+    }[name]()
+
+
+def _trained(name, precision="fp32", steps=8):
+    wl = _workload(name, precision)
+    X, y = _problem(name)
+    grid = make_cpu_grid(4)
+    return wl, np.asarray(X, np.float32), \
+        api.fit(wl, grid, X, y, steps=steps).state
+
+
+FWD = {"linreg": linreg_predict, "logreg": logreg_predict,
+       "svm": svm_predict, "multinomial": multinomial_predict,
+       "kmeans": kmeans_assign_points}
+
+
+class TestPredictProtocol:
+    """Workload.predict: bit-exact with the eval forward at fp32, and
+    pad-invariant at every precision (the bucketing contract)."""
+
+    @pytest.mark.parametrize("name", sorted(FWD))
+    def test_fp32_matches_eval_forward(self, name):
+        wl, X, state = _trained(name)
+        np.testing.assert_array_equal(
+            np.asarray(wl.predict(state, X)),
+            np.asarray(FWD[name](state, X)))
+
+    @pytest.mark.parametrize("name", sorted(FWD))
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_pad_invariance(self, name, precision):
+        """Appended zero rows never change the first n outputs — zero
+        rows cannot move a per-feature quantization absmax, and every
+        forward reduction is row-local."""
+        wl, X, state = _trained(name, precision)
+        Xp = np.zeros((X.shape[0] + 13, D), np.float32)
+        Xp[: X.shape[0]] = X
+        np.testing.assert_array_equal(
+            np.asarray(wl.predict(state, X)),
+            np.asarray(wl.predict(state, Xp))[: X.shape[0]])
+
+    def test_dtree_predicts_on_host(self):
+        X, _ = _problem("linreg")
+        y = (np.asarray(X[:, 0]) > 0).astype(np.int32)
+        wl = DecisionTree(max_depth=2, n_classes=2)
+        res = wl.run(make_cpu_grid(4), X, y)
+        pred = wl.predict(res.state, X)
+        assert pred.shape == (N,)
+        assert set(np.asarray(pred).tolist()) <= {0, 1}
+
+    def test_dtree_refused_by_compiled_runner(self):
+        """predict_device=False: the host-loop forward cannot be traced
+        — the runner must refuse it loudly, not crash in jit."""
+        wl = DecisionTree(max_depth=2, n_classes=2)
+        with pytest.raises(ValueError, match="predict_device"):
+            PredictRunner(wl, state=None)
+
+
+class TestPredictRunner:
+    def test_bucketed_predict_matches_direct(self):
+        """Every request size — sub-bucket, exact bucket, oversize
+        split — returns exactly workload.predict on the unpadded
+        rows."""
+        wl, X, state = _trained("linreg")
+        r = PredictRunner(wl, state, buckets=(8, 32))
+        rng = np.random.default_rng(0)
+        for n in (1, 3, 8, 9, 32, 33, 64, 77):
+            Xq = rng.standard_normal((n, D)).astype(np.float32)
+            np.testing.assert_allclose(
+                np.asarray(r.predict(Xq)),
+                np.asarray(wl.predict(state, Xq)), rtol=1e-6)
+
+    def test_int8_bucketed_predict_matches_direct(self):
+        wl, X, state = _trained("svm", "int8")
+        r = PredictRunner(wl, state, buckets=(8, 32))
+        np.testing.assert_allclose(
+            np.asarray(r.predict(X[:11])),
+            np.asarray(wl.predict(state, X[:11])), rtol=1e-6)
+
+    def test_zero_steady_compile_misses(self):
+        """The acceptance gate: after warmup, mixed request sizes —
+        including oversize splits — never compile again."""
+        wl, X, state = _trained("linreg")
+        r = PredictRunner(wl, state, buckets=(8, 32))
+        r.warmup(D)
+        assert r.compile_misses == 2
+        rng = np.random.default_rng(1)
+        for n in (1, 5, 8, 17, 32, 40, 100):
+            r.predict(rng.standard_normal((n, D)).astype(np.float32))
+        assert r.steady_compile_misses == 0
+        assert r.bucket_hits > 0
+
+    def test_bucket_ladder_selection(self):
+        wl, _, state = _trained("linreg")
+        r = PredictRunner(wl, state, buckets=(8, 32, 128))
+        assert r.bucket_for(1) == 8
+        assert r.bucket_for(8) == 8
+        assert r.bucket_for(9) == 32
+        assert r.bucket_for(128) == 128
+        assert r.bucket_for(129) is None
+
+    def test_equal_configs_share_grid_cached_executables(self):
+        """Two runners for equal estimator configs on one grid share
+        compiled buckets — the second runner's warmup is all cache
+        hits (fn_signature keys the workload by value)."""
+        grid = make_cpu_grid(4)
+        wl, X, state = _trained("linreg")
+        a = PredictRunner(LinReg(lr=0.05), state, grid=grid)
+        a.warmup(D)
+        assert a.compile_misses == len(a.buckets)
+        b = PredictRunner(LinReg(lr=0.05), state + 1.0, grid=grid)
+        b.warmup(D)
+        assert b.compile_misses == 0
+
+    def test_state_is_argument_not_constant(self):
+        """A hot-swapped state must change predictions through the SAME
+        executable — the state is never baked in as a constant."""
+        wl, X, state = _trained("linreg")
+        r = PredictRunner(wl, state, buckets=(8,))
+        r.warmup(D)
+        before = np.asarray(r.predict(X[:4]))
+        r.state = jax.tree.map(lambda l: l * 2.0, state)
+        after = np.asarray(r.predict(X[:4]))
+        assert r.steady_compile_misses == 0
+        assert not np.array_equal(before, after)
+
+    def test_run_stream_matches_predict_in_order(self):
+        wl, X, state = _trained("logreg")
+        r = PredictRunner(wl, state, buckets=(8, 32))
+        rng = np.random.default_rng(2)
+        feed = [rng.standard_normal((n, D)).astype(np.float32)
+                for n in (8, 3, 32, 17, 8)]
+        outs = list(r.run_stream(feed))
+        assert len(outs) == len(feed)
+        for Xb, out in zip(feed, outs):
+            np.testing.assert_allclose(np.asarray(out),
+                                       np.asarray(r.predict(Xb)),
+                                       rtol=1e-6)
+
+    def test_run_stream_rejects_oversize(self):
+        wl, _, state = _trained("linreg")
+        r = PredictRunner(wl, state, buckets=(8,))
+        with pytest.raises(ValueError, match="ladder"):
+            list(r.run_stream([np.zeros((9, D), np.float32)]))
+
+    def test_input_validation(self):
+        wl, _, state = _trained("linreg")
+        r = PredictRunner(wl, state)
+        with pytest.raises(ValueError, match="rows, features"):
+            r.predict(np.zeros((D,), np.float32))
+        with pytest.raises(ValueError, match="empty"):
+            r.predict(np.zeros((0, D), np.float32))
+        with pytest.raises(ValueError, match="positive"):
+            PredictRunner(wl, state, buckets=(0, 8))
+
+
+class _StubRunner:
+    """Scriptable predict target for queue tests (no jax dispatch)."""
+
+    def __init__(self, delay_s=0.0, gate=None, fail=False):
+        self.delay_s = delay_s
+        self.gate = gate
+        self.fail = fail
+        self.batch_sizes = []
+
+    def predict(self, X):
+        if self.gate is not None:
+            self.gate.wait()
+        if self.fail:
+            raise RuntimeError("model exploded")
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        self.batch_sizes.append(X.shape[0])
+        return np.asarray(X).sum(axis=1)
+
+
+class TestMicroBatchQueue:
+    def test_results_match_and_latency_recorded(self):
+        q = MicroBatchQueue(_StubRunner(), max_batch=8, max_wait_ms=1.0)
+        rows = np.arange(20, dtype=np.float32).reshape(5, 4)
+        tickets = [q.submit(r) for r in rows]
+        got = np.asarray([t.get(timeout=10.0) for t in tickets])
+        np.testing.assert_allclose(got, rows.sum(axis=1))
+        q.close()
+        s = q.stats()
+        assert s["requests"] == 5
+        assert all(t.latency_s >= 0 for t in tickets)
+        assert "p50_ms" in s and "p99_ms" in s
+
+    def test_backlog_coalesces_into_batches(self):
+        """With the worker busy on a slow batch, followers pile up and
+        must be served together — the coalescing win under load."""
+        stub = _StubRunner(delay_s=0.02)
+        q = MicroBatchQueue(stub, max_batch=64, max_wait_ms=1.0)
+        tickets = [q.submit(np.zeros(3, np.float32), block=True)
+                   for _ in range(40)]
+        for t in tickets:
+            t.get(timeout=10.0)
+        q.close()
+        assert q.batches_served < 40
+        assert max(stub.batch_sizes) > 1
+
+    def test_max_batch_bounds_coalescing(self):
+        gate = threading.Event()
+        q = MicroBatchQueue(_StubRunner(gate=gate), max_batch=4,
+                            max_wait_ms=1.0)
+        tickets = [q.submit(np.zeros(2, np.float32), block=True)
+                   for _ in range(9)]
+        gate.set()
+        for t in tickets:
+            t.get(timeout=10.0)
+        q.close()
+        assert q.batches_served >= 3          # 9 rows / max_batch 4
+
+    def test_backpressure_surfaces_at_the_edge(self):
+        gate = threading.Event()
+        q = MicroBatchQueue(_StubRunner(gate=gate), max_batch=1,
+                            max_wait_ms=0.5, max_pending=2)
+        held = [q.submit(np.zeros(2, np.float32), block=True)]
+        time.sleep(0.05)                      # worker blocks on gate
+        for _ in range(2):
+            held.append(q.submit(np.zeros(2, np.float32)))
+        with pytest.raises(Backpressure):
+            while True:                       # queue drain is racy by a
+                held.append(                  # slot; the cap is 2 + the
+                    q.submit(np.zeros(2, np.float32)))  # in-flight head
+        gate.set()
+        for t in held:
+            t.get(timeout=10.0)
+        q.close()
+
+    def test_errors_propagate_to_every_ticket(self):
+        q = MicroBatchQueue(_StubRunner(fail=True), max_batch=4,
+                            max_wait_ms=1.0)
+        t = q.submit(np.zeros(2, np.float32), block=True)
+        with pytest.raises(RuntimeError, match="exploded"):
+            t.get(timeout=10.0)
+        q.close()
+
+    def test_close_drains_submitted_requests(self):
+        gate = threading.Event()
+        q = MicroBatchQueue(_StubRunner(gate=gate), max_batch=4,
+                            max_wait_ms=0.5)
+        tickets = [q.submit(np.zeros(2, np.float32), block=True)
+                   for _ in range(7)]
+        gate.set()
+        q.close()
+        for t in tickets:
+            assert t.get(timeout=0.1) == 0.0
+        with pytest.raises(RuntimeError, match="closed"):
+            q.submit(np.zeros(2, np.float32))
+
+    def test_compiled_end_to_end_with_registry_version(self):
+        """Full path: registry source, compiled runner — results match
+        the direct forward and tickets carry the serving version."""
+        wl, X, state = _trained("linreg")
+        reg = ModelRegistry(wl, state)
+        reg.publish(state, version=3)
+        q = MicroBatchQueue(reg, max_batch=8, max_wait_ms=1.0)
+        tickets = [q.submit(X[i]) for i in range(6)]
+        got = np.asarray([t.get(timeout=30.0) for t in tickets])
+        q.close()
+        np.testing.assert_allclose(
+            got, np.asarray(linreg_predict(state, X[:6])), rtol=1e-6)
+        assert all(t.version == 3 for t in tickets)
+
+
+class TestModelRegistry:
+    def _save(self, tmp_path, step, state, *, wrap=False):
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        tree = {"model": state, "merge_error": jnp.zeros(2)} if wrap \
+            else state
+        mgr.save(step, tree, extra={"step": step})
+        return mgr
+
+    def test_publish_and_current_snapshot(self):
+        wl, X, state = _trained("linreg")
+        reg = ModelRegistry(wl, state)
+        with pytest.raises(RuntimeError, match="no published"):
+            reg.current()
+        reg.publish(state, version=0)
+        version, runner = reg.current()
+        assert version == 0 and reg.version == 0
+        np.testing.assert_allclose(
+            np.asarray(runner.predict(X[:4])),
+            np.asarray(linreg_predict(state, X[:4])), rtol=1e-6)
+
+    def test_hot_swap_reuses_compiled_buckets(self):
+        """Same-shaped new version on a shared grid: zero recompiles
+        (the state is an argument of the cached executables)."""
+        grid = make_cpu_grid(4)
+        wl, X, state = _trained("linreg")
+        reg = ModelRegistry(wl, state, grid=grid)
+        r0 = reg.publish(state, version=0)
+        r0.warmup(D)
+        old = reg.current()
+        r1 = reg.publish(jax.tree.map(lambda l: l * 2, state), version=1)
+        r1.warmup(D)
+        assert r1.compile_misses == 0
+        assert reg.version == 1
+        # the superseded snapshot keeps serving (no in-flight drop)
+        np.testing.assert_allclose(
+            np.asarray(old[1].predict(X[:4])),
+            np.asarray(linreg_predict(state, X[:4])), rtol=1e-6)
+
+    def test_load_v1_bare_layout(self, tmp_path):
+        wl, X, state = _trained("linreg")
+        self._save(tmp_path, 5, state)
+        reg = ModelRegistry(wl, jnp.zeros_like(state),
+                            ckpt_dir=str(tmp_path))
+        assert reg.refresh() == 5
+        _, runner = reg.current()
+        np.testing.assert_array_equal(np.asarray(runner.state),
+                                      np.asarray(state))
+
+    def test_load_v2_model_subtree_layout(self, tmp_path):
+        """The Trainer's {"model": ..., "merge_*": ...} wrapping: the
+        model subtree is selected by manifest name."""
+        wl, X, state = _trained("linreg")
+        self._save(tmp_path, 9, state, wrap=True)
+        reg = ModelRegistry(wl, jnp.zeros_like(state),
+                            ckpt_dir=str(tmp_path))
+        assert reg.refresh() == 9
+        _, runner = reg.current()
+        np.testing.assert_array_equal(np.asarray(runner.state),
+                                      np.asarray(state))
+
+    def test_refresh_skips_corrupt_newest(self, tmp_path):
+        """sha256 validation: a tampered newest checkpoint is skipped
+        and the newest VALID step is published instead — the restore
+        path's trust model, inherited."""
+        wl, X, state = _trained("linreg")
+        mgr = self._save(tmp_path, 2, state)
+        mgr.save(4, state + 1.0, extra={"step": 4})
+        with open(os.path.join(mgr._step_path(4), "arrays.npz"),
+                  "r+b") as f:
+            f.seek(30)
+            f.write(b"\xff\xff\xff\xff")
+        reg = ModelRegistry(wl, jnp.zeros_like(state),
+                            ckpt_dir=str(tmp_path))
+        assert reg.refresh() == 2
+        np.testing.assert_array_equal(
+            np.asarray(reg.current()[1].state), np.asarray(state))
+
+    def test_refresh_without_newer_keeps_current(self, tmp_path):
+        wl, X, state = _trained("linreg")
+        self._save(tmp_path, 3, state)
+        reg = ModelRegistry(wl, jnp.zeros_like(state),
+                            ckpt_dir=str(tmp_path))
+        assert reg.refresh() == 3
+        assert reg.refresh() == 3             # nothing newer: unchanged
+        assert reg.version == 3
+
+    def test_mismatched_layout_refused(self, tmp_path):
+        wl, X, state = _trained("linreg")
+        mgr = CheckpointManager(str(tmp_path), async_save=False)
+        mgr.save(1, {"something_else": jnp.zeros(3)})
+        reg = ModelRegistry(wl, jnp.zeros_like(state),
+                            ckpt_dir=str(tmp_path))
+        with pytest.raises(ValueError, match="neither"):
+            reg.load_step(1)
+
+    def test_no_ckpt_dir_refuses_refresh(self):
+        wl, _, state = _trained("linreg")
+        reg = ModelRegistry(wl, state)
+        with pytest.raises(RuntimeError, match="ckpt_dir"):
+            reg.refresh()

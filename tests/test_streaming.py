@@ -237,3 +237,74 @@ class TestTrainerStreaming:
         tr.run(8)
         ref = self._program().fit(steps=8)
         assert _trees_equal(tr.state, ref.state)
+
+
+MULTI = len(jax.devices()) >= 8
+multidevice = pytest.mark.skipif(
+    not MULTI,
+    reason="needs XLA_FLAGS=--xla_force_host_platform_device_count=8")
+
+
+@multidevice
+class TestMeshStreaming:
+    """Out-of-core rotation under the shard_map mesh engine (the
+    tier-1-multidevice job): streaming windows place onto the mesh's
+    data sharding and the per-window fits cross real device boundaries,
+    so the bit-exactness and no-retrace contracts must hold there too —
+    not just on the emulated vmap grid."""
+
+    def _mesh_grid(self):
+        from repro.core.pim import make_mesh_grid
+        return make_mesh_grid(16, pods=2)
+
+    @pytest.mark.parametrize("precision", ["fp32", "int8"])
+    def test_mesh_rotation_matches_mesh_resident(self, precision):
+        """Same grid on both sides: a mesh streaming fit is bit-for-bit
+        the mesh resident minibatch fit (the sampler's schedule lifted
+        to the host survives the shard_map path, quantized staging
+        included)."""
+        X, y, Xn, yn = _data()
+        grid = self._mesh_grid()
+        wl = LinReg(lr=0.05, precision=precision)
+        sd = StreamingDataset(Xn, yn, partition_rows=96,
+                              steps_per_window=1, seed=3)
+        part = wl.bind_stream(grid, sd).data.part
+        rs = api.fit(wl, grid, sd, steps=12)
+        rr = api.fit(wl, grid, X, y, steps=12, batch_size=part,
+                     sample_seed=3)
+        assert _trees_equal(rs.state, rr.state)
+        assert _histories_equal(rs.history, rr.history)
+
+    def test_mesh_streaming_tracks_vmap_streaming(self):
+        """Mesh vs emulated grid on the same stream: exact wires differ
+        only by psum association order, so the streamed trajectories
+        track within float tolerance."""
+        _, _, Xn, yn = _data()
+        wl = LinReg(lr=0.05)
+
+        def run(grid):
+            sd = StreamingDataset(Xn, yn, partition_rows=96,
+                                  steps_per_window=1, seed=3)
+            return api.fit(wl, grid, sd, steps=12)
+
+        rm = run(self._mesh_grid())
+        rv = run(make_cpu_grid(16))
+        np.testing.assert_allclose(np.asarray(rm.state),
+                                   np.asarray(rv.state), atol=1e-6)
+
+    def test_mesh_no_retrace_across_windows(self):
+        """Window swaps reuse the compiled shard_map runner — the mesh
+        grid's fit cache must not grow with the window count."""
+        _, _, Xn, yn = _data()
+        grid = self._mesh_grid()
+        wl = LinReg(lr=0.05)
+
+        def run(steps):
+            sd = StreamingDataset(Xn, yn, partition_rows=120,
+                                  steps_per_window=2, seed=0)
+            api.fit(wl, grid, sd, steps=steps)
+
+        run(4)
+        before = len(grid._fit_cache)
+        run(16)
+        assert len(grid._fit_cache) == before

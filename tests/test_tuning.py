@@ -14,9 +14,10 @@ from repro.core.mlalgos import (make_linreg_step, train_linreg,
                                 train_multinomial, train_svm)
 from repro.distributed import merge_plan as mp
 from repro.distributed.compression import CompressionConfig
-from repro.tuning import (AutoTune, CostModel, Measurement,
+from repro.tuning import (AutoTune, CostModel, Measurement, PlanChoice,
                           PlanController, auto_plan, cadence_ladder,
-                          candidate_choices, compression_tag)
+                          candidate_choices, choice_tag,
+                          compression_tag)
 
 KEY = jax.random.PRNGKey(0)
 
@@ -130,7 +131,7 @@ _TOPK = CompressionConfig(bits=8, top_k_frac=0.25)
 
 
 def _m(tag_cfg, us, *, warmup=False, delta=None):
-    return Measurement(key=("plan", 1, compression_tag(tag_cfg), False),
+    return Measurement(key=("plan", 1, choice_tag(tag_cfg), False),
                        seconds=us * 1e-6, steps=1, warmup=warmup,
                        delta_norm=delta)
 
@@ -143,7 +144,7 @@ class TestDecidePolicy:
         ctl = PlanController(k0=1, k_max=8, choices=self.CHOICES,
                              prior=prior, explore_rounds=0)
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "int8"
+        assert choice_tag(choice) == "int8"
         assert not ctl._explored
 
     def test_exploration_probes_in_cost_order_then_exploits(self):
@@ -155,16 +156,16 @@ class TestDecidePolicy:
         # compile) then one scored round to retire it
         for _ in range(len(self.CHOICES)):
             _, choice = ctl.decide()
-            probed.append(compression_tag(choice))
+            probed.append(choice_tag(choice))
             ctl.observe_round(_m(choice, 100.0, warmup=True), choice)
             # measured ordering disagrees with the prior: exact is the
             # actual winner on this host
             us = {"exact": 5.0, "int8": 50.0, "top0.25@int8": 40.0}
-            ctl.observe_round(_m(choice, us[compression_tag(choice)]),
+            ctl.observe_round(_m(choice, us[choice_tag(choice)]),
                               choice)
         assert probed == ["int8", "top0.25@int8", "exact"]  # prior order
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "exact"           # measured won
+        assert choice_tag(choice) == "exact"           # measured won
         assert ctl.settled() is False                       # k can grow
 
     def test_warmup_rounds_do_not_score_or_retire_probes(self):
@@ -174,7 +175,7 @@ class TestDecidePolicy:
         ctl.observe_round(_m(choice, 999.0, warmup=True), choice)
         assert ctl.measured == {}
         _, again = ctl.decide()
-        assert compression_tag(again) == compression_tag(choice)
+        assert choice_tag(again) == choice_tag(choice)
 
     def test_decide_never_ranks_across_scales(self):
         """After exploration, only the measured table is consulted —
@@ -188,12 +189,12 @@ class TestDecidePolicy:
         ctl.observe_round(_m(_INT8, 7.0), _INT8)
         ctl._pending = []
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "int8"
+        assert choice_tag(choice) == "int8"
 
     def test_single_choice_short_circuits(self):
         ctl = PlanController(k0=1, k_max=8, choices=(_INT8,))
         k, choice = ctl.decide()
-        assert (k, compression_tag(choice)) == (1, "int8")
+        assert (k, choice_tag(choice)) == (1, "int8")
         assert ctl._pending == []              # nothing to explore
 
     def test_best_measured_time_is_kept(self):
@@ -214,7 +215,7 @@ class TestDecidePolicy:
                              prior=prior, explore_rounds=0,
                              prior_margin=0.05)
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "exact"
+        assert choice_tag(choice) == "exact"
 
     def test_prior_margin_switches_on_decisive_win(self):
         prior = {"exact": 100.0, "int8": 60.0, "top0.25@int8": 90.0}
@@ -222,7 +223,7 @@ class TestDecidePolicy:
                              prior=prior, explore_rounds=0,
                              prior_margin=0.05)
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "int8"
+        assert choice_tag(choice) == "int8"
 
     def test_prior_margin_never_applies_to_measured(self):
         """The margin guards the modeled prior only — once real round
@@ -234,7 +235,7 @@ class TestDecidePolicy:
         ctl.observe_round(_m(_INT8, 99.9), _INT8)
         ctl._pending = []
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "int8"
+        assert choice_tag(choice) == "int8"
 
     def test_prior_margin_zero_recovers_bare_argmin(self):
         prior = {"exact": 100.0, "int8": 99.9, "top0.25@int8": 99.95}
@@ -242,7 +243,89 @@ class TestDecidePolicy:
                              prior=prior, explore_rounds=0,
                              prior_margin=0.0)
         _, choice = ctl.decide()
-        assert compression_tag(choice) == "int8"
+        assert choice_tag(choice) == "int8"
+
+
+class TestOverlapAxis:
+    """The overlap candidate axis: every wire format is offered with
+    and without the deferred-commit pipeline, overlap variants are
+    probed like any other candidate, and only measured evidence (never
+    the single-chip prior, which models no win) can promote one."""
+
+    OV = (PlanChoice(None), PlanChoice(None, True),
+          PlanChoice(_INT8), PlanChoice(_INT8, True))
+
+    def test_choice_tags(self):
+        assert choice_tag(PlanChoice(None)) == "exact"
+        assert choice_tag(PlanChoice(None, True)) == "exact+ov"
+        assert choice_tag(PlanChoice(_INT8, True)) == "int8+ov"
+        assert choice_tag(PlanChoice(_TOPK)) == "top0.25@int8"
+        # legacy bare configs normalize to overlap-off
+        assert choice_tag(None) == "exact"
+        assert choice_tag(_INT8) == "int8"
+
+    def test_overlap_variants_probe_separately(self):
+        """Each overlap variant is its own exploration probe with its
+        own measured slot — never folded into its non-overlap twin."""
+        prior = {"exact": 10.0, "exact+ov": 20.0,
+                 "int8": 30.0, "int8+ov": 40.0}
+        ctl = PlanController(k0=1, k_max=8, choices=self.OV,
+                             prior=prior, explore_rounds=1)
+        probed = []
+        for _ in range(len(self.OV)):
+            _, choice = ctl.decide()
+            probed.append(choice_tag(choice))
+            ctl.observe_round(_m(choice, 100.0, warmup=True), choice)
+            us = {"exact": 50.0, "exact+ov": 5.0,
+                  "int8": 60.0, "int8+ov": 70.0}
+            ctl.observe_round(_m(choice, us[choice_tag(choice)]),
+                              choice)
+        assert probed == ["exact", "exact+ov", "int8", "int8+ov"]
+        assert set(ctl.measured) == set(us)
+
+    def test_measured_evidence_promotes_overlap(self):
+        """After exploration the measured argmin may be an overlap
+        variant — wall-clock evidence wins."""
+        ctl = PlanController(k0=1, k_max=8, choices=self.OV,
+                             explore_rounds=1)
+        ctl.observe_round(_m(PlanChoice(None), 50.0), PlanChoice(None))
+        ctl.observe_round(_m(PlanChoice(None, True), 5.0),
+                          PlanChoice(None, True))
+        ctl._pending = []
+        _, choice = ctl.decide()
+        assert choice == PlanChoice(None, True)
+        assert choice.overlap is True
+
+    def test_prior_tie_never_proposes_overlap(self):
+        """On a single-chip grid the prior ties overlap with its twin
+        (CostModel models no win there): an unexplored fit must stay on
+        the plain exact wire, not drift onto the pipeline on a tie."""
+        prior = {"exact": 100.0, "exact+ov": 100.0,
+                 "int8": 99.9, "int8+ov": 99.9}
+        ctl = PlanController(k0=1, k_max=8, choices=self.OV,
+                             prior=prior, explore_rounds=0,
+                             prior_margin=0.05)
+        _, choice = ctl.decide()
+        assert choice == PlanChoice(None, False)
+
+    def test_prior_decisive_overlap_win_switches(self):
+        """A real modeled win past the margin (a multi-chip grid where
+        overlap hides DCN time) may pick the overlap variant from the
+        prior alone."""
+        prior = {"exact": 100.0, "exact+ov": 60.0,
+                 "int8": 95.0, "int8+ov": 90.0}
+        ctl = PlanController(k0=1, k_max=8, choices=self.OV,
+                             prior=prior, explore_rounds=0,
+                             prior_margin=0.05)
+        _, choice = ctl.decide()
+        assert choice == PlanChoice(None, True)
+
+    def test_chosen_records_overlap(self):
+        ctl = PlanController(k0=1, k_max=8,
+                             choices=(PlanChoice(None, True),))
+        ctl.decide()
+        assert ctl.chosen() == {"cadence": 1, "compression": "exact+ov",
+                                "overlap": True}
 
 
 class TestLaddersAndChoices:
@@ -253,16 +336,20 @@ class TestLaddersAndChoices:
 
     def test_candidate_choices_auto_unpinned(self):
         choices = candidate_choices(AutoTune(), None)
-        tags = [compression_tag(c) for c in choices]
-        assert tags == ["exact", "int8", "top0.25@int8", "top0.125@int8"]
+        tags = [choice_tag(c) for c in choices]
+        assert tags == ["exact", "exact+ov", "int8", "int8+ov",
+                        "top0.25@int8", "top0.25@int8+ov",
+                        "top0.125@int8", "top0.125@int8+ov"]
 
     def test_candidate_choices_pinned_compression(self):
+        """Pinning the wire collapses the whole grid — including the
+        overlap axis — to one overlap-off choice."""
         choices = candidate_choices(AutoTune(), _INT8)
-        assert choices == [_INT8]
+        assert choices == [PlanChoice(_INT8)]
 
     def test_candidate_choices_non_auto_preset(self):
         choices = candidate_choices(mp.AdaptiveCadence(), None)
-        assert choices == [None]
+        assert choices == [PlanChoice(None)]
 
     def test_autotune_preset_validation(self):
         with pytest.raises(ValueError):
@@ -346,6 +433,22 @@ class TestCostModel:
         assert {(r["cadence"], r["compression"]) for r in rows} == \
             {(1, "exact"), (1, "int8"), (4, "exact"), (4, "int8")}
 
+    def test_single_chip_prior_models_no_overlap_win(self, linreg_setup):
+        """On the emulated (single-chip) grid there is no second
+        execution stream: overlap=True must predict exactly the
+        non-overlap time (only a measured probe can promote it), while
+        still being tagged as the overlap variant."""
+        grid, data, lf, uf, w0 = linreg_setup
+        model = CostModel.for_fit(grid, lf, uf, w0, data)
+        plain = model.predict(cadence=2)
+        ov = model.predict(cadence=2, overlap=True)
+        assert ov["overlap"] is True and plain["overlap"] is False
+        assert ov["us_per_step"] == pytest.approx(plain["us_per_step"])
+        rows = model.table(cadences=(1, 2), compressions=(None,),
+                          overlaps=(False, True))
+        assert len(rows) == 4
+        assert {r["overlap"] for r in rows} == {False, True}
+
     def test_model_cached_on_grid(self, linreg_setup):
         grid, data, lf, uf, w0 = linreg_setup
         m1 = CostModel.for_fit(grid, lf, uf, w0, data)
@@ -386,18 +489,23 @@ class TestAutoFit:
             float(np.mean(np.asarray(res.history[0]["loss"])))
         trace = ms["tuning_trace"]
         assert set(trace) == _TRACE_KEYS
-        assert trace["choices"] == ["exact", "int8", "top0.25@int8"]
+        assert trace["choices"] == ["exact", "exact+ov",
+                                    "int8", "int8+ov",
+                                    "top0.25@int8", "top0.25@int8+ov"]
         assert trace["chosen"]["compression"] in trace["choices"]
         assert 1 <= trace["chosen"]["cadence"] <= 4
         # every decision row is replayable: full bookkeeping present
         for row in trace["decisions"]:
             assert {"round", "steps_done", "cadence", "compression",
-                    "warmup", "us_per_step", "delta_norm",
+                    "overlap", "warmup", "us_per_step", "delta_norm",
                     "rounds_in_dispatch",
                     "predicted_us_per_step"} <= set(row)
         assert trace["decisions"][-1]["steps_done"] == 40
-        # the cost table ranks the full candidate ladder
-        assert len(trace["cost_table"]) == 3 * len(
+        # exploration visited the overlap variants (the probe rounds
+        # drive the deferred-commit dispatch path end to end)
+        assert any(d["overlap"] for d in trace["decisions"])
+        # the cost table ranks wires x overlap x the cadence ladder
+        assert len(trace["cost_table"]) == 3 * 2 * len(
             cadence_ladder(1, 4, 2))
 
     def test_auto_string_spelling_via_train(self):

@@ -57,9 +57,17 @@ size), an **overlap-floor** gate (every cell at ``prefetch_depth >=
 config.overlap_floor_depth`` must report
 ``ingest_overlap_fraction >= config.overlap_floor`` — the acceptance
 criterion that prefetch actually hides ingest), and the regression
-check on ``steps_per_s`` when configs are comparable.  Families never
-cross-compare: a streaming artifact diffed against a scaling artifact
-is a schema mismatch.
+check on ``steps_per_s`` when configs are comparable.
+``bench_serving/*`` artifacts (benchmarks/bench_serving.py) complete
+over ``serve_workloads`` x ``serve_precisions`` x ``serve_loads``
+(plus one ``saturation`` cell per workload x precision), gate
+**zero steady-state compile misses** (any cell reporting a nonzero
+``steady_compile_misses`` fails — the bucket ladder stopped closing
+the shape set), and invert the regression direction: p99 latency is
+the metric, so fresh must not *exceed* ``max_regression`` x committed
+(saturation ``rows_per_s`` keeps the usual lower-bound check).
+Families never cross-compare: a streaming artifact diffed against a
+scaling artifact is a schema mismatch.
 
 Usage::
 
@@ -269,6 +277,108 @@ def diff_streaming(fresh: dict, committed: dict, *,
     return findings
 
 
+# ---------------------------------------------------------------------------
+# bench_serving family
+# ---------------------------------------------------------------------------
+
+def expected_serving_keys(config: dict):
+    """The (workload, precision, offered_rps) latency cells a
+    bench_serving config promises — judged against the artifact's OWN
+    config, like the other families' axes."""
+    return {(wl, prec, load)
+            for wl in config.get("serve_workloads", [])
+            for prec in config.get("serve_precisions", [])
+            for load in config.get("serve_loads", [])}
+
+
+def expected_saturation_keys(config: dict):
+    """One queue-free run_stream ceiling cell per workload x precision."""
+    return {(wl, prec)
+            for wl in config.get("serve_workloads", [])
+            for prec in config.get("serve_precisions", [])}
+
+
+def comparable_serving(fresh_cfg: dict, committed_cfg: dict) -> bool:
+    """Latency percentiles are only meaningful at equal problem size,
+    request volume, and coalescing policy."""
+    return all(fresh_cfg.get(k) == committed_cfg.get(k)
+               for k in ("backend", "n_devices", "smoke", "rows",
+                         "features", "n_vdpus", "requests",
+                         "max_batch", "max_wait_ms"))
+
+
+def diff_serving(fresh: dict, committed: dict, *,
+                 max_regression: float = 2.0) -> list:
+    """bench_serving/* checks: completeness + zero-steady-miss gate +
+    p99-latency / saturation-throughput regression (see docstring)."""
+    findings = _schema_findings(fresh, committed)
+    cfg = fresh.get("config", {})
+
+    s_cells = {(c.get("workload"), c.get("precision"),
+                c.get("offered_rps")): c
+               for c in fresh.get("serving", [])}
+    for key in sorted(expected_serving_keys(cfg) - set(s_cells),
+                      key=str):
+        findings.append(
+            "missing serving cell (workload={}, precision={}, "
+            "offered_rps={})".format(*key))
+
+    sat_cells = {(c.get("workload"), c.get("precision")): c
+                 for c in fresh.get("saturation", [])}
+    for key in sorted(expected_saturation_keys(cfg) - set(sat_cells),
+                      key=str):
+        findings.append(
+            "missing saturation cell (workload={}, "
+            "precision={})".format(*key))
+
+    # the warm-cache gate: steady-state traffic must never compile —
+    # a nonzero count means the bucket ladder stopped closing the
+    # request shape set (the serving analogue of a retrace bug)
+    for key, cell in sorted(list(s_cells.items()) +
+                            list(sat_cells.items()), key=str):
+        misses = cell.get("steady_compile_misses", 0)
+        if misses:
+            findings.append(
+                "steady-state compile misses ({}) in cell {}".format(
+                    misses, key))
+
+    if not comparable_serving(cfg, committed.get("config", {})):
+        print("bench_diff: configs not comparable (different request "
+              "volume/problem size) — regression check skipped",
+              flush=True)
+        return findings
+
+    # latency regression: LOWER is better, so the direction inverts
+    # relative to the throughput families
+    c_cells = {(c.get("workload"), c.get("precision"),
+                c.get("offered_rps")): c
+               for c in committed.get("serving", [])}
+    for key in sorted(set(s_cells) & set(c_cells), key=str):
+        fresh_p99 = s_cells[key].get("p99_ms", 0.0)
+        committed_p99 = c_cells[key].get("p99_ms", 0.0)
+        if committed_p99 > 0 and \
+                fresh_p99 > committed_p99 * max_regression:
+            findings.append(
+                "p99 latency regression >{:.1f}x at (workload={}, "
+                "precision={}, offered_rps={}): {:.2f} -> {:.2f} "
+                "ms".format(max_regression, *key, committed_p99,
+                            fresh_p99))
+
+    c_sat = {(c.get("workload"), c.get("precision")): c
+             for c in committed.get("saturation", [])}
+    for key in sorted(set(sat_cells) & set(c_sat), key=str):
+        fresh_rps = sat_cells[key].get("rows_per_s", 0.0)
+        committed_rps = c_sat[key].get("rows_per_s", 0.0)
+        if committed_rps > 0 and \
+                fresh_rps * max_regression < committed_rps:
+            findings.append(
+                "saturation throughput regression >{:.1f}x at "
+                "(workload={}, precision={}): {:.1f} -> {:.1f} "
+                "rows/s".format(max_regression, *key, committed_rps,
+                                fresh_rps))
+    return findings
+
+
 def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
          ) -> list:
     """Returns a list of human-readable findings (empty = pass).
@@ -277,6 +387,9 @@ def diff(fresh: dict, committed: dict, *, max_regression: float = 2.0
     if f_ver is not None and f_ver[0] == "bench_streaming":
         return diff_streaming(fresh, committed,
                               max_regression=max_regression)
+    if f_ver is not None and f_ver[0] == "bench_serving":
+        return diff_serving(fresh, committed,
+                            max_regression=max_regression)
     findings = _schema_findings(fresh, committed)
 
     f_cells = {_cell_key(c): c for c in fresh.get("throughput", [])}
@@ -350,7 +463,8 @@ def main(argv=None) -> int:
             print(f"bench_diff: FAIL {item}", flush=True)
         return 1
     n = len(fresh.get("throughput", []) or
-            fresh.get("streaming", []))
+            fresh.get("streaming", []) or
+            fresh.get("serving", []))
     print(f"bench_diff: OK ({n} cells checked)", flush=True)
     return 0
 
